@@ -1,0 +1,56 @@
+"""RQ1 (paper Fig. 4 / §5.2): how much does FaaSLight shrink the artifact?
+
+Size  := deployment package bytes (before / after1 / after2 cold-resident)
+FC    := number of eager-loaded leaves (the paper's function count)
+LoC   := eager-loaded parameter count (the paper's executable-line count)
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import BENCH_ARCHS, artifact_bytes, csv_row, setup_app
+
+
+def run(base_dir: str, archs=BENCH_ARCHS) -> list[dict]:
+    rows = []
+    for arch in archs:
+        app = setup_app(arch, base_dir)
+        plan = app.result.plan
+        before = artifact_bytes(app, "before")
+        after1 = artifact_bytes(app, "after1")
+        after2_pkg = artifact_bytes(app, "after2")
+        cold = plan.cold_resident_bytes
+        n_leaves = len(plan.decisions)
+        n_tier0 = sum(1 for d in plan.decisions.values() if d.tier == 0)
+        rows.append(
+            {
+                "arch": arch,
+                "before_bytes": before,
+                "after1_bytes": after1,
+                "after2_pkg_bytes": after2_pkg,
+                "cold_resident_bytes": cold,
+                "size_after1_pct": 100.0 * after1 / before,
+                "size_after2_pct": 100.0 * after2_pkg / before,
+                "cold_resident_pct": 100.0 * cold / before,
+                "fc_before": n_leaves,
+                "fc_after2": n_tier0,
+                "fc_reduction_pct": 100.0 * (1 - n_tier0 / n_leaves),
+                "tier0_fraction": plan.tier0_fraction,
+            }
+        )
+    return rows
+
+
+def main(base_dir: str) -> list[str]:
+    out = []
+    rows = run(base_dir)
+    for r in rows:
+        out.append(csv_row(
+            f"rq1_size/{r['arch']}",
+            0.0,
+            f"after1={r['size_after1_pct']:.1f}%|after2_pkg={r['size_after2_pct']:.1f}%"
+            f"|cold_resident={r['cold_resident_pct']:.1f}%|fc_cut={r['fc_reduction_pct']:.1f}%",
+        ))
+    avg1 = sum(r["size_after1_pct"] for r in rows) / len(rows)
+    avg2 = sum(r["cold_resident_pct"] for r in rows) / len(rows)
+    out.append(csv_row("rq1_size/mean", 0.0, f"after1={avg1:.1f}%|cold_resident={avg2:.1f}%"))
+    return out

@@ -1,0 +1,69 @@
+"""RQ2 (paper Table 2 / Figs. 5-8): cold-start speedup.
+
+Measures real wall-clock cold starts on the container — disk read (the
+preparation phase), host→device upload + placeholder allocation and warm-set
+XLA compilation (the loading phase) — for before/after1/after2, n runs
+each, with the paper's Mann-Whitney U + Cohen's d reporting.
+"""
+
+from __future__ import annotations
+
+import gc
+
+from benchmarks.common import BENCH_ARCHS, csv_row, setup_app, timed_cold_start
+from repro.utils.stats import compare
+
+
+def run(base_dir: str, archs=BENCH_ARCHS, n_runs: int = 5, compile_warm: bool = True) -> list[dict]:
+    rows = []
+    for arch in archs:
+        app = setup_app(arch, base_dir)
+        samples: dict[str, dict[str, list[float]]] = {}
+        for mode in ("before", "after1", "after2"):
+            rec = {"read_s": [], "upload_s": [], "compile_s": [], "total_s": []}
+            for _ in range(n_runs):
+                # fresh jit cache per run: cold compile is part of the cost
+                import jax
+
+                jax.clear_caches()
+                gc.collect()
+                server = timed_cold_start(app, mode, compile_warm=compile_warm)
+                r = server.report
+                rec["read_s"].append(r.read_s)
+                rec["upload_s"].append(r.upload_s)
+                rec["compile_s"].append(r.compile_s)
+                rec["total_s"].append(r.total_s)
+            samples[mode] = rec
+        cmp_total = compare(f"{arch}/total", samples["before"]["total_s"], samples["after2"]["total_s"])
+        cmp_load = compare(f"{arch}/load", samples["before"]["upload_s"], samples["after2"]["upload_s"])
+        cmp_read = compare(f"{arch}/read", samples["before"]["read_s"], samples["after2"]["read_s"])
+        rows.append(
+            {
+                "arch": arch,
+                "samples": samples,
+                "total_before_ms": cmp_total.before_mean * 1e3,
+                "total_after2_ms": cmp_total.after_mean * 1e3,
+                "total_reduction_pct": cmp_total.reduction_pct,
+                "read_reduction_pct": cmp_read.reduction_pct,
+                "p_value": cmp_total.p_value,
+                "effect": cmp_total.effect_size,
+                "effect_label": cmp_total.effect_label,
+            }
+        )
+    return rows
+
+
+def main(base_dir: str, n_runs: int = 5) -> list[str]:
+    out = []
+    rows = run(base_dir, n_runs=n_runs)
+    for r in rows:
+        out.append(csv_row(
+            f"rq2_cold/{r['arch']}",
+            r["total_after2_ms"] * 1e3,
+            f"before={r['total_before_ms']:.0f}ms|after2={r['total_after2_ms']:.0f}ms"
+            f"|cut={r['total_reduction_pct']:.1f}%|read_cut={r['read_reduction_pct']:.1f}%"
+            f"|p={r['p_value']:.4f}|d={r['effect']:.2f}({r['effect_label']})",
+        ))
+    mean_cut = sum(r["total_reduction_pct"] for r in rows) / len(rows)
+    out.append(csv_row("rq2_cold/mean", 0.0, f"total_cut={mean_cut:.1f}%"))
+    return out

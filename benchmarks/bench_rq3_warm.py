@@ -1,0 +1,67 @@
+"""RQ3 (paper §5.4): warm-start neutrality + memory benefit.
+
+Once the server is resident, tiered serving must not be slower than full
+serving (the on-demand machinery is off the warm path), and the resident
+parameter bytes are strictly smaller.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_ARCHS, csv_row, request_tokens, setup_app, timed_cold_start
+from repro.serving import GenerationEngine
+from repro.utils.stats import compare
+
+
+def _warm_latencies(engine, toks, n_runs: int, steps: int = 4) -> list[float]:
+    engine.generate(toks, steps)  # warm everything (faults + compiles)
+    out = []
+    for _ in range(n_runs):
+        t0 = time.perf_counter()
+        engine.generate(toks, steps)
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def run(base_dir: str, archs=BENCH_ARCHS[:4], n_runs: int = 5) -> list[dict]:
+    rows = []
+    for arch in archs:
+        app = setup_app(arch, base_dir)
+        toks = request_tokens(app)
+        s_full = timed_cold_start(app, "before")
+        s_tier = timed_cold_start(app, "after2")
+        lat_full = _warm_latencies(GenerationEngine(s_full, max_seq=32), toks, n_runs)
+        lat_tier = _warm_latencies(GenerationEngine(s_tier, max_seq=32), toks, n_runs)
+        cmp = compare(f"{arch}/warm", lat_full, lat_tier)
+        # memory analogue: device-resident param bytes
+        full_bytes = app.result.plan.total_bytes
+        tier = s_tier.tiered
+        resident = app.result.plan.cold_resident_bytes + tier.stats.total_miss_bytes
+        rows.append(
+            {
+                "arch": arch,
+                "warm_full_ms": cmp.before_mean * 1e3,
+                "warm_tiered_ms": cmp.after_mean * 1e3,
+                "delta_pct": -cmp.reduction_pct,
+                "p_value": cmp.p_value,
+                "neutral": cmp.p_value >= 0.05,
+                "resident_bytes_pct": 100.0 * resident / full_bytes,
+            }
+        )
+    return rows
+
+
+def main(base_dir: str, n_runs: int = 5) -> list[str]:
+    out = []
+    for r in run(base_dir, n_runs=n_runs):
+        out.append(csv_row(
+            f"rq3_warm/{r['arch']}",
+            r["warm_tiered_ms"] * 1e3,
+            f"full={r['warm_full_ms']:.1f}ms|tiered={r['warm_tiered_ms']:.1f}ms"
+            f"|delta={r['delta_pct']:+.1f}%|p={r['p_value']:.3f}"
+            f"|neutral={r['neutral']}|resident={r['resident_bytes_pct']:.1f}%",
+        ))
+    return out

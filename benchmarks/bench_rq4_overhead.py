@@ -1,0 +1,59 @@
+"""RQ4 (paper §5.5): the on-demand loading overhead, and its one-time
+nature. Measures per-fault latency (fetch+decompress+upload), total fault
+cost of a fully-cold first request, and confirms the second request over
+the same routes pays zero."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, request_tokens, setup_app, timed_cold_start
+from repro.core import DeploymentProfile
+from repro.serving import GenerationEngine
+
+
+def run(base_dir: str, arch: str = "mixtral-8x22b") -> dict:
+    from repro.configs import get_reduced
+
+    cfg = get_reduced(arch)
+    profile = DeploymentProfile(  # strict: everything tier-1 cold
+        resident_experts=0, hot_vocab_fraction=0.0,
+        min_tier1_bytes=1 << 12, vocab_row_group=max(64, cfg.vocab_size // 16),
+    )
+    app = setup_app(arch, base_dir, profile=profile, stats=False)
+    server = timed_cold_start(app, "after2")
+    eng = GenerationEngine(server, max_seq=32)
+    toks = request_tokens(app)
+    _, st1 = eng.generate(toks, 6)
+    _, st2 = eng.generate(toks, 6)
+
+    ev = server.tiered.stats.events
+    fetch = np.array([e.fetch_s for e in ev])
+    upload = np.array([e.upload_s for e in ev])
+    return {
+        "arch": arch,
+        "faults_first": st1.faulted_units,
+        "fault_bytes_first": st1.faulted_bytes,
+        "fault_s_first": st1.fault_s,
+        "retries_first": st1.prefill_retries + st1.decode_retries,
+        "faults_second": st2.faulted_units,
+        "fault_s_second": st2.fault_s,
+        "mean_fetch_ms": float(fetch.mean() * 1e3) if len(fetch) else 0.0,
+        "mean_upload_ms": float(upload.mean() * 1e3) if len(upload) else 0.0,
+        "per_fault_ms": float((fetch + upload).mean() * 1e3) if len(ev) else 0.0,
+    }
+
+
+def main(base_dir: str) -> list[str]:
+    r = run(base_dir)
+    return [
+        csv_row(
+            f"rq4_overhead/{r['arch']}",
+            r["per_fault_ms"] * 1e3,
+            f"first_req: {r['faults_first']} faults "
+            f"({r['fault_bytes_first']/2**20:.2f}MiB, {r['fault_s_first']*1e3:.1f}ms, "
+            f"{r['retries_first']} retries)|second_req: {r['faults_second']} faults"
+            f"|per_fault={r['per_fault_ms']:.2f}ms "
+            f"(fetch {r['mean_fetch_ms']:.2f} + upload {r['mean_upload_ms']:.2f})",
+        )
+    ]

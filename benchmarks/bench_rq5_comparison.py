@@ -1,0 +1,105 @@
+"""RQ5 (paper Fig. 9 / §5.6): FaaSLight vs the Vulture baseline.
+
+Vulture finds objects that are *defined but never referenced anywhere* —
+the checkpoint analogue is a leaf referenced by NO entry of ANY deployment
+(global def-use, no per-profile reachability, no sparse-access tiers).
+The mixed method = Vulture's identification + our Code Generator
+(compressed store + on-demand backstop), as in the paper.
+
+Reported: cold-resident bytes under each method (the latency driver), plus
+measured cold starts.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_profile, csv_row, setup_app, timed_cold_start
+from repro.core import DeploymentProfile, analyze, build_artifact
+from repro.core.partition import TierDecision, TierPlan, Unit
+from repro.models.zoo import build_model
+from repro.serving import cold_start
+
+
+def vulture_plan(model, profile) -> TierPlan:
+    """Defined-but-unreferenced detection: union reachability over ALL
+    entries (every kind, every modality) — the global def-use view."""
+    from repro.core.param_graph import build_reachability
+    from repro.utils.tree import flatten_with_paths
+    import numpy as np
+
+    reach = build_reachability(model.entries(B=1, S=16), model.abstract())
+    decisions = {}
+    for path, leaf in flatten_with_paths(model.abstract()):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if reach.reaching(path):
+            decisions[path] = TierDecision(path, 0, "leaf", "referenced somewhere", nbytes)
+        else:
+            decisions[path] = TierDecision(
+                path, 1, "leaf", "never referenced", nbytes, units=(Unit(path, path),)
+            )
+    return TierPlan(decisions=decisions, profile=profile, entry_names=list(reach.entry_names))
+
+
+ARCHS = ("mixtral-8x22b", "whisper-base", "yi-34b", "llama-3.2-vision-90b")
+
+
+def run(base_dir: str, archs=ARCHS) -> list[dict]:
+    import jax
+
+    rows = []
+    for arch in archs:
+        app = setup_app(arch, base_dir)
+        total = app.result.plan.total_bytes
+
+        vplan = vulture_plan(app.model, app.result.plan.profile)
+        vult_resident = vplan.cold_resident_bytes
+        faas_resident = app.result.plan.cold_resident_bytes
+
+        # measured: vulture-tiered artifact vs faaslight artifact cold start
+        import copy
+
+        vres = copy.copy(app.result)
+        vres.plan = vplan
+        vdir = app.outdir + "_vulture"
+        build_artifact(app.params, vres, vdir)
+        jax.clear_caches()
+        s_v = cold_start(app.model, vdir, vres, mode="after2", warm_shapes=((2, 8),))
+        jax.clear_caches()
+        s_f = timed_cold_start(app, "after2")
+        jax.clear_caches()
+        s_b = timed_cold_start(app, "before")
+
+        rows.append(
+            {
+                "arch": arch,
+                "vulture_resident_pct": 100.0 * vult_resident / total,
+                "faaslight_resident_pct": 100.0 * faas_resident / total,
+                "vulture_cut_pct": 100.0 * (1 - vult_resident / total),
+                "faaslight_cut_pct": 100.0 * (1 - faas_resident / total),
+                "cold_before_ms": s_b.report.total_s * 1e3,
+                "cold_vulture_ms": s_v.report.total_s * 1e3,
+                "cold_faaslight_ms": s_f.report.total_s * 1e3,
+            }
+        )
+    return rows
+
+
+def main(base_dir: str) -> list[str]:
+    out = []
+    rows = run(base_dir)
+    for r in rows:
+        out.append(csv_row(
+            f"rq5_comparison/{r['arch']}",
+            r["cold_faaslight_ms"] * 1e3,
+            f"resident: vulture={r['vulture_resident_pct']:.1f}% "
+            f"faaslight={r['faaslight_resident_pct']:.1f}%"
+            f"|bytes_cut: vulture={r['vulture_cut_pct']:.1f}% "
+            f"faaslight={r['faaslight_cut_pct']:.1f}%"
+            f"|cold: before={r['cold_before_ms']:.0f} vult={r['cold_vulture_ms']:.0f} "
+            f"faas={r['cold_faaslight_ms']:.0f}ms",
+        ))
+    v = sum(r["vulture_cut_pct"] for r in rows) / len(rows)
+    f = sum(r["faaslight_cut_pct"] for r in rows) / len(rows)
+    ratio = f / v if v > 0 else float("inf")
+    out.append(csv_row("rq5_comparison/mean", 0.0,
+                       f"vulture_cut={v:.1f}%|faaslight_cut={f:.1f}%|improvement={ratio:.1f}x"))
+    return out

@@ -1,0 +1,114 @@
+"""Shared benchmark harness: artifact setup, timed cold starts, CSV rows.
+
+Benchmarks run the REDUCED configs (the container is CPU-only); the paper's
+relative quantities (size/latency reductions, fault accounting, statistical
+tests) are scale-free, and the full-scale story is carried by the dry-run
+roofline (benchmarks/roofline.py)."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import (
+    DeploymentProfile,
+    analyze,
+    build_artifact,
+    write_monolithic,
+)
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.models.zoo import build_model
+from repro.optim import init_adamw
+from repro.serving import GenerationEngine, cold_start
+
+# benchmark arch set: one per family + the MoE champions
+BENCH_ARCHS = (
+    "mixtral-8x22b",        # moe (paper's ideal case)
+    "deepseek-v2-lite-16b", # moe + mla
+    "yi-34b",               # dense
+    "whisper-base",         # enc-dec modal split
+    "llama-3.2-vision-90b", # vlm modal split
+    "recurrentgemma-9b",    # hybrid
+)
+
+
+def bench_profile(cfg) -> DeploymentProfile:
+    return DeploymentProfile(
+        resident_experts=1,
+        hot_vocab_fraction=0.25,
+        min_tier1_bytes=1 << 12,
+        vocab_row_group=max(64, cfg.vocab_size // 16),
+    )
+
+
+@dataclass
+class App:
+    arch: str
+    cfg: object
+    model: object
+    params: dict
+    result: object  # AnalysisResult
+    outdir: str
+
+
+_APP_CACHE: dict = {}
+
+
+def setup_app(arch: str, base_dir: str, *, profile=None, stats=True) -> App:
+    key = (arch, base_dir, profile is None)
+    if key in _APP_CACHE:
+        return _APP_CACHE[key]
+    cfg = get_reduced(arch).replace(collect_moe_usage=True)
+    model = build_model(cfg)
+    profile = profile or bench_profile(cfg)
+    hot = None
+    if stats:
+        pipe = SyntheticTokenPipeline(DataConfig(cfg.vocab_size, 64, 4, seed=11))
+        hot = pipe.vocab_row_stats(n_steps=2, row_group=profile.vocab_row_group)
+    result = analyze(model, profile, hot_units_stats=hot, trace_B=1, trace_S=16)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    outdir = os.path.join(base_dir, arch)
+    os.makedirs(outdir, exist_ok=True)
+    collections = {"params": params, "opt_state": {"m": opt.m, "v": opt.v}}
+    write_monolithic(collections, outdir)
+    write_monolithic(collections, outdir, pruned=True)
+    build_artifact(params, result, outdir)
+    app = App(arch, cfg, model, params, result, outdir)
+    _APP_CACHE[key] = app
+    return app
+
+
+def timed_cold_start(app: App, mode: str, *, warm_shape=(2, 8), compile_warm=True):
+    return cold_start(
+        app.model, app.outdir, app.result if mode == "after2" else None,
+        mode=mode, warm_shapes=(warm_shape,), compile_warm_set=compile_warm,
+    )
+
+
+def request_tokens(app: App, B: int = 2, S: int = 8):
+    return jax.random.randint(jax.random.PRNGKey(17), (B, S), 0, app.cfg.vocab_size)
+
+
+def artifact_bytes(app: App, mode: str) -> int:
+    if mode == "before":
+        return os.path.getsize(os.path.join(app.outdir, "before.bin"))
+    if mode == "after1":
+        return os.path.getsize(os.path.join(app.outdir, "after1.bin"))
+    total = 0
+    for f in ("tier0.bin", "optional.blob", "optional.blob.manifest.json", "artifact.json"):
+        p = os.path.join(app.outdir, f)
+        if os.path.exists(p):
+            total += os.path.getsize(p)
+    return total
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

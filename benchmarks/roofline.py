@@ -1,0 +1,117 @@
+"""Roofline table from the dry-run artifacts (assignment deliverable g).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
+emits per-(arch × shape × mesh):
+
+  compute term    = HLO_FLOPs / (chips × 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips × 819 GB/s)
+  collective term = per-device collective bytes / 50 GB/s per link
+
+plus dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), roofline
+fraction, and fits-in-HBM (peak device bytes vs 16 GB). FLOPs/bytes are the
+loop-aware numbers from repro.utils.hlocost (cost_analysis() counts scan
+bodies once; see §Roofline methodology in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16e9
+
+DEFAULT_DIR = "benchmarks/results/dryrun"
+
+
+def load_records(dirname: str = DEFAULT_DIR, tag: str = "") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["num_chips"]
+    compute_s = rec["hlo_flops"] / (chips * PEAK_FLOPS)
+    memory_s = rec["hlo_bytes"] / (chips * HBM_BW)
+    collective_s = rec["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    mem = rec.get("memory", {})
+    peak = mem.get("temp_size_in_bytes", 0) + max(
+        0, mem.get("argument_size_in_bytes", 0) - mem.get("alias_size_in_bytes", 0)
+    )
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": rec["model_flops"],
+        "useful_ratio": rec["model_flops"] / rec["hlo_flops"] if rec["hlo_flops"] else 0.0,
+        "roofline_fraction": (rec["model_flops"] / (chips * PEAK_FLOPS)) / bound if bound else 0.0,
+        "peak_device_bytes": peak,
+        "fits": peak <= HBM_BYTES,
+        "tag": rec.get("tag", ""),
+    }
+
+
+def table(dirname: str = DEFAULT_DIR, tag: str = "") -> list[dict]:
+    out = []
+    for rec in load_records(dirname, tag):
+        if rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                        "dominant": "SKIPPED", "reason": rec.get("reason", "")})
+            continue
+        out.append(roofline_terms(rec))
+    return out
+
+
+def format_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | dominant "
+           "| MF/HF | roofline frac | peak GiB | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["dominant"] == "SKIPPED":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | skipped | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} | {r['peak_device_bytes']/2**30:.1f} "
+            f"| {'✓' if r['fits'] else '✗'} |"
+        )
+    return "\n".join(lines)
+
+
+def main(dirname: str = DEFAULT_DIR) -> list[str]:
+    rows = table(dirname)
+    out = []
+    for r in rows:
+        if r["dominant"] == "SKIPPED":
+            out.append(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,skipped")
+            continue
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},{r['bound_s']*1e6:.1f},"
+            f"dominant={r['dominant']}|frac={r['roofline_fraction']:.2f}"
+            f"|useful={r['useful_ratio']:.2f}|fits={r['fits']}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print(format_markdown(table()))

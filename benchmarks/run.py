@@ -1,0 +1,75 @@
+"""Benchmark aggregator: one section per paper table/figure + the roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--runs N] [--out DIR]``
+
+Prints ``name,us_per_call,derived`` CSV rows (assignment contract). The
+RQ benchmarks measure the reduced configs live on CPU; the roofline section
+reads the dry-run artifacts if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--runs", type=int, default=5, help="cold-start repetitions (paper: 20)")
+    ap.add_argument("--fast", action="store_true", help="3 runs, fewer archs")
+    ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
+    ap.add_argument("--only", default="", help="comma list: rq1,rq2,rq3,rq4,rq5,rq6,roofline")
+    args = ap.parse_args(argv)
+    n_runs = 3 if args.fast else args.runs
+
+    from benchmarks import (
+        bench_rq1_size,
+        bench_rq2_cold,
+        bench_rq3_warm,
+        bench_rq4_overhead,
+        bench_rq5_comparison,
+        bench_rq6_generality,
+        roofline,
+    )
+
+    only = set(filter(None, args.only.split(",")))
+    want = lambda k: not only or k in only
+
+    scratch = args.out or tempfile.mkdtemp(prefix="faaslight_bench_")
+    os.makedirs(scratch, exist_ok=True)
+    print(f"# FaaSLight-JAX benchmarks (artifacts: {scratch}; runs={n_runs})")
+    print("name,us_per_call,derived")
+
+    sections = []
+    if want("rq1"):
+        sections.append(("rq1", lambda: bench_rq1_size.main(scratch)))
+    if want("rq2"):
+        sections.append(("rq2", lambda: bench_rq2_cold.main(scratch, n_runs=n_runs)))
+    if want("rq3"):
+        sections.append(("rq3", lambda: bench_rq3_warm.main(scratch, n_runs=n_runs)))
+    if want("rq4"):
+        sections.append(("rq4", lambda: bench_rq4_overhead.main(scratch)))
+    if want("rq5"):
+        sections.append(("rq5", lambda: bench_rq5_comparison.main(scratch)))
+    if want("rq6"):
+        sections.append(("rq6", lambda: bench_rq6_generality.main(scratch)))
+    if want("roofline"):
+        sections.append(("roofline", roofline.main))
+
+    failures = 0
+    for name, fn in sections:
+        try:
+            for row in fn():
+                print(row)
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0.0,exception", file=sys.stdout)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Before / after1 / after2 cold starts side by side (paper Table 2 in
+miniature), across three model families.
+
+    PYTHONPATH=src python examples/cold_start_comparison.py
+"""
+
+import tempfile
+
+import jax
+
+from repro.configs import get_reduced
+from repro.core import DeploymentProfile, analyze, build_artifact, write_monolithic
+from repro.models.zoo import build_model
+from repro.optim import init_adamw
+from repro.serving import cold_start
+
+for arch in ("mixtral-8x22b", "whisper-base", "yi-34b"):
+    cfg = get_reduced(arch).replace(collect_moe_usage=cfg.moe is not None if (cfg := get_reduced(arch)) else False)
+    model = build_model(cfg)
+    profile = DeploymentProfile(resident_experts=1, hot_vocab_fraction=0.25,
+                                min_tier1_bytes=1 << 12,
+                                vocab_row_group=max(64, cfg.vocab_size // 16))
+    result = analyze(model, profile)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    outdir = tempfile.mkdtemp(prefix=f"faaslight_{arch}_")
+    coll = {"params": params, "opt_state": {"m": opt.m, "v": opt.v}}
+    write_monolithic(coll, outdir)
+    write_monolithic(coll, outdir, pruned=True)
+    build_artifact(params, result, outdir)
+
+    print(f"\n=== {arch} ===")
+    base = None
+    for mode in ("before", "after1", "after2"):
+        jax.clear_caches()
+        s = cold_start(model, outdir, result if mode == "after2" else None,
+                       mode=mode, warm_shapes=((2, 8),))
+        r = s.report
+        base = base or r.total_s
+        print(f"  {mode:7s} read={r.read_s*1e3:7.1f}ms upload={r.upload_s*1e3:7.1f}ms "
+              f"compile={r.compile_s*1e3:7.1f}ms total={r.total_s*1e3:8.1f}ms "
+              f"({100*(1-r.total_s/base):+5.1f}%) bytes_read={r.bytes_read:,}")

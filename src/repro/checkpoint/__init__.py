@@ -1,0 +1,19 @@
+"""Checkpointing: atomic/async/keep-N manager over a bf16-safe raw-binary
+array bundle format with partial reads (tier-aware cold start)."""
+
+from repro.checkpoint.manager import CheckpointManager, RestoreResult
+from repro.checkpoint.tensorstore_lite import (
+    bundle_nbytes,
+    read_bundle,
+    read_index,
+    write_bundle,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "RestoreResult",
+    "write_bundle",
+    "read_bundle",
+    "read_index",
+    "bundle_nbytes",
+]

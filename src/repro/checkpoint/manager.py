@@ -1,0 +1,197 @@
+"""Checkpoint manager: atomic, async, keep-N, deterministic restore.
+
+Layout::
+
+    <dir>/
+      manifest.json            # {"latest": 300, "steps": [100, 200, 300]}
+      step_00000300/
+        params.bin  params.index.json
+        opt_state.bin ...
+        meta.json              # step, mesh shape, arch, wall time
+
+Fault-tolerance contract (DESIGN.md §6):
+  * a step directory becomes visible only via rename, and the manifest is
+    updated only after the directory is complete → readers never see a
+    torn checkpoint; a crash mid-save leaves the previous manifest intact;
+  * ``restore`` validates every leaf's shape/dtype against the expected
+    abstract tree before any device transfer — a corrupt or mismatched
+    checkpoint fails fast, not 300 steps later;
+  * async save: the device→host snapshot is taken synchronously (cheap),
+    the disk write happens on a worker thread — training continues while
+    bytes land; ``wait()`` joins before the next save or process exit;
+  * keep-N GC never deletes the newest *committed* step.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import tensorstore_lite as tsl
+from repro.utils.tree import flatten_with_paths, tree_from_flat
+
+
+def _host_snapshot(tree: Any) -> dict[str, np.ndarray]:
+    """Flatten + device_get a collection tree (the synchronous part)."""
+    flat = flatten_with_paths(tree)
+    arrs = jax.device_get([v for _, v in flat])
+    return {p: np.asarray(a) for (p, _), a in zip(flat, arrs)}
+
+
+@dataclass
+class RestoreResult:
+    step: int
+    collections: dict
+    path: str
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_n: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- manifest -----------------------------------------------------------
+    def _manifest_path(self) -> str:
+        return os.path.join(self.dir, "manifest.json")
+
+    def _read_manifest(self) -> dict:
+        try:
+            with open(self._manifest_path()) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return {"latest": None, "steps": []}
+
+    def _write_manifest(self, man: dict) -> None:
+        tmp = self._manifest_path() + ".partial"
+        with open(tmp, "w") as f:
+            json.dump(man, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._manifest_path())
+
+    def latest_step(self) -> Optional[int]:
+        return self._read_manifest()["latest"]
+
+    def all_steps(self) -> list[int]:
+        return list(self._read_manifest()["steps"])
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, collections: dict, *, meta: Optional[dict] = None, blocking: Optional[bool] = None) -> None:
+        """Snapshot now; write now (blocking) or on the worker thread."""
+        self.wait()  # one in-flight save at a time
+        host = {name: _host_snapshot(tree) for name, tree in collections.items()}
+        blocking = (not self.async_save) if blocking is None else blocking
+        if blocking:
+            self._write(step, host, meta or {})
+        else:
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host, meta or {}), daemon=True
+            )
+            self._thread.start()
+
+    def _write_guarded(self, step: int, host: dict, meta: dict) -> None:
+        try:
+            self._write(step, host, meta)
+        except BaseException as e:  # surfaced on next wait()/save()
+            self._error = e
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def _write(self, step: int, host: dict, meta: dict) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".partial"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for name, arrays in host.items():
+            tsl.write_bundle(os.path.join(tmp, name), arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(), **meta}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # commit point 1: directory visible
+        man = self._read_manifest()
+        steps = sorted(set(man["steps"]) | {step})
+        self._write_manifest({"latest": max(steps), "steps": steps})  # commit 2
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from e
+
+    def _gc(self) -> None:
+        man = self._read_manifest()
+        steps = man["steps"]
+        if len(steps) <= self.keep_n:
+            return
+        drop = steps[: -self.keep_n]
+        keep = steps[-self.keep_n :]
+        self._write_manifest({"latest": man["latest"], "steps": keep})
+        for s in drop:
+            d = self._step_dir(s)
+            if os.path.isdir(d):
+                shutil.rmtree(d, ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def restore(
+        self,
+        step: Optional[int] = None,
+        *,
+        abstract: Optional[dict] = None,  # {collection: abstract tree} to validate
+        mmap: bool = True,
+    ) -> Optional[RestoreResult]:
+        """Returns None when no committed checkpoint exists (fresh start)."""
+        man = self._read_manifest()
+        if step is None:
+            step = man["latest"]
+        if step is None:
+            return None
+        if step not in man["steps"]:
+            raise FileNotFoundError(f"step {step} not in manifest {man['steps']}")
+        d = self._step_dir(step)
+        collections = {}
+        for name in sorted(os.listdir(d)):
+            if not name.endswith(".index.json"):
+                continue
+            cname = name[: -len(".index.json")]
+            flat = tsl.read_bundle(os.path.join(d, cname), mmap=mmap)
+            collections[cname] = tree_from_flat(flat)
+        if abstract is not None:
+            _validate(collections, abstract)
+        return RestoreResult(step=step, collections=collections, path=d)
+
+
+def _validate(collections: dict, abstract: dict) -> None:
+    for cname, atree in abstract.items():
+        if cname not in collections:
+            raise ValueError(f"checkpoint missing collection {cname!r}")
+        got = dict(flatten_with_paths(collections[cname]))
+        for path, leaf in flatten_with_paths(atree):
+            if path not in got:
+                raise ValueError(f"{cname}: missing leaf {path}")
+            g = got[path]
+            if tuple(g.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"{cname}.{path}: shape {tuple(g.shape)} != expected {tuple(leaf.shape)}"
+                )
+            if np.dtype(g.dtype) != np.dtype(leaf.dtype):
+                raise ValueError(
+                    f"{cname}.{path}: dtype {g.dtype} != expected {leaf.dtype}"
+                )

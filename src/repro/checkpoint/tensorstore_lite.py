@@ -1,0 +1,102 @@
+"""Raw-binary array bundle: dtype-faithful (bf16-safe), partially readable.
+
+One bundle = ``<prefix>.bin`` (concatenated raw buffers, 64-byte aligned)
++ ``<prefix>.index.json`` ({path: {offset, shape, dtype}}). Unlike npz this
+round-trips ml_dtypes (bfloat16/fp8) exactly and supports reading a subset
+of keys without touching the rest of the file — the property both the
+two-tier cold start (tier-0 subset reads) and sharded restore (per-host
+slices) rely on.
+
+Writes are atomic: ``.partial`` + rename, index last — a crashed writer can
+never produce a bundle with an index pointing at truncated data.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, Mapping, Optional
+
+import numpy as np
+
+_ALIGN = 64
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def write_bundle(prefix: str, arrays: Mapping[str, np.ndarray]) -> dict:
+    """Write all arrays; returns the index. Atomic (bin first, index last)."""
+    bin_tmp = prefix + ".bin.partial"
+    index: dict[str, dict] = {}
+    offset = 0
+    with open(bin_tmp, "wb") as f:
+        for key, arr in arrays.items():
+            arr = np.ascontiguousarray(arr)
+            pad = (-offset) % _ALIGN
+            if pad:
+                f.write(b"\0" * pad)
+                offset += pad
+            buf = arr.tobytes()
+            f.write(buf)
+            index[key] = {
+                "offset": offset,
+                "nbytes": len(buf),
+                "shape": list(arr.shape),
+                "dtype": np.dtype(arr.dtype).name,
+            }
+            offset += len(buf)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(bin_tmp, prefix + ".bin")
+    idx_tmp = prefix + ".index.json.partial"
+    with open(idx_tmp, "w") as f:
+        json.dump(index, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(idx_tmp, prefix + ".index.json")
+    return index
+
+
+def read_index(prefix: str) -> dict:
+    with open(prefix + ".index.json") as f:
+        return json.load(f)
+
+
+def read_bundle(
+    prefix: str,
+    keys: Optional[Iterable[str]] = None,
+    *,
+    mmap: bool = True,
+) -> dict[str, np.ndarray]:
+    """Read (a subset of) a bundle. With ``mmap`` the returned arrays are
+    zero-copy views over the page cache — bytes move lazily on first touch,
+    which is exactly the access pattern tier-0 device_put wants."""
+    index = read_index(prefix)
+    sel = list(index) if keys is None else list(keys)
+    out: dict[str, np.ndarray] = {}
+    if mmap:
+        raw = np.memmap(prefix + ".bin", dtype=np.uint8, mode="r")
+        for k in sel:
+            e = index[k]
+            dt = _np_dtype(e["dtype"])
+            view = raw[e["offset"] : e["offset"] + e["nbytes"]]
+            out[k] = view.view(dt).reshape(e["shape"])
+    else:
+        with open(prefix + ".bin", "rb") as f:
+            for k in sorted(sel, key=lambda k: index[k]["offset"]):
+                e = index[k]
+                f.seek(e["offset"])
+                buf = f.read(e["nbytes"])
+                out[k] = np.frombuffer(buf, _np_dtype(e["dtype"])).reshape(e["shape"]).copy()
+    return out
+
+
+def bundle_nbytes(prefix: str) -> int:
+    return sum(e["nbytes"] for e in read_index(prefix).values())

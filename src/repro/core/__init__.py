@@ -1,0 +1,44 @@
+"""FaaSLight core: Program Analyzer (entry recognition, param-reachability
+call graph, tier partitioning) + Code Generator (optional store, on-demand
+loader, artifact builder). See DESIGN.md §4."""
+
+from repro.core.analyzer import AnalysisResult, analyze, build_artifact, write_monolithic
+from repro.core.entrypoints import (
+    SERVING_MULTIMODAL_PROFILE,
+    SERVING_PROFILE,
+    TRAINING_PROFILE,
+    DeploymentProfile,
+    recognize_entries,
+)
+from repro.core.file_elim import eliminate_collections, eliminate_files
+from repro.core.on_demand import LoaderStats, TieredParams, placeholder_tree
+from repro.core.optional_store import OptionalStore, OptionalStoreWriter, write_store
+from repro.core.param_graph import ReachabilityReport, build_reachability, entry_param_liveness
+from repro.core.partition import TierDecision, TierPlan, Unit, build_tier_plan
+
+__all__ = [
+    "AnalysisResult",
+    "analyze",
+    "build_artifact",
+    "write_monolithic",
+    "DeploymentProfile",
+    "SERVING_PROFILE",
+    "SERVING_MULTIMODAL_PROFILE",
+    "TRAINING_PROFILE",
+    "recognize_entries",
+    "eliminate_collections",
+    "eliminate_files",
+    "LoaderStats",
+    "TieredParams",
+    "placeholder_tree",
+    "OptionalStore",
+    "OptionalStoreWriter",
+    "write_store",
+    "ReachabilityReport",
+    "build_reachability",
+    "entry_param_liveness",
+    "TierDecision",
+    "TierPlan",
+    "Unit",
+    "build_tier_plan",
+]

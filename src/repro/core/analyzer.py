@@ -1,0 +1,167 @@
+"""FaaSLight orchestration: application → tiered artifact.
+
+``analyze()`` runs the Program Analyzer (entry recognition → reachability →
+tier plan) purely abstractly — no weights needed, nothing allocated — and
+``build_artifact()`` runs the Code Generator: given real weights it writes
+
+    <outdir>/
+      tier0.npz                  # indispensable weights, eager-loaded
+      optional.blob              # tier-1 units, zlib kv store
+      optional.blob.manifest.json
+      artifact.json              # plan + profile + arch metadata
+
+which is the optimized deployment package ("after2"). The monolithic
+baseline ("before") and the collection-pruned variant ("after1") are also
+writable for the paper's comparisons.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.entrypoints import DeploymentProfile, recognize_entries
+from repro.core.file_elim import EliminationReport, eliminate_collections, eliminate_files
+from repro.core.optional_store import OptionalStore, OptionalStoreWriter
+from repro.core.param_graph import ReachabilityReport, build_reachability
+from repro.core.partition import TierPlan, build_tier_plan
+from repro.models.zoo import Model
+from repro.utils.tree import flatten_with_paths
+
+
+@dataclass
+class AnalysisResult:
+    plan: TierPlan
+    reach: ReachabilityReport
+    elim: EliminationReport
+    profile: DeploymentProfile
+
+    def summary(self) -> dict:
+        s = self.plan.summary()
+        s["dropped_collections_bytes"] = self.elim.dropped_bytes
+        s["entries"] = self.reach.entry_names
+        return s
+
+
+def analyze(
+    model: Model,
+    profile: DeploymentProfile,
+    *,
+    collections: Optional[dict] = None,
+    hot_units_stats: Optional[dict] = None,
+    trace_B: int = 1,
+    trace_S: int = 64,
+) -> AnalysisResult:
+    """The full Program Analyzer pass (abstract; no weights).
+
+    ``collections`` is the full checkpoint tree ({"params": …, "opt_state":
+    …}); only its *keys* matter here (file elimination is structural).
+    Tracing shape: reachability is shape-independent for these models, so a
+    small (B, S) keeps analysis instant even for the 123 B-param configs.
+    """
+    collections = collections if collections is not None else {"params": model.abstract()}
+    _, elim = eliminate_collections(collections, for_training=profile.is_training)
+
+    entries = recognize_entries(model, profile, B=trace_B, S=trace_S)
+    abstract = model.abstract()
+    reach = build_reachability(entries, abstract)
+    plan = build_tier_plan(
+        abstract, model.access(), reach, profile,
+        axes=model.axes(), hot_units_stats=hot_units_stats,
+    )
+    return AnalysisResult(plan=plan, reach=reach, elim=elim, profile=profile)
+
+
+# ---------------------------------------------------------------------------
+# Code Generator: materialize the deployment package
+# ---------------------------------------------------------------------------
+
+
+def _slice_unit(arr: np.ndarray, unit) -> np.ndarray:
+    for i in unit.sel:
+        arr = arr[i]
+    if unit.rows is not None:
+        lo, hi = unit.rows
+        arr = arr[lo:hi]
+    return arr
+
+
+def build_artifact(
+    params: Any,
+    result: AnalysisResult,
+    outdir: str,
+    *,
+    compress_level: int = 6,
+) -> dict:
+    """Write the optimized two-tier package. Returns manifest summary."""
+    os.makedirs(outdir, exist_ok=True)
+    eliminate_files(outdir)
+    plan = result.plan
+    flat = dict(flatten_with_paths(params))
+
+    # tier-0: one raw-binary bundle (eager-loaded at cold start)
+    from repro.checkpoint import tensorstore_lite as tsl
+
+    tier0 = {}
+    for path, dec in plan.decisions.items():
+        if dec.tier == 0:
+            tier0[path] = np.asarray(flat[path])
+    tsl.write_bundle(os.path.join(outdir, "tier0"), tier0)
+
+    # tier-1: the lightweight file
+    blob_path = os.path.join(outdir, "optional.blob")
+    with OptionalStoreWriter(blob_path, level=compress_level) as w:
+        for path, dec in plan.decisions.items():
+            if dec.tier != 1:
+                continue
+            arr = np.asarray(flat[path])
+            for unit in dec.units:
+                w.add(unit.key, _slice_unit(arr, unit))
+
+    store = OptionalStore(blob_path)
+    meta = {
+        "profile": result.profile.name,
+        "entries": result.reach.entry_names,
+        "tier0_bytes": plan.tier0_bytes,
+        "tier1_raw_bytes": store.raw_bytes,
+        "tier1_compressed_bytes": store.compressed_bytes,
+        "decisions": {
+            p: {
+                "tier": d.tier,
+                "granularity": d.granularity,
+                "reason": d.reason,
+                "nbytes": d.nbytes,
+                "units": [u.key for u in d.units],
+                "resident_units": list(d.resident_units),
+            }
+            for p, d in plan.decisions.items()
+        },
+    }
+    store.close()
+    meta_path = os.path.join(outdir, "artifact.json")
+    tmpm = meta_path + ".partial"
+    with open(tmpm, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmpm, meta_path)
+    return meta
+
+
+def write_monolithic(collections: Any, outdir: str, *, pruned: bool = False) -> str:
+    """The paper's *before* (full checkpoint) / *after1* (collection-pruned)
+    baselines as single uncompressed raw bundles."""
+    from repro.checkpoint import tensorstore_lite as tsl
+
+    os.makedirs(outdir, exist_ok=True)
+    if pruned:
+        collections, _ = eliminate_collections(collections)
+    flat = {}
+    for coll, tree in collections.items():
+        for path, leaf in flatten_with_paths(tree):
+            flat[f"{coll}.{path}"] = np.asarray(leaf)
+    prefix = os.path.join(outdir, "after1" if pruned else "before")
+    tsl.write_bundle(prefix, flat)
+    return prefix + ".bin"

@@ -1,0 +1,106 @@
+"""② Application Entry Recognition.
+
+The paper recognizes entries three ways (§4.1): (1) the deployment
+configuration file, (2) source analysis matching handler signatures, and
+(3) an explicit developer interface. The analogues here:
+
+  1. ``DeploymentProfile`` — the deployment's declared entry set (a serving
+     deployment declares ``prefill``/``decode_step``; a trainer declares
+     ``train_step``; modality restrictions narrow the set further).
+  2. automatic recognition from the ``Model`` facade — every model exposes
+     ``entries()`` whose items carry a ``kind`` tag; ``recognize_entries``
+     filters them by the profile exactly the way the paper matches
+     ``(event, context)`` handler signatures.
+  3. ``extra_entries`` — the explicit escape hatch.
+
+Module-initialization functions (the paper's offline-profiled init list)
+map to state initializers: cache/state init is always required before the
+first decode, so ``init_cache`` is implicitly part of every decode
+deployment — it consumes no parameters but pins the cache layout.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Sequence
+
+from repro.models.zoo import EntryPoint, Model
+
+
+@dataclass(frozen=True)
+class DeploymentProfile:
+    """What this deployment serves — the FaaSLight configuration file.
+
+    kinds       — which entry kinds the service exposes.
+    modalities  — modal entries to keep warm ("text" always; "image"/"audio"
+                  optional). Modal params outside this set become tier-1.
+    hot_vocab_fraction — fraction of vocab row-groups resident at cold start.
+    resident_experts   — experts resident per MoE layer at cold start
+                         (-1 = all: baseline; 0 = none: strict).
+    """
+
+    name: str = "serving"
+    kinds: tuple = ("prefill", "decode")
+    modalities: tuple = ("text",)
+    hot_vocab_fraction: float = 0.25
+    resident_experts: int = 0
+    min_tier1_bytes: int = 1 << 20  # leaves smaller than this stay tier-0
+    vocab_row_group: int = 2048  # rows per on-demand vocab unit
+
+    @property
+    def is_training(self) -> bool:
+        return "train" in self.kinds
+
+
+TRAINING_PROFILE = DeploymentProfile(
+    name="training", kinds=("train",), modalities=("text", "image", "audio"),
+    hot_vocab_fraction=1.0, resident_experts=-1,
+)
+SERVING_PROFILE = DeploymentProfile(name="serving")
+SERVING_MULTIMODAL_PROFILE = DeploymentProfile(
+    name="serving-multimodal", modalities=("text", "image", "audio")
+)
+
+
+def recognize_entries(
+    model: Model,
+    profile: DeploymentProfile,
+    *,
+    B: int = 1,
+    S: int = 128,
+    extra_entries: Sequence[EntryPoint] = (),
+) -> list[EntryPoint]:
+    """Signature-match the model's registered entries against the profile.
+
+    Mirrors the paper's strategy order: the profile (config file) selects
+    kinds; the ``kind`` tag on each entry is the handler-signature match;
+    ``extra_entries`` is the explicit interface.
+    """
+    multimodal = any(m in profile.modalities for m in ("image", "audio"))
+    out: list[EntryPoint] = []
+    for ep in model.entries(B=B, S=S):
+        if ep.kind not in profile.kinds:
+            continue
+        is_text_only = ep.name.endswith("_text_only")
+        if multimodal and is_text_only:
+            # the modal variant subsumes text-only reachability; keep both
+            # only when the deployment serves mixed traffic (it does: text
+            # requests still arrive) — include, it is cheap to trace.
+            pass
+        if not multimodal and not is_text_only:
+            # text-only deployment: skip modal variants so modal params are
+            # *unreachable* (the whisper-encoder / VLM-cross case).
+            has_modal_twin = any(
+                e.name == ep.name + "_text_only" for e in model.entries(B=B, S=S)
+            )
+            if has_modal_twin:
+                continue
+        out.append(ep)
+    out.extend(extra_entries)
+    if not out:
+        raise ValueError(
+            f"no entries recognized for profile {profile.name!r} "
+            f"(kinds={profile.kinds}) — the paper's strategy-3 escape hatch: "
+            "pass extra_entries explicitly"
+        )
+    return out

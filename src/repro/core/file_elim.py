@@ -1,0 +1,92 @@
+"""① Optional File Elimination — artifact-collection pruning.
+
+The paper deletes four kinds of files that are *never loaded at runtime*
+(virtualenv junk, compiled caches, dist-info, tests). The checkpoint-level
+analogue removes whole *collections* from the serving artifact that the
+serving entries can never consume:
+
+  * optimizer state (Adam moments — 2× param bytes!),
+  * EMA / Polyak shadows,
+  * training-only auxiliaries (schedule step, rng, data-pipeline state),
+  * stale temp/backup checkpoint files next to the manifest.
+
+This is the "after1" stage of the paper's evaluation: it shrinks the bytes
+*transmitted* (storage → host) before the Program Analyzer ever runs.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Iterable
+
+from repro.utils.tree import flatten_with_paths, tree_bytes
+
+# Collections known not to be consumed by any serving entry — the analogue
+# of the paper's four optional-file types.
+SERVING_OPTIONAL_COLLECTIONS: tuple[str, ...] = (
+    "opt_state",  # Adam m/v — the "pip/setuptools directories"
+    "ema",        # shadow params — the "compiled .pyc files"
+    "rng",        # data/dropout rng — "dist-info"
+    "data_state", # pipeline cursors — "tests directories"
+    "metrics",
+)
+
+# File patterns next to a checkpoint that are never read at load time.
+OPTIONAL_FILE_PATTERNS: tuple[str, ...] = (".tmp", ".bak", ".lock", ".partial")
+
+
+@dataclass
+class EliminationReport:
+    kept_collections: list = field(default_factory=list)
+    dropped_collections: dict = field(default_factory=dict)  # name -> bytes
+    dropped_files: list = field(default_factory=list)
+
+    @property
+    def dropped_bytes(self) -> int:
+        return sum(self.dropped_collections.values())
+
+
+def eliminate_collections(
+    artifact: dict,
+    *,
+    for_training: bool = False,
+    optional: Iterable[str] = SERVING_OPTIONAL_COLLECTIONS,
+) -> tuple[dict, EliminationReport]:
+    """Split a full checkpoint tree into (serving artifact, report).
+
+    ``artifact`` is the top-level checkpoint dict, e.g.
+    ``{"params": …, "opt_state": …, "ema": …, "step": …}``. For training
+    deployments nothing is dropped (every collection is reachable from the
+    train entry's update rule).
+    """
+    report = EliminationReport()
+    if for_training:
+        report.kept_collections = list(artifact)
+        return artifact, report
+    optional = set(optional)
+    kept = {}
+    for name, coll in artifact.items():
+        if name in optional:
+            report.dropped_collections[name] = tree_bytes(coll)
+        else:
+            kept[name] = coll
+            report.kept_collections.append(name)
+    return kept, report
+
+
+def eliminate_files(ckpt_dir: str, patterns: Iterable[str] = OPTIONAL_FILE_PATTERNS) -> list[str]:
+    """Remove leftover temp/backup files in a checkpoint directory (the
+    literal file-level half of ①). Returns removed paths."""
+    removed = []
+    if not os.path.isdir(ckpt_dir):
+        return removed
+    for name in os.listdir(ckpt_dir):
+        if any(name.endswith(p) for p in patterns):
+            path = os.path.join(ckpt_dir, name)
+            try:
+                os.remove(path)
+                removed.append(path)
+            except OSError:
+                pass
+    return removed

@@ -1,0 +1,192 @@
+"""④ The "lightweight file" — compressed key-value store for tier-1 units.
+
+The paper separates optional functions into one compressed key-value blob
+(~5000 functions ≈ 1 MB with gzip) shipped inside the deployment package;
+``rewrite_template`` reads it on first miss. The analogue here is a single
+``optional.blob`` file of concatenated zlib frames plus a JSON manifest
+mapping unit keys to (offset, csize, rsize, shape, dtype, codec).
+
+Design points carried over from the paper:
+  * one global file, not one file per unit — a single open+seek per miss;
+  * compression is per-unit so a miss decompresses only its own bytes;
+  * the store is immutable after build (writes go through a temp+rename so
+    a crashed build never corrupts a serveable artifact).
+
+Beyond-paper: bf16 weight entries are byte-planed (high/low byte planes
+stored separately) before compression — exponent bytes compress far better
+than interleaved high/low pairs, typically 1.3-2× better ratios on real
+weight tensors at negligible cost.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, Optional
+
+import numpy as np
+
+MAGIC = b"FLT1"
+_CODECS = ("raw", "zlib", "zlib-bp")  # bp = byte-planed
+
+
+def _encode(arr: np.ndarray, level: int) -> tuple[bytes, str]:
+    raw = np.ascontiguousarray(arr).tobytes()
+    if level <= 0:
+        return raw, "raw"
+    if arr.dtype.itemsize == 2:
+        # byte-plane 2-byte dtypes (bf16/f16/i16): plane of high bytes then
+        # low bytes — homogeneous exponent bytes compress much better.
+        b = np.frombuffer(raw, np.uint8).reshape(-1, 2)
+        planed = np.concatenate([b[:, 1], b[:, 0]]).tobytes()
+        return zlib.compress(planed, level), "zlib-bp"
+    return zlib.compress(raw, level), "zlib"
+
+
+def _decode(buf: bytes, codec: str, shape: tuple, dtype: str) -> np.ndarray:
+    dt = np.dtype(dtype)
+    if codec == "raw":
+        raw = buf
+    elif codec == "zlib":
+        raw = zlib.decompress(buf)
+    elif codec == "zlib-bp":
+        planed = np.frombuffer(zlib.decompress(buf), np.uint8)
+        n = planed.size // 2
+        b = np.empty((n, 2), np.uint8)
+        b[:, 1] = planed[:n]
+        b[:, 0] = planed[n:]
+        raw = b.tobytes()
+    else:
+        raise ValueError(f"unknown codec {codec!r}")
+    return np.frombuffer(raw, dt).reshape(shape).copy()
+
+
+# numpy has no native bfloat16; store via ml_dtypes (jax dependency).
+def _np_dtype(dtype_str: str) -> np.dtype:
+    try:
+        return np.dtype(dtype_str)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, dtype_str))
+
+
+def _dtype_str(dt) -> str:
+    return np.dtype(dt).name
+
+
+@dataclass
+class StoreEntry:
+    offset: int
+    csize: int
+    rsize: int
+    shape: tuple
+    dtype: str
+    codec: str
+
+
+class OptionalStoreWriter:
+    """Streaming writer: units are appended one at a time so building the
+    store never holds more than one unit in memory."""
+
+    def __init__(self, path: str, *, level: int = 6):
+        self.path = path
+        self.level = level
+        self._tmp = path + ".partial"
+        self._f = open(self._tmp, "wb")
+        self._f.write(MAGIC)
+        self._offset = len(MAGIC)
+        self._manifest: dict[str, dict] = {}
+
+    def add(self, key: str, arr: np.ndarray) -> None:
+        if key in self._manifest:
+            raise KeyError(f"duplicate unit key {key!r}")
+        buf, codec = _encode(arr, self.level)
+        self._f.write(buf)
+        self._manifest[key] = dict(
+            offset=self._offset,
+            csize=len(buf),
+            rsize=arr.nbytes,
+            shape=list(arr.shape),
+            dtype=_dtype_str(arr.dtype),
+            codec=codec,
+        )
+        self._offset += len(buf)
+
+    def close(self) -> dict:
+        self._f.close()
+        os.replace(self._tmp, self.path)  # atomic commit
+        man_path = self.path + ".manifest.json"
+        tmp = man_path + ".partial"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": self._manifest}, f)
+        os.replace(tmp, man_path)
+        return self._manifest
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        if exc[0] is None:
+            self.close()
+        else:
+            self._f.close()
+            if os.path.exists(self._tmp):
+                os.remove(self._tmp)
+
+
+class OptionalStore:
+    """Read side — opened once at cold start; ``fetch`` per miss."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(path + ".manifest.json") as f:
+            man = json.load(f)
+        self.entries: dict[str, StoreEntry] = {
+            k: StoreEntry(
+                offset=v["offset"], csize=v["csize"], rsize=v["rsize"],
+                shape=tuple(v["shape"]), dtype=v["dtype"], codec=v["codec"],
+            )
+            for k, v in man["entries"].items()
+        }
+        self._f = open(path, "rb")
+        if self._f.read(len(MAGIC)) != MAGIC:
+            raise ValueError(f"{path}: bad magic — not an optional store")
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.entries
+
+    def keys(self) -> Iterable[str]:
+        return self.entries.keys()
+
+    @property
+    def compressed_bytes(self) -> int:
+        return sum(e.csize for e in self.entries.values())
+
+    @property
+    def raw_bytes(self) -> int:
+        return sum(e.rsize for e in self.entries.values())
+
+    def fetch(self, key: str) -> np.ndarray:
+        e = self.entries[key]
+        self._f.seek(e.offset)
+        buf = self._f.read(e.csize)
+        return _decode(buf, e.codec, e.shape, _np_dtype(e.dtype))
+
+    def fetch_many(self, keys: Iterable[str]) -> dict[str, np.ndarray]:
+        # sort by offset: sequential reads, one pass over the file region
+        ks = sorted(keys, key=lambda k: self.entries[k].offset)
+        return {k: self.fetch(k) for k in ks}
+
+    def close(self) -> None:
+        self._f.close()
+
+
+def write_store(path: str, units: Iterable[tuple[str, np.ndarray]], *, level: int = 6) -> dict:
+    with OptionalStoreWriter(path, level=level) as w:
+        for key, arr in units:
+            w.add(key, arr)
+    return w._manifest

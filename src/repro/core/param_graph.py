@@ -1,0 +1,214 @@
+"""Call-graph construction: jaxpr dataflow → parameter-leaf reachability.
+
+The paper builds a *function-level call graph* with CHA-style static analysis
+(§4.1 ③) and marks functions reachable from the entries as indispensable.
+Our "functions" are parameter leaves, and the "call graph" is the jaxpr
+dataflow graph of each entry point — traced abstractly via
+``jax.make_jaxpr`` on ``ShapeDtypeStruct`` stand-ins, so the analysis never
+allocates or computes (the same property the paper's static analysis has).
+
+Where the paper's CHA is approximate for dynamic languages, jaxpr dataflow
+is *exact at graph level*: a leaf is reachable from an entry iff its input
+variable is live in the backward slice of the entry's outputs. The remaining
+inaccuracy is *data-dependent* access (which expert / vocab row a request
+uses) — handled, exactly as in the paper, by the on-demand backstop.
+
+Backward liveness is computed recursively through sub-jaxprs (scan, cond,
+while, pjit, remat, custom_{jvp,vjp}) so that e.g. a whisper decode entry
+that never consumes encoder outputs leaves every encoder leaf dead even
+though the leaves are formal inputs of the traced function.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+from jax.extend import core as jcore
+
+from repro.utils.tree import flatten_with_paths, leaf_paths
+
+
+# ---------------------------------------------------------------------------
+# backward liveness over a (closed) jaxpr
+# ---------------------------------------------------------------------------
+
+
+def _as_jaxpr(x) -> jcore.Jaxpr | None:
+    if isinstance(x, jcore.ClosedJaxpr):
+        return x.jaxpr
+    if isinstance(x, jcore.Jaxpr):
+        return x
+    return None
+
+
+def _sub_jaxprs(eqn) -> list[tuple[jcore.Jaxpr, str]]:
+    """(jaxpr, param_name) pairs contained in an eqn's params. Some
+    primitives carry ClosedJaxpr (pjit, scan), others raw Jaxpr (remat2)."""
+    out = []
+    for k, v in eqn.params.items():
+        j = _as_jaxpr(v)
+        if j is not None:
+            out.append((j, k))
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                j = _as_jaxpr(x)
+                if j is not None:
+                    out.append((j, k))
+    return out
+
+
+def live_invars(jaxpr: jcore.Jaxpr, out_live: Sequence[bool]) -> list[bool]:
+    """Which jaxpr.invars are live given liveness of jaxpr.outvars.
+
+    Per-eqn precision: for higher-order primitives whose operands map 1:1 to
+    a sub-jaxpr's invars (pjit, closed_call, remat, scan, custom_jvp/vjp) we
+    recurse; for cond we map operands (after the predicate) into each branch
+    and take the union; anything unknown is treated conservatively (all
+    invars live if any outvar is).
+    """
+    live: set[int] = set()  # id(var) of live vars
+
+    def mark(v) -> None:
+        if not isinstance(v, jcore.Literal):
+            live.add(id(v))
+
+    def is_live(v) -> bool:
+        return isinstance(v, jcore.Literal) or id(v) in live
+
+    for v, l in zip(jaxpr.outvars, out_live):
+        if l:
+            mark(v)
+
+    for eqn in reversed(jaxpr.eqns):
+        outs_live = [is_live(v) for v in eqn.outvars]
+        if not any(outs_live):
+            continue
+        prim = eqn.primitive.name
+        handled = False
+        if prim in ("pjit", "closed_call", "remat2", "checkpoint", "custom_jvp_call", "custom_vjp_call", "custom_vjp_call_jaxpr"):
+            subs = _sub_jaxprs(eqn)
+            if len(subs) == 1:
+                sub = subs[0][0]
+                if len(sub.invars) == len(eqn.invars) and len(sub.outvars) == len(eqn.outvars):
+                    sub_live = live_invars(sub, outs_live)
+                    for v, l in zip(eqn.invars, sub_live):
+                        if l:
+                            mark(v)
+                    handled = True
+        elif prim == "scan":
+            sub = eqn.params["jaxpr"].jaxpr
+            n_carry = eqn.params["num_carry"]
+            # outvars = [carry..., ys...]; sub.outvars = [carry..., y_slices...]
+            # A live carry-out at step T implies the carry chain is live at
+            # every step, which in turn can consume any invar — iterate to a
+            # fixed point over carry liveness.
+            n_c = n_carry
+            num_consts = eqn.params.get("num_consts", 0)
+            carry_live = list(outs_live[:n_c])
+            ys_live = outs_live[n_c:]
+            # eqn.invars = [consts..., carry_init..., xs...] maps 1:1 to
+            # sub.invars; carry positions are [num_consts, num_consts + n_c).
+            for _ in range(n_c + 1):
+                sub_out_live = list(carry_live) + list(ys_live)
+                sub_in_live = live_invars(sub, sub_out_live)
+                new_carry_live = [
+                    carry_live[i] or sub_in_live[num_consts + i] for i in range(n_c)
+                ]
+                if new_carry_live == carry_live:
+                    break
+                carry_live = new_carry_live
+            sub_out_live = list(carry_live) + list(ys_live)
+            sub_in_live = live_invars(sub, sub_out_live)
+            for v, l in zip(eqn.invars, sub_in_live):
+                if l:
+                    mark(v)
+            handled = True
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            ops = eqn.invars[1:]  # invars = [index, *operands]
+            any_live = [False] * len(ops)
+            for br in branches:
+                sub_live = live_invars(br.jaxpr, outs_live)
+                for i, l in enumerate(sub_live):
+                    any_live[i] = any_live[i] or l
+            mark(eqn.invars[0])
+            for v, l in zip(ops, any_live):
+                if l:
+                    mark(v)
+            handled = True
+        elif prim == "while":
+            # conservative: everything feeding a live while is live
+            pass
+        if not handled:
+            for v in eqn.invars:
+                mark(v)
+
+    return [is_live(v) for v in jaxpr.invars]
+
+
+# ---------------------------------------------------------------------------
+# entry tracing → per-leaf reachability
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReachabilityReport:
+    """The FaaSLight call-graph result for one application.
+
+    ``reachable[path]`` is the set of entry names whose backward slice
+    contains the leaf; leaves with an empty set are *statically optional*
+    (the paper's unreachable functions).
+    """
+
+    entry_names: list[str]
+    reachable: dict[str, set] = field(default_factory=dict)
+    n_eqns: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def indispensable(self) -> set:
+        return {p for p, s in self.reachable.items() if s}
+
+    @property
+    def statically_optional(self) -> set:
+        return {p for p, s in self.reachable.items() if not s}
+
+    def reaching(self, path: str) -> set:
+        return self.reachable.get(path, set())
+
+
+def trace_entry(fn: Callable, params_abstract: Any, args: tuple) -> jcore.ClosedJaxpr:
+    """Abstractly trace fn(params, *args); no allocation, no FLOPs."""
+    return jax.make_jaxpr(fn)(params_abstract, *args)
+
+
+def entry_param_liveness(fn: Callable, params_abstract: Any, args: tuple) -> tuple[dict[str, bool], int]:
+    """dotted-path -> is-live for one entry, plus eqn count (graph size)."""
+    closed = trace_entry(fn, params_abstract, args)
+    jaxpr = closed.jaxpr
+    out_live = [True] * len(jaxpr.outvars)
+    in_live = live_invars(jaxpr, out_live)
+
+    # params are the first argument: the first len(param_leaves) flattened
+    # invars correspond to the param tree leaves in flatten order.
+    paths = leaf_paths(params_abstract)
+    n = len(paths)
+    liveness = dict(zip(paths, in_live[:n]))
+    return liveness, len(jaxpr.eqns)
+
+
+def build_reachability(entries: Iterable, params_abstract: Any) -> ReachabilityReport:
+    """The Program Analyzer's ③ Optional Function Generation step: union of
+    per-entry backward slices over all registered entries."""
+    paths = leaf_paths(params_abstract)
+    report = ReachabilityReport(entry_names=[], reachable={p: set() for p in paths})
+    for ep in entries:
+        liveness, n_eqns = entry_param_liveness(ep.fn, params_abstract, ep.args)
+        report.entry_names.append(ep.name)
+        report.n_eqns[ep.name] = n_eqns
+        for p, l in liveness.items():
+            if l:
+                report.reachable[p].add(ep.name)
+    return report

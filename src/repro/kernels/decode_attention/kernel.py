@@ -1,0 +1,124 @@
+"""Pallas TPU flash-decode: one-token attention over a long KV cache.
+
+The decode step is memory-bound: the entire KV cache streams HBM→VMEM once
+per token while compute is a (H, hd)×(hd, bk) matvec per block. The kernel
+tiles the KV sequence into (bk, hd) VMEM blocks on the innermost sequential
+grid dimension with the usual online-softmax carry in scratch; all query
+heads of one KV-head group are processed together so each KV block is
+fetched exactly once (GQA arithmetic-intensity optimization — G×hd rows of
+q amortize one KV block load).
+
+Grid: (B, Hkv, nk). Cache layout (B, Hkv, Skv, hd) — the serving engine
+keeps caches in this layout so no transpose sits on the decode hot path.
+``kv_len`` masks both linear caches (valid prefix) and rolling caches
+(every slot valid once wrapped; softmax is permutation-invariant).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(
+    len_ref,  # (1, 1) int32 — valid cache length for this batch row
+    q_ref,    # (1, 1, G, hd)
+    k_ref,    # (1, 1, bk, hd)
+    v_ref,    # (1, 1, bk, hd)
+    o_ref,    # (1, 1, G, hd)
+    m_scr, l_scr, acc_scr,  # (G, 1), (G, 1), (G, hd)
+    *,
+    scale: float,
+    softcap: Optional[float],
+    rolling: bool,
+    skv: int,
+    bk: int,
+    nk: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # the wrapper pre-clamps rolling caches: limit = min(kv_len, true_skv)
+    limit = len_ref[0, 0]
+    needed = ki * bk < limit
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (G, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = k_pos < limit  # (1, bk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array,       # (B, Hkv, G, hd)
+    k_cache: jax.Array, # (B, Hkv, Skv, hd)
+    v_cache: jax.Array,
+    kv_len: jax.Array,  # (B, 1) int32
+    *,
+    rolling: bool,
+    softcap: Optional[float],
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, hd = q.shape
+    _, _, Skv_p, _ = k_cache.shape
+    nk = Skv_p // bk
+    scale = hd**-0.5
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=scale, softcap=softcap, rolling=rolling,
+        skv=Skv_p, bk=bk, nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q, k_cache, v_cache)

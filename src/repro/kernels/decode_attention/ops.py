@@ -1,0 +1,58 @@
+"""Jit'd wrapper for flash-decode: layout/padding + GQA fold + interpret
+fallback. Accepts the model layer's (B, Skv, Hkv, hd) cache layout."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("rolling", "softcap", "bk", "interpret"))
+def decode_attention(
+    q: jax.Array,       # (B, H, hd)
+    k_cache: jax.Array, # (B, Skv, Hkv, hd)
+    v_cache: jax.Array,
+    kv_len: jax.Array,  # scalar or (B,)
+    *,
+    rolling: bool = False,
+    softcap: Optional[float] = None,
+    bk: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = not _is_tpu()
+    B, H, hd = q.shape
+    _, Skv, Hkv, _ = k_cache.shape
+    G = H // Hkv
+
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((B,), kv_len, jnp.int32)
+    # clamp to the physical cache: rolling caches wrap (every slot valid once
+    # kv_len >= Skv) and linear caches can never hold more than Skv entries —
+    # either way padded slots past Skv must stay masked.
+    kv_len = jnp.minimum(kv_len, Skv).reshape(B, 1)
+
+    bk = min(bk, max(128, 1 << (Skv - 1).bit_length()))
+    pad = (-Skv) % bk
+    kc = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k_cache
+    vc = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v_cache
+
+    qf = q.reshape(B, Hkv, G, hd)
+    kf = kc.transpose(0, 2, 1, 3)  # (B, Hkv, Skv_p, hd)
+    vf = vc.transpose(0, 2, 1, 3)
+
+    o = decode_attention_pallas(
+        qf, kf, vf, kv_len,
+        rolling=rolling, softcap=softcap, bk=bk, interpret=interpret,
+    )
+    return o.reshape(B, H, hd)

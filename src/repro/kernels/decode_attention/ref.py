@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode (thin re-export of the model-layer
+implementation, which is itself the naive ground truth for one-token
+attention over a cache)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.models.attention import decode_attention_jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,       # (B, H, hd)
+    k_cache: jax.Array, # (B, Skv, Hkv, hd)
+    v_cache: jax.Array,
+    kv_len: jax.Array,
+    *,
+    rolling: bool = False,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    return decode_attention_jnp(
+        q, k_cache, v_cache, kv_len, rolling=rolling, softcap=softcap
+    )

@@ -1,0 +1,154 @@
+"""Pallas TPU flash-attention (prefill/train): blockwise online softmax.
+
+TPU adaptation (DESIGN.md §7): the classic GPU flash-attention tiles over
+SM shared memory with warp-level reductions; the TPU version tiles over
+VMEM with (bq, bk) score blocks sized as MXU-aligned 128-multiples, and the
+online max/denominator carry lives in VMEM scratch that persists across the
+*sequential* innermost grid dimension (TPU grids execute in order, which
+replaces the GPU's atomic/semaphore accumulation).
+
+Grid: (B·H, nq, nk) — nk innermost/sequential. GQA is expressed in the
+k/v index_map (``bh // group``) so KV blocks are fetched once per KV head
+group, not once per query head.
+
+Causal/windowed blocks that are fully masked are skipped with ``pl.when``
+(no MXU work issued), matching the exact-triangle FLOP accounting of the
+jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # (1, bq, hd), (1, bk, hd), (1, bk, hd)
+    o_ref,  # (1, bq, hd)
+    m_scr, l_scr, acc_scr,  # (bq, 1), (bq, 1), (bq, hd) fp32 VMEM
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    q_offset: int,
+    sq: int,
+    sk: int,
+    bq: int,
+    bk: int,
+    nk: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq + q_offset  # absolute position of this q block
+    k_start = ki * bk
+
+    # block-level reachability: skip fully-masked (bq, bk) tiles entirely
+    needed = True
+    if causal:
+        needed = jnp.logical_and(needed, k_start <= q_start + bq - 1)
+    if window is not None:
+        needed = jnp.logical_and(needed, k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(needed)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < sk  # k padding
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask  # masked lanes contribute exactly 0
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Sq, hd)
+    k: jax.Array,  # (BHkv, Sk, hd)
+    v: jax.Array,
+    *,
+    group: int,  # H // Hkv
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    q_offset: int,
+    sq: int,  # true (unpadded) Sq
+    sk: int,  # true (unpadded) Sk
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq_p, hd = q.shape
+    _, Sk_p, _ = k.shape
+    nq = Sq_p // bq
+    nk = Sk_p // bk
+    scale = hd**-0.5
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        q_offset=q_offset,
+        sq=sq,
+        sk=sk,
+        bq=bq,
+        bk=bk,
+        nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki, g=group: (bh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Deliberately the *naive* formulation (materialized (Sq, Sk) scores, fp32
+softmax) — numerically the ground truth the online-softmax kernel must
+match. The model code's chunked implementation
+(repro.models.attention.flash_attention_jnp) is itself validated against
+this oracle in tests, closing the loop kernel ↔ chunked-jnp ↔ naive.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = hd**-0.5
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

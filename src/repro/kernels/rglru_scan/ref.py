@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: the sequential linear recurrence, scanned step by step
+(numerically the ground truth; the model layer's associative scan and the
+Pallas blocked scan must both match it)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """s_t = a_t * s_{t-1} + b_t, s_{-1} = 0. a, b: (B, S, W)."""
+
+    def step(s, ab):
+        at, bt = ab
+        s = at * s + bt
+        return s, s
+
+    B, S, W = a.shape
+    s0 = jnp.zeros((B, W), a.dtype)
+    _, out = jax.lax.scan(step, s0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return out.swapaxes(0, 1)

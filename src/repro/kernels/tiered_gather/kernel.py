@@ -1,0 +1,89 @@
+"""Pallas TPU tiered row-gather — the FaaSLight on-demand data plane.
+
+Embedding/readout tables under the two-tier scheme have *resident* row
+groups (tier-0 / already faulted-in) and *cold* groups whose device rows are
+placeholders. The serving engine needs, per token-id batch: the gathered
+rows for resident ids, and a miss mask telling it which ids touched cold
+groups (→ fault the group in via the on-demand loader and retry — the
+``rewrite_template`` control flow, at kernel level).
+
+TPU adaptation: a data-dependent gather on TPU is expressed through
+*scalar-prefetched* indices — the ids (and the residency bitmap) are given
+to the grid pipeline up front (SMEM), and the table's BlockSpec index_map
+selects row ``ids[i]`` for grid step ``i``, so each row move is a pipelined
+HBM→VMEM DMA issued by the grid machinery itself (no gather instruction on
+the VPU at all; this is how TPU embedding lookups are structured). Cold ids
+are clamped to row 0 in the index_map (a always-valid DMA) and zeroed in
+the body, so the pipeline never reads out of bounds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tiered_gather_kernel(
+    ids_ref,   # (N,) int32   — scalar prefetch
+    mask_ref,  # (G,) int32   — scalar prefetch (1 = group resident)
+    table_ref, # (1, D) block — row ids[i] (clamped) of the table
+    o_ref,     # (1, D) block
+    miss_ref,  # (1, 1) block int32
+    *,
+    group_size: int,
+    n_rows: int,
+):
+    i = pl.program_id(0)
+    idx = ids_ref[i]
+    in_range = jnp.logical_and(idx >= 0, idx < n_rows)
+    grp = jnp.clip(idx, 0, n_rows - 1) // group_size
+    ok = jnp.logical_and(in_range, mask_ref[grp] > 0)
+    row = table_ref[0, :]
+    o_ref[0, :] = jnp.where(ok, row, jnp.zeros_like(row))
+    miss_ref[0, 0] = jnp.where(ok, 0, 1).astype(jnp.int32)
+
+
+def tiered_gather_pallas(
+    table: jax.Array,  # (V, D)
+    ids: jax.Array,    # (N,) int32
+    group_mask: jax.Array,  # (G,) int32
+    *,
+    group_size: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    V, D = table.shape
+    N = ids.shape[0]
+    kernel = functools.partial(_tiered_gather_kernel, group_size=group_size, n_rows=V)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N,),
+        in_specs=[
+            # dynamic-block gather: row ids[i] (clamped into range) per step
+            pl.BlockSpec(
+                (1, D),
+                lambda i, ids_ref, mask_ref: (
+                    jnp.clip(ids_ref[i], 0, V - 1),
+                    0,
+                ),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda i, ids_ref, mask_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, ids_ref, mask_ref: (i, 0)),
+        ],
+    )
+    out, miss = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), table.dtype),
+            jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids, group_mask, table)
+    return out, miss[:, 0]

@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the tiered gather."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tiered_gather.kernel import tiered_gather_pallas
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "interpret"))
+def tiered_gather(
+    table: jax.Array,
+    ids: jax.Array,
+    group_mask: jax.Array,
+    *,
+    group_size: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather rows with residency check. Returns (rows (N, D) — zeros for
+    misses, miss (N,) int32)."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    ids = ids.astype(jnp.int32)
+    group_mask = group_mask.astype(jnp.int32)
+    return tiered_gather_pallas(
+        table, ids, group_mask, group_size=group_size, interpret=interpret
+    )

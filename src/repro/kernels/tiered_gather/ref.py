@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the tiered gather."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tiered_gather_ref(
+    table: jax.Array,       # (V, D)
+    ids: jax.Array,         # (N,) int32
+    group_mask: jax.Array,  # (G,) int32 — 1 = resident
+    *,
+    group_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    V, D = table.shape
+    in_range = (ids >= 0) & (ids < V)
+    safe = jnp.clip(ids, 0, V - 1)
+    ok = in_range & (group_mask[safe // group_size] > 0)
+    rows = jnp.take(table, safe, axis=0)
+    out = jnp.where(ok[:, None], rows, 0)
+    miss = (~ok).astype(jnp.int32)
+    return out, miss

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the full-size model's step function is jitted with NamedSharding in/out
+specs on the production mesh, ``.lower().compile()`` must succeed, and the
+compiled artifact yields
+
+  * memory_analysis()  — bytes per device (fits/doesn't fit),
+  * cost_analysis()    — HLO FLOPs + bytes accessed,
+  * the optimized HLO  — collective-op byte accounting (repro.utils.hlo),
+
+which benchmarks/roofline.py turns into the three-term roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x22b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod] [--out results/]
+
+NOTE kernels: cells lower with use_pallas=False so cost_analysis sees real
+FLOPs (a Pallas custom-call is opaque to the XLA cost model); the Pallas
+kernels target real-TPU execution and are validated separately.
+"""
+
+import argparse
+import gc
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh, mesh_label
+from repro.models.zoo import build_model
+from repro.optim import abstract_adamw
+from repro.sharding import param_shardings, resolve_pspec, use_mesh
+from repro.sharding.rules import ACT_RULES
+from repro.utils import hlo as hlo_util
+from repro.utils.tree import flatten_with_paths, tree_from_flat
+
+DEFAULT_OUT = "benchmarks/results/dryrun"
+
+
+def _batch_shardings(batch_axes: dict, batch_specs: dict, mesh) -> dict:
+    out = {}
+    for k, spec in batch_specs.items():
+        axes = batch_axes[k]
+        out[k] = NamedSharding(mesh, resolve_pspec(axes, spec.shape, mesh, ACT_RULES))
+    return out
+
+
+def _tree_shardings(axes_tree, spec_tree, mesh):
+    from repro.utils.tree import flatten_axes_tree
+
+    flat_axes = dict(flatten_axes_tree(axes_tree))
+    out = {}
+    for path, leaf in flatten_with_paths(spec_tree):
+        axes = flat_axes[path]
+        out[path] = NamedSharding(mesh, resolve_pspec(axes, leaf.shape, mesh, ACT_RULES))
+    return tree_from_flat(out)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, logits_chunk: int = 512,
+               remat: str = "full", fsdp: bool = True, micro_batches: int = 0,
+               extra_cfg: dict | None = None):
+    """Construct (fn, abstract args, in_shardings, out_shardings) for a cell.
+
+    ``micro_batches`` — gradient-accumulation factor for the train step
+    (0 = auto: scale with model size so activation memory fits HBM; the
+    global batch is unchanged, activations shrink by the factor).
+    """
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    overrides = dict(use_pallas=False, fsdp=fsdp, remat=remat)
+    if shape.kind == "train" and cfg.vocab_size >= 64_000 and logits_chunk:
+        overrides["logits_chunk"] = logits_chunk
+    if extra_cfg:
+        overrides.update(extra_cfg)
+        micro_batches = int(overrides.pop("micro_batches", micro_batches))
+    cfg = cfg.replace(**overrides)
+    model = build_model(cfg)
+    if micro_batches == 0:
+        # auto: deeper accumulation for bigger models (activation memory
+        # scales 1/micro at constant global batch); data axis is 16 so the
+        # per-microbatch batch stays ≥ 1 per data shard at micro ≤ 16
+        n = model.num_params()
+        micro_batches = 16 if n > 40e9 else (8 if n > 8e9 else 4)
+        # per-microbatch batch must still cover every batch shard: on the
+        # multi-pod mesh (pod×data = 32) micro=16 would leave 8 rows for 32
+        # shards -> replication (observed: multi-pod train cells lost their
+        # 2x state-halving win). Clamp.
+        batch_shards = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                batch_shards *= mesh.shape[ax]
+        if shape.kind == "train":
+            micro_batches = max(1, min(micro_batches, shape.global_batch // batch_shards))
+    if cfg.layers_per_unit == 1 and "layers_per_unit" not in (extra_cfg or {}):
+        # auto: group deep uniform stacks 4 layers per scanned unit
+        if cfg.num_layers >= 40 and cfg.recurrent is None and cfg.xlstm is None \
+                and cfg.local_global_pattern is None and cfg.vlm is None:
+            for k in (4, 2):
+                lead = cfg.moe.first_dense_layers if cfg.moe else 0
+                if (cfg.num_layers - lead) % k == 0:
+                    cfg = cfg.replace(layers_per_unit=k)
+                    model = build_model(cfg)
+                    break
+
+    log_axes = model.logical_axes()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        # fp32 MASTER weights: the optimizer owns fp32 params; the model
+        # computes on a bf16 cast taken once per step. Without this, the
+        # fp32 copies AdamW takes of bf16 params make XLA keep (and
+        # all-gather!) the weights in fp32 inside the training loop —
+        # doubling FSDP gather volume (observed; EXPERIMENTS.md §Perf).
+        abstract = model.abstract(dtype=jnp.float32)
+        p_sh = param_shardings(log_axes, abstract, mesh, fsdp=cfg.fsdp)
+        batch_specs, batch_axes = model.train_batch_spec(B, S, multimodal=True)
+        b_sh = _batch_shardings(batch_axes, batch_specs, mesh)
+        opt_abs = abstract_adamw(abstract)
+        # moments shard exactly like their parameters; step replicates
+        opt_sh = type(opt_abs)(
+            step=NamedSharding(mesh, PartitionSpec()), m=p_sh, v=p_sh
+        )
+        from repro.optim import AdamWConfig, adamw_update
+
+        acfg = AdamWConfig()
+        n_micro = micro_batches if shape.global_batch % max(micro_batches, 1) == 0 else 1
+        flat_psh = dict(flatten_with_paths(p_sh))
+
+        def _constrain_like_params(tree):
+            flat = flatten_with_paths(tree)
+            out = {
+                p: jax.lax.with_sharding_constraint(v, flat_psh[p]) for p, v in flat
+            }
+            return tree_from_flat(out)
+
+        def train_step(params, opt_state, batch):
+            pb = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(model.loss_fn)(pb, batch)
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            else:
+                # gradient accumulation: global batch constant, activation
+                # memory / n_micro. The fp32 accumulator is pinned to the
+                # param shardings so each microbatch's grads reduce-scatter
+                # instead of all-reducing replicated fp32 copies.
+                def micro(acc, mb):
+                    l, g = jax.value_and_grad(model.loss_fn)(pb, mb)
+                    al, ag = acc
+                    ag = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), ag, g)
+                    ag = _constrain_like_params(ag)
+                    return (al + l, ag), None
+
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]), batch
+                )
+                (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros(()), zeros), mbs)
+                loss = loss / n_micro
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+            params, opt_state = adamw_update(acfg, grads, opt_state, params)
+            return params, opt_state, loss
+
+        args = (abstract, opt_abs, batch_specs)
+        in_sh = (p_sh, opt_sh, b_sh)
+        out_sh = (p_sh, opt_sh, NamedSharding(mesh, PartitionSpec()))
+        fn = train_step
+    elif shape.kind == "prefill":
+        abstract = model.abstract(dtype=jnp.bfloat16)
+        p_sh = param_shardings(log_axes, abstract, mesh, fsdp=cfg.fsdp)
+        batch_specs, batch_axes = model.prefill_batch_spec(B, S, multimodal=True)
+        b_sh = _batch_shardings(batch_axes, batch_specs, mesh)
+        cache_axes = model.cache_axes(B, S, multimodal=True)
+        cache_sh = _tree_shardings(cache_axes, model.abstract_cache(B, S, multimodal=True), mesh)
+        logits_sh = NamedSharding(
+            mesh, resolve_pspec(("batch", "vocab"), (B, cfg.vocab_size), mesh, ACT_RULES)
+        )
+        fn = model.prefill
+        args = (abstract, batch_specs)
+        in_sh = (p_sh, b_sh)
+        out_sh = (logits_sh, cache_sh)
+    else:  # decode
+        abstract = model.abstract(dtype=jnp.bfloat16)
+        p_sh = param_shardings(log_axes, abstract, mesh, fsdp=cfg.fsdp)
+        cache_abs = model.abstract_cache(B, S, multimodal=True)
+        cache_axes = model.cache_axes(B, S, multimodal=True)
+        cache_sh = _tree_shardings(cache_axes, cache_abs, mesh)
+        batch_specs, batch_axes = model.decode_batch_spec(B)
+        b_sh = _batch_shardings(batch_axes, batch_specs, mesh)
+        logits_sh = NamedSharding(
+            mesh, resolve_pspec(("batch", "vocab"), (B, cfg.vocab_size), mesh, ACT_RULES)
+        )
+        fn = model.decode_step
+        args = (abstract, cache_abs, batch_specs)
+        in_sh = (p_sh, cache_sh, b_sh)
+        out_sh = (logits_sh, cache_sh)
+    return model, fn, args, in_sh, out_sh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = DEFAULT_OUT, verbose: bool = True,
+             extra_cfg: dict | None = None, tag: str = "",
+             kernelized: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_label(mesh),
+               "status": "skipped", "reason": reason}
+        _save(rec, out_dir, tag)
+        return rec
+
+    t0 = time.time()
+    model, fn, args, in_sh, out_sh = build_cell(arch, shape_name, mesh, extra_cfg=extra_cfg)
+    # donate params+opt (train) / caches (decode) — the production step
+    # aliases them, halving resident state at peak
+    donate = (0, 1) if shape.kind == "train" else ((1,) if shape.kind == "decode" else ())
+    with use_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mem = hlo_util.extract_memory(compiled)
+    raw_flops, raw_bytes = hlo_util.extract_cost(compiled)
+    hlo_text = compiled.as_text()
+    # loop-aware accounting: the partitioned module is the PER-DEVICE
+    # program; ×chips gives the global step cost. (cost_analysis counts
+    # while bodies once — wrong for scanned layers/microbatches; see
+    # utils.hlocost.)
+    from repro.utils import hlocost
+
+    cost = hlocost.analyze(hlo_text, kernelized=kernelized)
+
+    n_chips = int(np.prod(mesh.devices.shape))
+    model_flops = _model_flops(model, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_label(mesh),
+        "status": "ok",
+        "num_chips": n_chips,
+        "hlo_flops": cost.flops * n_chips,
+        "hlo_dot_flops": cost.dot_flops * n_chips,
+        "hlo_bytes": cost.bytes * n_chips,
+        "collective_bytes": cost.collective_bytes,  # per device
+        "collectives": {"bytes": cost.collective_by_kind, "count": cost.collective_count},
+        "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
+        "memory": mem,
+        "model_flops": model_flops,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "params": model.num_params(),
+        "active_params": model.active_params(),
+        "tag": tag,
+    }
+    if verbose:
+        per_dev = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        print(
+            f"[dryrun] {arch} × {shape_name} × {mesh_label(mesh)}: OK "
+            f"flops/dev={cost.flops:.3e} bytes/dev={cost.bytes:.3e} "
+            f"coll/dev={cost.collective_bytes:.3e} "
+            f"mem/dev={per_dev/2**30:.2f}GiB lower={t_lower:.0f}s compile={t_compile:.0f}s"
+        )
+        print("  memory_analysis:", {k: f"{v/2**30:.3f}GiB" for k, v in mem.items() if "size" in k})
+        print("  collectives:", {k: f"{v:.2e}B" for k, v in cost.collective_by_kind.items()})
+    _save(rec, out_dir, tag)
+    del compiled, lowered, jitted
+    gc.collect()
+    return rec
+
+
+def _model_flops(model, shape) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference steps."""
+    n = model.active_params()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * shape.tokens
+
+
+def _save(rec: dict, out_dir: str, tag: str = "") -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=list(SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration variants")
+    ap.add_argument("--kernelized", action="store_true",
+                    help="byte model with attention scores VMEM-resident (Pallas kernels)")
+    ap.add_argument("--override", default="", help="k=v,k=v config overrides")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCH_IDS
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    extra = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        extra[k] = (
+            int(v) if v.lstrip("-").isdigit() else
+            (v == "True") if v in ("True", "False") else v
+        )
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            try:
+                run_cell(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
+                         extra_cfg=extra or None, tag=args.tag,
+                         kernelized=args.kernelized)
+            except Exception:
+                failures += 1
+                print(f"[dryrun] {arch} × {shape}: FAILED", file=sys.stderr)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

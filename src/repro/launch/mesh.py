@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+``xla_force_host_platform_device_count`` before the first jax init, and
+tests/benchmarks must keep seeing 1 device.
+
+Mesh geometry (per assignment):
+  single-pod : (16, 16)      axes ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+Axis ordering puts "pod" outermost so every cross-pod collective factors
+into a hierarchical (ICI-inner, DCN-outer) schedule by construction; the
+logical-axis rules (repro.sharding) compose "batch" over ("pod", "data").
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many devices exist (CPU smoke tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_label(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

@@ -1,0 +1,96 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+The FaaSLight pipeline end-to-end: analyze → build two-tier artifact →
+timed cold start (before / after1 / after2) → serve a batch of generation
+requests through the on-demand engine. This is the paper's experiment
+harness in CLI form (benchmarks/bench_rq*.py drive the same path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced
+from repro.core import (
+    DeploymentProfile,
+    analyze,
+    build_artifact,
+    write_monolithic,
+)
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.models.zoo import build_model
+from repro.optim import init_adamw
+from repro.serving import GenerationEngine, cold_start
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", default="after2", choices=["before", "after1", "after2"])
+    ap.add_argument("--artifact-dir", default="artifacts")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-steps", type=int, default=8)
+    ap.add_argument("--resident-experts", type=int, default=1)
+    ap.add_argument("--hot-vocab", type=float, default=0.25)
+    ap.add_argument("--policy", default="stats", choices=["strict", "stats", "full"])
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    cfg = cfg.replace(collect_moe_usage=cfg.moe is not None)
+    model = build_model(cfg)
+    outdir = os.path.join(args.artifact_dir, cfg.name)
+
+    if args.policy == "strict":
+        profile = DeploymentProfile(resident_experts=0, hot_vocab_fraction=0.0,
+                                    min_tier1_bytes=1 << 14, vocab_row_group=max(64, cfg.vocab_size // 16))
+        stats = None
+    elif args.policy == "full":
+        profile = DeploymentProfile(resident_experts=-1, hot_vocab_fraction=1.0)
+        stats = None
+    else:  # stats
+        profile = DeploymentProfile(
+            resident_experts=args.resident_experts,
+            hot_vocab_fraction=args.hot_vocab,
+            min_tier1_bytes=1 << 14,
+            vocab_row_group=max(64, cfg.vocab_size // 16),
+        )
+        pipe = SyntheticTokenPipeline(DataConfig(cfg.vocab_size, 128, 8))
+        stats = pipe.vocab_row_stats(row_group=profile.vocab_row_group)
+
+    print(f"[serve] analyzing {cfg.name} under profile {profile.name}/{args.policy}")
+    result = analyze(model, profile, hot_units_stats=stats, trace_B=1, trace_S=32)
+    print("[serve] plan:", json.dumps(result.summary(), default=str)[:400])
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    os.makedirs(outdir, exist_ok=True)
+    if args.mode in ("before", "after1"):
+        write_monolithic({"params": params, "opt_state": {"m": opt.m, "v": opt.v}},
+                         outdir, pruned=args.mode == "after1")
+    else:
+        build_artifact(params, result, outdir)
+
+    server = cold_start(model, outdir, result if args.mode == "after2" else None,
+                        mode=args.mode, warm_shapes=((args.batch, args.prompt_len),))
+    print(f"[serve] cold start ({args.mode}):", json.dumps(server.report.to_dict(), default=float))
+
+    engine = GenerationEngine(server, max_seq=args.prompt_len + args.gen_steps + 8)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    out, stats_r = engine.generate(prompts, args.gen_steps)
+    print(f"[serve] generated {out.shape}; prefill={stats_r.prefill_s*1e3:.1f}ms "
+          f"decode={stats_r.decode_s*1e3:.1f}ms faults={stats_r.faulted_units} "
+          f"({stats_r.faulted_bytes/2**20:.1f}MiB, {stats_r.fault_s*1e3:.1f}ms)")
+    if server.tiered is not None:
+        print(f"[serve] resident fraction: {server.tiered.resident_fraction():.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

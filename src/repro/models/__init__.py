@@ -1,0 +1,3 @@
+from repro.models.zoo import Model, EntryPoint, build_model
+
+__all__ = ["Model", "EntryPoint", "build_model"]

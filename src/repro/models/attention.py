@@ -1,0 +1,514 @@
+"""Attention: GQA with RoPE (full / causal / sliding-window / local-global),
+memory-efficient "flash-style" chunked softmax in pure jnp (also the oracle
+for the Pallas kernels), decode attention over linear and rolling KV caches,
+DeepSeek MLA (expanded prefill + absorbed decode), and cross-attention.
+
+Memory discipline: no (S, S) score materialization anywhere — prefill_32k
+(and long-window training) would otherwise OOM at compile time in the
+dry-run. Softmax statistics are fp32 throughout.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import apply_rope
+from repro.models.spec import ParamSpec
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(d_model: int, num_heads: int, num_kv_heads: int, head_dim: int) -> dict:
+    return {
+        "wq": ParamSpec((d_model, num_heads * head_dim), ("embed", "heads")),
+        "wk": ParamSpec((d_model, num_kv_heads * head_dim), ("embed", "kv_heads")),
+        "wv": ParamSpec((d_model, num_kv_heads * head_dim), ("embed", "kv_heads")),
+        "wo": ParamSpec((num_heads * head_dim, d_model), ("heads", "embed")),
+    }
+
+
+def cross_attn_spec(d_model: int, num_heads: int, num_kv_heads: int, head_dim: int, mem_dim: int) -> dict:
+    spec = gqa_spec(d_model, num_heads, num_kv_heads, head_dim)
+    # modal:image — only reachable from multimodal entries (FaaSLight tier-1).
+    spec["wk"] = ParamSpec((mem_dim, num_kv_heads * head_dim), ("embed", "kv_heads"), access="modal:image")
+    spec["wv"] = ParamSpec((mem_dim, num_kv_heads * head_dim), ("embed", "kv_heads"), access="modal:image")
+    spec["wq"] = ParamSpec((d_model, num_heads * head_dim), ("embed", "heads"), access="modal:image")
+    spec["wo"] = ParamSpec((num_heads * head_dim, d_model), ("heads", "embed"), access="modal:image")
+    spec["gate"] = ParamSpec((1,), (None,), init="zeros", access="modal:image")
+    return spec
+
+
+def mla_spec(cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": ParamSpec((d, H * qd), ("embed", "heads")),
+        "w_dkv": ParamSpec((d, m.kv_lora_rank), ("embed", None)),
+        "w_kr": ParamSpec((d, m.qk_rope_head_dim), ("embed", None)),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="ones"),
+        "w_uk": ParamSpec((m.kv_lora_rank, H * m.qk_nope_head_dim), (None, "heads")),
+        "w_uv": ParamSpec((m.kv_lora_rank, H * m.v_head_dim), (None, "heads")),
+        "wo": ParamSpec((H * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core chunked attention (pure jnp flash)
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+def _softcap(s: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def flash_attention_jnp(
+    q: jax.Array,  # (B, Sq, H, hd) — roped already
+    k: jax.Array,  # (B, Sk, Hkv, hd)
+    v: jax.Array,  # (B, Sk, Hkv, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # attend to the last `window` positions (incl. self)
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+    softcap: Optional[float] = None,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+    differentiable: bool = True,
+) -> jax.Array:
+    """Memory-efficient attention; never materializes (Sq, Sk) scores.
+
+    ``differentiable=False`` (serving prefill): the q-chunk loop runs as a
+    lax.scan with a *dynamic* causal trip count — not reverse-differentiable,
+    but transient live ranges collapse to one (bq, bk) block instead of the
+    unrolled loop's O(nq) (the deepseek prefill_32k cell drops 27.8 → ~5 GiB
+    peak; EXPERIMENTS.md §Perf cell 3). Training keeps the Python-unrolled
+    static-trip form (exact triangle FLOPs AND grads).
+
+    Two regimes:
+      * windowed: each q-chunk attends to one dynamic k-slice of static size
+        (window + chunk_q) — sub-quadratic, used for local/SWA layers;
+      * general: online-softmax accumulation over k-chunks with a dynamic
+        trip count per q-chunk (causal skips future blocks *exactly*, so HLO
+        FLOPs match the true upper-triangle cost).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = hd**-0.5
+    out_dtype = q.dtype
+
+    # auto-scale the q chunk so the unrolled general path stays ≤ ~32 bodies
+    chunk_q = max(chunk_q, -(-Sq // 32))
+    cq = min(chunk_q, Sq)
+    # pad q to a multiple of cq
+    pad_q = (-Sq) % cq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nq = q.shape[1] // cq
+    qc = q.reshape(B, nq, cq, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)  # (nq,B,cq,Hkv,G,hd)
+
+    use_window = window is not None and Sk > (window + cq)
+
+    if use_window:
+        L = window + cq
+
+        def q_body(_, xs):
+            qi, qb = xs  # qb: (B,cq,Hkv,G,hd)
+            qs = qi * cq
+            start = jnp.clip(qs - window + 1 + q_offset, 0, Sk - L)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+            q_pos = qs + q_offset + jnp.arange(cq)
+            k_pos = start + jnp.arange(L)
+            # operands stay in model dtype; accumulation is fp32 (MXU-native
+            # mixed precision — avoids materializing fp32 q/k/v copies)
+            s = jnp.einsum(
+                "bqkgd,bskd->bqkgs", qb, kb, preferred_element_type=jnp.float32
+            )
+            s = _softcap(s * scale, softcap)
+            delta = q_pos[:, None] - k_pos[None, :]  # (cq, L)
+            mask = (delta >= 0) & (delta < window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum(
+                "bqkgs,bskd->bqkgd", p.astype(out_dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return None, o.astype(out_dtype)
+
+        # recompute window blocks in backward instead of saving (B,cq,·,L)
+        # score/prob tensors per step — flash-attention backward semantics
+        _, oc = jax.lax.scan(jax.checkpoint(q_body), None, (jnp.arange(nq), qc))
+    elif not differentiable:
+        ck = min(chunk_k, Sk)
+        pad_k = (-Sk) % ck
+        kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+        vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+        nk = kp.shape[1] // ck
+
+        def q_body(_, xs):
+            qi, qb = xs  # (B,cq,Hkv,G,hd)
+            qs = qi * cq
+            q_pos = qs + q_offset + jnp.arange(cq)
+            m0 = jnp.full((B, cq, Hkv, G), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, cq, Hkv, G), jnp.float32)
+            a0 = jnp.zeros((B, cq, Hkv, G, hd), jnp.float32)
+            # static trip count (masking handles causality): ~2× the exact
+            # triangle FLOPs, but the trip is visible to the loop-aware cost
+            # accounting AND transients stay one block. A real Pallas kernel
+            # skips masked blocks — reported via the kernelized model.
+            n_need = nk
+
+            def k_body(ki, carry):
+                m, l, acc = carry
+                kb = jax.lax.dynamic_slice_in_dim(kp, ki * ck, ck, axis=1)
+                vb = jax.lax.dynamic_slice_in_dim(vp, ki * ck, ck, axis=1)
+                k_pos = ki * ck + jnp.arange(ck)
+                s = jnp.einsum(
+                    "bqkgd,bskd->bqkgs", qb, kb, preferred_element_type=jnp.float32
+                )
+                s = _softcap(s * scale, softcap)
+                mask = k_pos[None, :] < Sk
+                if causal:
+                    mask = mask & (k_pos[None, :] <= q_pos[:, None])
+                if window is not None:
+                    mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+                maskb = mask[None, :, None, None, :]
+                s = jnp.where(maskb, s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None]) * maskb
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bqkgs,bskd->bqkgd", p.astype(out_dtype), vb,
+                    preferred_element_type=jnp.float32,
+                )
+                return m_new, l_new, acc_new
+
+            m, l, acc = jax.lax.fori_loop(0, n_need, k_body, (m0, l0, a0))
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            return None, o.astype(out_dtype)
+
+        _, oc = jax.lax.scan(q_body, None, (jnp.arange(nq), qc))
+    else:
+        ck = min(chunk_k, Sk)
+        pad_k = (-Sk) % ck
+        kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+        vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+        nk = kp.shape[1] // ck
+
+        # Python-unrolled q-chunk loop: per chunk the causal trip count is a
+        # *static* int, so the HLO FLOPs match the exact upper-triangle cost
+        # AND the whole thing is reverse-differentiable (a traced-bound
+        # fori_loop is not). nq is bounded by the chunk auto-scaling above.
+        o_chunks = []
+        for qi in range(nq):
+            qs = qi * cq
+            q_pos = qs + q_offset + jnp.arange(cq)
+            if causal:
+                n_need = min((qs + q_offset + cq + ck - 1) // ck, nk)
+            else:
+                n_need = nk
+            qf = qc[qi]  # model dtype; einsums accumulate fp32
+            kb_all = kp[:, : n_need * ck].reshape(B, n_need, ck, Hkv, hd).transpose(1, 0, 2, 3, 4)
+            vb_all = vp[:, : n_need * ck].reshape(B, n_need, ck, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+            def k_body(carry, xs, q_pos=q_pos, qf=qf):
+                m, l, acc = carry
+                ki, kb, vb = xs
+                k_pos = ki * ck + jnp.arange(ck)
+                s = jnp.einsum(
+                    "bqkgd,bskd->bqkgs", qf, kb, preferred_element_type=jnp.float32
+                )
+                s = _softcap(s * scale, softcap)
+                mask = k_pos[None, :] < Sk  # drop k padding
+                if causal:
+                    mask = mask & (k_pos[None, :] <= q_pos[:, None])
+                if window is not None:
+                    mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+                maskb = mask[None, :, None, None, :]
+                s = jnp.where(maskb, s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None]) * maskb
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bqkgs,bskd->bqkgd", p.astype(out_dtype), vb,
+                    preferred_element_type=jnp.float32,
+                )
+                return (m_new, l_new, acc_new), None
+
+            m0 = jnp.full((B, cq, Hkv, G), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, cq, Hkv, G), jnp.float32)
+            a0 = jnp.zeros((B, cq, Hkv, G, hd), jnp.float32)
+            # checkpointed body: backward saves only the (m, l, acc)
+            # carries per k-step and recomputes the score/prob blocks —
+            # O(S²/ck) extra FLOPs for an O(S²·B·H) memory cut
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(k_body), (m0, l0, a0), (jnp.arange(n_need), kb_all, vb_all)
+            )
+            o = acc / jnp.maximum(l, 1e-30)[..., None]
+            o_chunks.append(o.astype(out_dtype))
+        oc = jnp.stack(o_chunks, axis=0)
+
+    # (nq, B, cq, Hkv, G, hd) -> (B, Sq, H, hd)
+    o = oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * cq, H, hd)
+    return o[:, :Sq]
+
+
+def decode_attention_jnp(
+    q: jax.Array,  # (B, H, hd) — roped already
+    k_cache: jax.Array,  # (B, Skv, Hkv, hd)
+    v_cache: jax.Array,
+    kv_len: jax.Array,  # scalar or (B,) — number of valid cache entries
+    *,
+    rolling: bool = False,  # rolling (mod-window) cache layout
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention over a KV cache. For a rolling cache every slot is
+    valid once kv_len >= Skv (slot order is irrelevant to softmax)."""
+    B, H, hd = q.shape
+    _, Skv, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = hd**-0.5
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    s = _softcap(s * scale, softcap)
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((B,), kv_len)
+    idx = jnp.arange(Skv)
+    if rolling:
+        valid = idx[None, :] < jnp.minimum(kv_len, Skv)[:, None]
+    else:
+        valid = idx[None, :] < kv_len[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer (projections + rope + attention), train/prefill and decode
+# ---------------------------------------------------------------------------
+
+
+def gqa_forward(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (B, S)
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    return_kv: bool = False,
+    use_pallas: bool = False,
+    differentiable: bool = True,
+):
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)), H)
+    k = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype)), Hkv)
+    v = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype)), Hkv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        o = fa_ops.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=cfg.attn_logit_softcap
+        )
+    else:
+        o = flash_attention_jnp(
+            q, k, v, causal=causal, window=window, softcap=cfg.attn_logit_softcap,
+            differentiable=differentiable,
+        )
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], H * hd), params["wo"].astype(x.dtype))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, D)
+    pos: jax.Array,  # (B,) absolute position of the new token
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rolling_window: Optional[int] = None,
+):
+    """One decode step; returns (out, new_k_cache, new_v_cache).
+
+    Linear cache: write at index pos. Rolling cache (SWA/local layers): write
+    at pos % window; softmax is order-invariant so slot order is fine.
+    """
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B = x.shape[0]
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)), H)
+    k = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype)), Hkv)
+    v = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype)), Hkv)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)[:, 0]  # (B, H, hd)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)[:, 0]  # (B, Hkv, hd)
+    v = v[:, 0]
+
+    Skv = k_cache.shape[1]
+    slot = (pos % rolling_window) if rolling_window else pos
+    k_cache = _scatter_rows(k_cache, slot, k)
+    v_cache = _scatter_rows(v_cache, slot, v)
+    kv_len = pos + 1
+    o = decode_attention_jnp(
+        q, k_cache, v_cache, kv_len, rolling=rolling_window is not None, softcap=cfg.attn_logit_softcap
+    )
+    out = jnp.einsum("bh,hd->bd", o.reshape(B, H * hd), params["wo"].astype(x.dtype))
+    return out[:, None, :], k_cache, v_cache
+
+
+def _scatter_rows(cache: jax.Array, slot: jax.Array, row: jax.Array) -> jax.Array:
+    """cache (B, S, ...), slot (B,), row (B, ...) -> cache with row written at
+    [b, slot[b]] (per-sequence dynamic_update_slice — a scatter, not a full
+    cache rewrite)."""
+
+    def upd(c, s, r):
+        return jax.lax.dynamic_update_slice_in_dim(c, r[None], s, axis=0)
+
+    return jax.vmap(upd)(cache, slot, row)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): expanded prefill, absorbed decode over the latent cache
+# ---------------------------------------------------------------------------
+
+
+def mla_forward(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    return_cache: bool = False,
+):
+    """Prefill/train path (expanded heads). Cache = (latent c_kv, roped k_r)."""
+    from repro.models.layers import rmsnorm
+
+    m = cfg.mla
+    H = cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    B, S, _ = x.shape
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)), H)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(x.dtype))
+    c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_r = jnp.einsum("bsd,dr->bsr", x, params["w_kr"].astype(x.dtype))  # (B,S,rope)
+    k_r = apply_rope(k_r[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    k_nope = _split_heads(jnp.einsum("bsr,rh->bsh", c_kv, params["w_uk"].astype(x.dtype)), H)
+    value = _split_heads(jnp.einsum("bsr,rh->bsh", c_kv, params["w_uv"].astype(x.dtype)), H)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_r[:, :, None, :], (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v head_dim up to qd so flash kernel sees uniform hd, then trim
+    v_pad = jnp.pad(value, ((0, 0), (0, 0), (0, 0), (0, qd - m.v_head_dim)))
+    # serving prefill (return_cache) doesn't differentiate: scanned q loop
+    o = flash_attention_jnp(
+        q_full, k_full, v_pad, causal=True, differentiable=not return_cache
+    )[..., : m.v_head_dim]
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * m.v_head_dim), params["wo"].astype(x.dtype))
+    if return_cache:
+        return out, (c_kv, k_r)
+    return out
+
+
+def mla_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, D)
+    pos: jax.Array,  # (B,)
+    ckv_cache: jax.Array,  # (B, S, r)
+    kr_cache: jax.Array,  # (B, S, rope_dim)
+    cfg: ModelConfig,
+):
+    """Absorbed decode: queries projected into latent space; attention runs
+    over the compressed cache directly (TPU-native MLA — no per-step K/V
+    expansion; see DESIGN.md §7)."""
+    from repro.models.layers import rmsnorm
+
+    m = cfg.mla
+    H = cfg.num_heads
+    B = x.shape[0]
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = qd**-0.5
+
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)), H)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)[:, 0]  # (B,H,rope)
+    q_nope = q_nope[:, 0]  # (B,H,nope)
+
+    c_new = jnp.einsum("bd,dr->br", x[:, 0], params["w_dkv"].astype(x.dtype))
+    c_new = rmsnorm(c_new, params["kv_norm"], cfg.norm_eps)
+    kr_new = jnp.einsum("bd,dr->br", x[:, 0], params["w_kr"].astype(x.dtype))
+    kr_new = apply_rope(kr_new[:, None, None, :], pos[:, None], cfg.rope_theta)[:, 0, 0]
+
+    ckv_cache = _scatter_rows(ckv_cache[:, :, None, :], pos, c_new[:, None, :])[:, :, 0, :]
+    kr_cache = _scatter_rows(kr_cache[:, :, None, :], pos, kr_new[:, None, :])[:, :, 0, :]
+
+    w_uk = params["w_uk"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)  # absorb W_uk into q
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), ckv_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+    s = s * scale
+    valid = jnp.arange(ckv_cache.shape[1])[None, :] < (pos + 1)[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", p, ckv_cache.astype(jnp.float32)).astype(x.dtype)
+    w_uv = params["w_uv"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv)
+    out = jnp.einsum("bh,hd->bd", o.reshape(B, H * m.v_head_dim), params["wo"].astype(x.dtype))
+    return out[:, None, :], ckv_cache, kr_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder, VLM image layers)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_forward(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    memory_kv: tuple[jax.Array, jax.Array],  # precomputed (B, T, Hkv, hd) k/v
+    cfg: ModelConfig,
+    *,
+    gated: bool = False,
+):
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k, v = memory_kv
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)), H)
+    o = flash_attention_jnp(q, k, v, causal=False)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], H * hd), params["wo"].astype(x.dtype))
+    if gated:
+        out = out * jnp.tanh(params["gate"].astype(x.dtype))
+    return out
+
+
+def cross_attn_memory(params: dict, memory: jax.Array, cfg: ModelConfig):
+    """Project encoder/image memory to (k, v) once (cached across decode)."""
+    Hkv = cfg.num_kv_heads
+    k = _split_heads(jnp.einsum("btm,mh->bth", memory, params["wk"].astype(memory.dtype)), Hkv)
+    v = _split_heads(jnp.einsum("btm,mh->bth", memory, params["wv"].astype(memory.dtype)), Hkv)
+    return k, v

@@ -1,0 +1,144 @@
+"""Common layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, losses.
+
+All weights are 2D matrices (d_in, d_out); head structure is recovered by
+reshape at use time (keeps ParamSpec/fan-in/sharding uniform and MXU-friendly
+— the contracting dim stays a multiple of 128 for all full-size configs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 *variance accumulation* but model-dtype elementwise
+    math. Never materializes an fp32 copy of x — a full upcast here makes
+    XLA hoist an fp32 convert of the whole remat-saved activation stack out
+    of the backward layer loop (observed +16 GiB/device on the 88-layer
+    dry-run; see EXPERIMENTS.md §Perf)."""
+    # square in model dtype, accumulate in fp32: x's only consumers are then
+    # bf16 ops, so the convert stays on the layer-local square, not on x
+    sq = x * x
+    var = jnp.sum(sq, axis=-1, keepdims=True, dtype=jnp.float32) / x.shape[-1]
+    r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * r * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu_spec(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "w_down": ParamSpec((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+
+
+def gelu_mlp_spec(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_in": ParamSpec((d_model, d_ff), ("embed", "ffn")),
+        "w_out": ParamSpec((d_ff, d_model), ("ffn", "embed")),
+    }
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(x.dtype))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, d_model: int) -> ParamSpec:
+    # rows:0 — row-indexed access: the FaaSLight partitioner may tier vocab
+    # row-groups (hot rows resident, cold rows on demand).
+    return ParamSpec((vocab, d_model), ("vocab", "embed"), scale=1.0, access="rows:0")
+
+
+def embed(table: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def logits_from_embedding(x: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy; logits (..., V) in any float dtype, fp32 softmax."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_xent(x: jax.Array, table: jax.Array, labels: jax.Array, chunk: int) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits: scan over
+    sequence chunks, computing logits per chunk. ``chunk`` must divide S.
+
+    This is one of the beyond-paper memory optimizations (§Perf): for
+    gemma3-27b train_4k, whole-sequence logits are B·S·V·2 = 550 GB global.
+    """
+    B, S, D = x.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    xc = x.reshape(B, n, chunk, D).swapaxes(0, 1)  # (n, B, chunk, D)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(acc, xs):
+        xb, lb = xs
+        logits = logits_from_embedding(xb, table)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity-based
+gather/scatter dispatch (no (T, E, C) one-hot dispatch tensors — the gather
+formulation keeps activation memory at k·cf·T·d and active-FLOPs-exact
+compute, and shards as EP (experts over 'model') when E divides the axis,
+falling back to TP-within-expert otherwise; see repro.sharding).
+
+The routed expert tables are the canonical FaaSLight "optional functions":
+``access="routed"`` marks them for the tier-1 split, and
+``router_probs``/``experts_needed`` expose the router so the serving engine
+can pre-fault experts before dispatch (two-phase execution; DESIGN.md §4.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import swiglu, swiglu_spec
+from repro.models.spec import ParamSpec
+from repro.sharding import constrain
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    m: MoEConfig = cfg.moe
+    d, f, E = cfg.d_model, m.expert_d_ff, m.num_experts
+    spec = {
+        "router": ParamSpec((d, E), ("embed", None)),
+        "w_gate": ParamSpec((E, d, f), ("experts", "embed", "ffn"), access="routed"),
+        "w_up": ParamSpec((E, d, f), ("experts", "embed", "ffn"), access="routed"),
+        "w_down": ParamSpec((E, f, d), ("experts", "ffn", "embed"), access="routed"),
+    }
+    if m.num_shared_experts:
+        spec["shared"] = swiglu_spec(d, f * m.num_shared_experts)
+    return spec
+
+
+def router_probs(params: dict, x: jax.Array) -> jax.Array:
+    """(..., E) softmax router probabilities (fp32)."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), params["router"].astype(jnp.float32))
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def experts_needed(params: dict, x: jax.Array, top_k: int) -> jax.Array:
+    """(E,) bool — which experts this batch routes to (serving pre-fault)."""
+    probs = router_probs(params, x)
+    E = probs.shape[-1]
+    _, ids = jax.lax.top_k(probs, top_k)
+    return (jax.nn.one_hot(ids, E).sum(axis=tuple(range(ids.ndim))) > 0)
+
+
+def moe_forward(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    resident_mask: jax.Array | None = None,  # (E,) bool — strict-residency serving
+    return_aux: bool = False,
+    return_usage: bool = False,  # also return (E,) bool "expert touched" mask
+    serving: bool = False,  # inference dispatch: dropless (small T) / high-capacity
+):
+    m: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    T = B * S
+    xf = x.reshape(T, d)
+
+    probs = router_probs(params, xf)  # (T, E) fp32
+    if resident_mask is not None:
+        probs = jnp.where(resident_mask[None, :], probs, 0.0)
+    gate_w, ids = jax.lax.top_k(probs, k)  # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # capacity: active-token budget per expert. Training uses the config's
+    # capacity factor (dropped tokens are a regularizer and keep the
+    # dispatch shape hardware-friendly); serving must not drop tokens —
+    # decode batches are small enough for exact dropless dispatch (C = T),
+    # long prefills use a 2x factor (drops vanish at cf=2 in practice).
+    if serving and T <= 1024:
+        C = T
+    elif serving:
+        C = max(1, min(T, int(np.ceil(k * T * max(m.capacity_factor, 2.0) / E))))
+    else:
+        C = max(1, min(T, int(np.ceil(k * T * m.capacity_factor / E))))
+
+    flat_ids = ids.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(T * k), flat_ids]  # (T*k,)
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, flat_ids * C + pos_in_expert, E * C)  # sentinel slot
+
+    # scatter token indices into (E*C,) dispatch table
+    token_idx = jnp.arange(T * k) // k
+    table = jnp.full((E * C + 1,), T, dtype=jnp.int32).at[slot].set(token_idx, mode="drop")[: E * C]
+
+    xg = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)[table]  # (E*C, d)
+    xg = xg.reshape(E, C, d)
+    # NOTE dispatch-buffer sharding constraints were tried and REFUTED
+    # (EXPERIMENTS.md §Perf cell 1, iterations 1.1/1.2): pinning (experts,
+    # capacity) shardings forces all-to-all dispatch volumes larger than
+    # the partial-sum all-reduces XLA picks unconstrained.
+
+    g = jnp.einsum("ecd,edf->ecf", xg, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xg, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yg = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))  # (E, C, d)
+
+    # combine: gather each (token, j) slot's output, weight, and sum over k
+    yflat = yg.reshape(E * C, d)
+    yflat = jnp.concatenate([yflat, jnp.zeros((1, d), yflat.dtype)], axis=0)
+    per_slot = yflat[jnp.minimum(slot, E * C)]  # (T*k, d); dropped slots -> 0
+    per_slot = jnp.where(keep[:, None], per_slot, 0)
+    y = (per_slot.reshape(T, k, d) * gate_w[..., None].astype(x.dtype)).sum(axis=1)
+
+    if m.num_shared_experts:
+        y = y + swiglu(params["shared"], xf)
+
+    y = y.reshape(B, S, d)
+    usage = None
+    if return_usage:
+        # which experts this batch routed to (pre-capacity — a safe
+        # overapproximation for the serving engine's expert pre-fault)
+        usage = jnp.zeros((E,), bool).at[ids.reshape(-1)].set(True)
+    if return_aux:
+        # switch-style load-balance loss: E * sum_e f_e * P_e
+        f_e = jnp.mean(jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(1), axis=0)  # fraction routed
+        p_e = probs.mean(axis=0)
+        aux = E * jnp.sum(f_e / k * p_e)
+        return (y, aux, usage) if return_usage else (y, aux)
+    return (y, usage) if return_usage else y
+

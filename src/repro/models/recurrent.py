@@ -1,0 +1,134 @@
+"""Griffin/RecurrentGemma RG-LRU residual block.
+
+Temporal mixing:  y = W_out( GeLU(W_gate x) ⊙ RG-LRU(conv1d(W_in x)) )
+RG-LRU:           r_t = σ(W_r h_t + b_r); i_t = σ(W_i h_t + b_i)
+                  log a_t = -c · softplus(Λ) · r_t         (c = 8)
+                  s_t = a_t ⊙ s_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ h_t)
+
+Train/prefill uses an associative scan (log-space stable); decode is a
+single fused step. The Pallas kernel (repro.kernels.rglru_scan) implements
+the blocked time scan; this module is also its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import ParamSpec
+
+LRU_C = 8.0
+
+
+def rglru_block_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv_width
+    return {
+        "w_in": ParamSpec((d, w), ("embed", "ffn")),
+        "w_gate_branch": ParamSpec((d, w), ("embed", "ffn")),
+        "conv_w": ParamSpec((cw, w), (None, "ffn"), scale=0.5),
+        "conv_b": ParamSpec((w,), ("ffn",), init="zeros"),
+        "w_r": ParamSpec((w, w), ("ffn", None)),
+        "b_r": ParamSpec((w,), (None,), init="zeros"),
+        "w_i": ParamSpec((w, w), ("ffn", None)),
+        "b_i": ParamSpec((w,), (None,), init="zeros"),
+        "lam": ParamSpec((w,), (None,), init="lru_a"),
+        "w_out": ParamSpec((w, d), ("ffn", "embed")),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv over time. x (B,S,W), w (cw,W).
+
+    Returns (y, new_state) where state is the last (cw-1) inputs.
+    """
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype) for i in range(cw))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(cw - 1) :, :] if cw > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_state
+
+
+def _gates(params: dict, h: jax.Array):
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", h, params["w_r"].astype(h.dtype)).astype(jnp.float32)
+        + params["b_r"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", h, params["w_i"].astype(h.dtype)).astype(jnp.float32)
+        + params["b_i"].astype(jnp.float32)
+    )
+    log_a = -LRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * h.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_scan_jnp(params: dict, h: jax.Array, state: jax.Array | None = None):
+    """h (B,S,W) -> (out (B,S,W), final_state (B,W)). Associative scan over
+    s_t = a_t s_{t-1} + b_t."""
+    a, b = _gates(params, h)  # fp32 (B,S,W)
+    if state is not None:
+        # fold the carried state into the first step: b_0 += a_0 * s_prev
+        b = b.at[:, 0, :].add(a[:, 0, :] * state.astype(jnp.float32))
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return s.astype(h.dtype), s[:, -1, :]
+
+
+def rglru_step(params: dict, h: jax.Array, state: jax.Array):
+    """h (B,W) one step -> (out (B,W), new_state (B,W))."""
+    a, b = _gates(params, h[:, None, :])
+    s = a[:, 0] * state.astype(jnp.float32) + b[:, 0]
+    return s.astype(h.dtype), s
+
+
+def rglru_block_forward(params: dict, x: jax.Array, cfg: ModelConfig, *, use_pallas: bool = False):
+    """Prefill/train path. Returns (y, cache) with cache = {conv, lru}."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    h = jnp.einsum("bsd,dw->bsw", x, params["w_in"].astype(x.dtype))
+    h, conv_state = causal_conv1d(h, params["conv_w"], params["conv_b"])
+    if use_pallas:
+        from repro.kernels.rglru_scan import ops as lru_ops
+
+        a, b = _gates(params, h)
+        s = lru_ops.rglru_scan(a, b)
+        s_out, lru_state = s.astype(h.dtype), s[:, -1, :]
+    else:
+        s_out, lru_state = rglru_scan_jnp(params, h)
+    y = jnp.einsum("bsw,wd->bsd", gate * s_out, params["w_out"].astype(x.dtype))
+    return y, {"conv": conv_state, "lru": lru_state.astype(x.dtype)}
+
+
+def rglru_block_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """x (B,1,D) one step. Returns (y (B,1,D), new_cache)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    h = jnp.einsum("bsd,dw->bsw", x, params["w_in"].astype(x.dtype))
+    h, conv_state = causal_conv1d(h, params["conv_w"], params["conv_b"], state=cache["conv"])
+    s, lru_state = rglru_step(params, h[:, 0, :], cache["lru"])
+    y = jnp.einsum("bsw,wd->bsd", gate * s[:, None, :], params["w_out"].astype(x.dtype))
+    return y, {"conv": conv_state, "lru": lru_state.astype(x.dtype)}
+
+
+def rglru_abstract_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cw - 1, w), dtype),
+        "lru": jax.ShapeDtypeStruct((batch, w), dtype),
+    }

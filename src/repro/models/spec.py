@@ -1,0 +1,119 @@
+"""Parameter-spec machinery (mini module system, no flax).
+
+A model is defined once as a nested dict of ``ParamSpec`` leaves; from that
+single definition we derive:
+
+* concrete initialization (deterministic per-leaf keys via path hashing),
+* abstract parameters (``ShapeDtypeStruct`` — used by the dry-run and by the
+  FaaSLight Program Analyzer, neither of which may allocate),
+* logical sharding axes per leaf (consumed by ``repro.sharding``),
+* FaaSLight *access annotations*: whether a leaf is densely consumed by an
+  entry or sparsely/conditionally consumed (the seed information for tier
+  splitting — the model is the only layer that knows an expert table is
+  routed or an embedding is row-indexed).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import flatten_with_paths, tree_from_flat
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Axes  # logical axis names, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones | lru_a | scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+    # FaaSLight access annotation:
+    #   dense        — consumed in full by every invocation of its entries
+    #   rows:<axis>  — row-indexed (embeddings): only touched rows are used
+    #   routed       — expert-routed (leading axis = expert id)
+    #   modal:<name> — only consumed by entries of modality <name>
+    access: str = "dense"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_key(root: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(root, h)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    shape, dtype = spec.shape, spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "lru_a":
+        # RG-LRU recurrence parameter Λ: a = sigmoid(Λ)^(c) uniform in a
+        # stable band (Griffin init: a^2 ~ U[0.9, 0.999]).
+        u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+        a = jnp.sqrt(u)
+        c = 8.0
+        # Λ such that sigmoid(Λ) = a**(1/c)
+        lam = jnp.log(a ** (1 / c)) - jnp.log1p(-(a ** (1 / c)))
+        return lam.astype(dtype)
+    # fan-in scaled normal. Base weights are 2D (d_in, d_out); scan stacking
+    # prepends layer dims, so fan-in is always shape[-2] for ndim >= 2.
+    fan_in = shape[-2] if len(shape) >= 2 else 1
+    std = spec.scale / max(np.sqrt(fan_in), 1.0)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(spec_tree: Any, key: jax.Array, dtype_override: Any = None) -> dict:
+    flat = flatten_with_paths(spec_tree)
+    out = {}
+    for path, spec in flat:
+        leaf = _init_leaf(spec, _leaf_key(key, path))
+        if dtype_override is not None and jnp.issubdtype(leaf.dtype, jnp.floating):
+            leaf = leaf.astype(dtype_override)
+        out[path] = leaf
+    return tree_from_flat(out)
+
+
+def abstract_params(spec_tree: Any, dtype_override: Any = None) -> dict:
+    flat = flatten_with_paths(spec_tree)
+    out = {}
+    for path, spec in flat:
+        dt = dtype_override if dtype_override is not None else spec.dtype
+        out[path] = jax.ShapeDtypeStruct(spec.shape, dt)
+    return tree_from_flat(out)
+
+
+def logical_axes(spec_tree: Any) -> dict:
+    return tree_from_flat({p: s.axes for p, s in flatten_with_paths(spec_tree)})
+
+
+def access_annotations(spec_tree: Any) -> dict[str, str]:
+    """dotted-path -> access kind, for the FaaSLight partitioner."""
+    return {p: s.access for p, s in flatten_with_paths(spec_tree)}
+
+
+def stack_specs(spec_tree: Any, n: int, axis_name: Optional[str] = "layers") -> Any:
+    """Prepend a stacking dim of size ``n`` to every spec leaf (scan-over-
+    layers parameter stacking)."""
+
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            shape=(n,) + s.shape,
+            axes=(axis_name,) + s.axes,
+            init=s.init,
+            scale=s.scale,
+            dtype=s.dtype,
+            access=s.access,
+        )
+
+    return jax.tree.map(_stack, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))

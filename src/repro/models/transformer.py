@@ -1,0 +1,510 @@
+"""Decoder-stack assembly for all ten architecture families.
+
+Layers are grouped into the minimal repeating *unit* of the config's block
+pattern (1 for uniform stacks, 3 for RecurrentGemma's rec/rec/attn, 6 for
+Gemma-3's 5-local:1-global, 5 for the VLM's 4-self:1-cross, 2 for xLSTM's
+m/s) and the unit is scanned with stacked params — HLO size stays O(unit),
+not O(depth), which keeps the 88-/100-layer dry-run compiles tractable.
+
+Entry points (the FaaSLight "serverless functions", DESIGN.md §4.1):
+  loss_fn      — training forward + xent (train_4k)
+  prefill      — full forward, returns last-token logits + caches (prefill_32k)
+  decode_step  — one token against caches (decode_32k / long_500k)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import recurrent as rec_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    chunked_xent,
+    embed,
+    embedding_spec,
+    gelu_mlp,
+    gelu_mlp_spec,
+    logits_from_embedding,
+    rmsnorm,
+    rmsnorm_spec,
+    softmax_xent,
+    swiglu,
+    swiglu_spec,
+)
+from repro.models.spec import (
+    ParamSpec,
+    abstract_params,
+    access_annotations,
+    init_params,
+    logical_axes,
+    stack_specs,
+)
+from repro.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# block specs
+# ---------------------------------------------------------------------------
+
+
+def _mlp_spec(cfg: ModelConfig, layer_idx: int) -> dict:
+    if cfg.moe is not None:
+        if layer_idx < cfg.moe.first_dense_layers:
+            return {"dense": swiglu_spec(cfg.d_model, cfg.moe.dense_d_ff or cfg.d_ff)}
+        return {"moe": moe_mod.moe_spec(cfg)}
+    return {"dense": swiglu_spec(cfg.d_model, cfg.d_ff)}
+
+
+def block_spec(cfg: ModelConfig, kind: str, layer_idx: int) -> dict:
+    d = cfg.d_model
+    if kind in ("self", "local", "global", "attn"):
+        a = attn.mla_spec(cfg) if cfg.mla is not None else attn.gqa_spec(
+            d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        )
+        spec = {"norm1": rmsnorm_spec(d), "attn": a, "norm2": rmsnorm_spec(d)}
+        spec.update(_mlp_spec(cfg, layer_idx))
+        if cfg.encdec is not None:
+            spec["norm_x"] = rmsnorm_spec(d)
+            spec["cross"] = attn.gqa_spec(d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim)
+        return spec
+    if kind == "cross":  # VLM gated image cross-attention block
+        spec = {
+            "norm1": rmsnorm_spec(d),
+            "cross": attn.cross_attn_spec(
+                d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim, cfg.vlm.vision_dim
+            ),
+            "norm2": rmsnorm_spec(d),
+        }
+        mlp = _mlp_spec(cfg, layer_idx)
+        # the whole block only runs for multimodal requests; both halves are
+        # zero-init gated (Llama-3.2-vision: gate_attn AND gate_ffn)
+        spec.update(jax.tree.map(
+            lambda s: ParamSpec(s.shape, s.axes, s.init, s.scale, s.dtype, "modal:image"),
+            mlp, is_leaf=lambda x: isinstance(x, ParamSpec)))
+        spec["gate_ffn"] = ParamSpec((1,), (None,), init="zeros", access="modal:image")
+        return spec
+    if kind == "rec":
+        return {
+            "norm1": rmsnorm_spec(d),
+            "rglru": rec_mod.rglru_block_spec(cfg),
+            "norm2": rmsnorm_spec(d),
+            **_mlp_spec(cfg, layer_idx),
+        }
+    if kind == "m":
+        return {"norm": rmsnorm_spec(d), "mlstm": xlstm_mod.mlstm_block_spec(cfg)}
+    if kind == "s":
+        return {"norm": rmsnorm_spec(d), "slstm": xlstm_mod.slstm_block_spec(cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# stack layout: lead (unscanned) + scanned groups + tail (unscanned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StackLayout:
+    lead_kinds: tuple
+    unit_kinds: tuple  # kinds inside one scanned group
+    n_groups: int
+    tail_kinds: tuple
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.lead_kinds) + self.n_groups * len(self.unit_kinds) + len(self.tail_kinds)
+
+
+def stack_layout(cfg: ModelConfig) -> StackLayout:
+    kinds = list(cfg.attn_kinds)
+    lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    lead_kinds = tuple(kinds[:lead])
+    rest = kinds[lead:]
+    if cfg.recurrent is not None:
+        unit = len(cfg.recurrent.pattern)
+    elif cfg.xlstm is not None:
+        unit = len(cfg.xlstm.pattern)
+    elif cfg.local_global_pattern is not None:
+        unit = sum(cfg.local_global_pattern)
+    elif cfg.vlm is not None:
+        unit = cfg.vlm.cross_attn_every
+    else:
+        # uniform stacks: group layers_per_unit layers per scanned unit —
+        # the remat boundary count (and thus saved-activation memory)
+        # drops by the same factor at unchanged recompute cost
+        unit = cfg.layers_per_unit if len(rest) % max(cfg.layers_per_unit, 1) == 0 else 1
+    n_groups = len(rest) // unit
+    tail_kinds = tuple(rest[n_groups * unit :])
+    return StackLayout(lead_kinds, tuple(rest[:unit]), n_groups, tail_kinds)
+
+
+def stack_spec(cfg: ModelConfig) -> dict:
+    lay = stack_layout(cfg)
+    spec: dict = {"embed": embedding_spec(cfg.vocab_size, cfg.d_model)}
+    if cfg.tie_embeddings:
+        # tied tables are consumed densely by the logits matmul -> tier-0
+        e = spec["embed"]
+        spec["embed"] = ParamSpec(e.shape, e.axes, e.init, e.scale, e.dtype, access="dense")
+    else:
+        spec["head"] = ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+    if lay.lead_kinds:
+        spec["lead"] = {f"b{i}": block_spec(cfg, k, i) for i, k in enumerate(lay.lead_kinds)}
+    if lay.n_groups:
+        unit_spec = {f"u{j}": block_spec(cfg, k, len(lay.lead_kinds) + j) for j, k in enumerate(lay.unit_kinds)}
+        spec["groups"] = stack_specs(unit_spec, lay.n_groups)
+    if lay.tail_kinds:
+        spec["tail"] = {f"b{i}": block_spec(cfg, k, cfg.num_layers - len(lay.tail_kinds) + i)
+                        for i, k in enumerate(lay.tail_kinds)}
+    spec["final_norm"] = rmsnorm_spec(cfg.d_model)
+    if cfg.encdec is not None:
+        enc_block = {
+            "norm1": rmsnorm_spec(cfg.d_model),
+            "attn": attn.gqa_spec(cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim),
+            "norm2": rmsnorm_spec(cfg.d_model),
+            **{"dense": swiglu_spec(cfg.d_model, cfg.d_ff)},
+        }
+        # encoder params are only reachable from entries that take raw audio
+        enc_block = jax.tree.map(
+            lambda s: ParamSpec(s.shape, s.axes, s.init, s.scale, s.dtype, "modal:audio"),
+            enc_block, is_leaf=lambda x: isinstance(x, ParamSpec))
+        spec["encoder"] = {
+            "blocks": stack_specs(enc_block, cfg.encdec.num_encoder_layers),
+            "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones", access="modal:audio"),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# per-kind forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _kind_window(cfg: ModelConfig, kind: str) -> Optional[int]:
+    if kind == "attn":  # recurrentgemma local attention
+        return cfg.recurrent.window
+    if kind == "local":
+        return cfg.sliding_window
+    if kind == "global":
+        return None
+    return cfg.sliding_window  # "self": SWA if the config sets it (mixtral)
+
+
+def _stash_usage(cache, usage) -> None:
+    """Ride the expert-usage mask on the cache pytree (serving engine's
+    expert pre-fault signal; stripped by the engine before cache reuse)."""
+    if cache is not None and usage is not None:
+        cache["moe_usage"] = usage
+
+
+def _mlp_apply(cfg: ModelConfig, params: dict, x: jax.Array, *, serving: bool = False):
+    """Returns (y, usage) — usage is the (E,) expert-touched mask when the
+    config collects router stats (serving engine pre-fault), else None.
+    ``serving`` selects the dropless/high-capacity MoE dispatch."""
+    if "moe" in params:
+        if cfg.collect_moe_usage:
+            return moe_mod.moe_forward(params["moe"], x, cfg, return_usage=True, serving=serving)
+        return moe_mod.moe_forward(params["moe"], x, cfg, serving=serving), None
+    return swiglu(params["dense"], x), None
+
+
+def _block_forward(cfg, kind, params, x, positions, memory, collect_cache):
+    """Returns (x, cache_or_None). memory: dict with optional 'enc'/'image'."""
+    eps = cfg.norm_eps
+    cache = {}
+    if kind in ("self", "local", "global", "attn"):
+        h = rmsnorm(x, params["norm1"], eps)
+        if cfg.mla is not None:
+            o, kv = attn.mla_forward(params["attn"], h, positions, cfg, return_cache=True)
+            if collect_cache:
+                cache["ckv"], cache["kr"] = kv
+        else:
+            o, (k, v) = attn.gqa_forward(
+                params["attn"], h, positions, cfg,
+                causal=True, window=_kind_window(cfg, kind),
+                return_kv=True, use_pallas=cfg.use_pallas,
+                differentiable=not collect_cache,  # prefill never backprops
+            )
+            if collect_cache:
+                cache["k"], cache["v"] = k, v
+        x = x + o
+        if cfg.encdec is not None and memory.get("enc") is not None:
+            hx = rmsnorm(x, params["norm_x"], eps)
+            mem_kv = attn.cross_attn_memory(params["cross"], memory["enc"], cfg)
+            x = x + attn.cross_attn_forward(params["cross"], hx, mem_kv, cfg)
+            if collect_cache:
+                cache["xk"], cache["xv"] = mem_kv
+        h2 = rmsnorm(x, params["norm2"], eps)
+        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=collect_cache)
+        x = x + mlp_y
+        _stash_usage(cache if collect_cache else None, moe_usage)
+    elif kind == "cross":
+        if memory.get("image") is not None:
+            h = rmsnorm(x, params["norm1"], eps)
+            mem_kv = attn.cross_attn_memory(params["cross"], memory["image"], cfg)
+            x = x + attn.cross_attn_forward(params["cross"], h, mem_kv, cfg, gated=True)
+            if collect_cache:
+                cache["xk"], cache["xv"] = mem_kv
+            h2 = rmsnorm(x, params["norm2"], eps)
+            mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=collect_cache)
+            x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * mlp_y
+            _stash_usage(cache if collect_cache else None, moe_usage)
+        # text-only: the whole block is statically skipped (params unreachable)
+    elif kind == "rec":
+        h = rmsnorm(x, params["norm1"], eps)
+        o, c = rec_mod.rglru_block_forward(params["rglru"], h, cfg, use_pallas=cfg.use_pallas)
+        x = x + o
+        if collect_cache:
+            cache.update(c)
+        h2 = rmsnorm(x, params["norm2"], eps)
+        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=collect_cache)
+        x = x + mlp_y
+        _stash_usage(cache if collect_cache else None, moe_usage)
+    elif kind == "m":
+        h = rmsnorm(x, params["norm"], eps)
+        o, c = xlstm_mod.mlstm_block_forward(params["mlstm"], h, cfg)
+        x = x + o
+        if collect_cache:
+            cache.update(c)
+    elif kind == "s":
+        h = rmsnorm(x, params["norm"], eps)
+        o, c = xlstm_mod.slstm_block_forward(params["slstm"], h, cfg)
+        x = x + o
+        if collect_cache:
+            cache.update(c)
+    else:
+        raise ValueError(kind)
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, (cache if collect_cache else None)
+
+
+def _block_decode(cfg, kind, params, x, pos, cache, memory):
+    """x (B,1,D); returns (x, new_cache)."""
+    eps = cfg.norm_eps
+    new_cache = dict(cache)
+    if kind in ("self", "local", "global", "attn"):
+        h = rmsnorm(x, params["norm1"], eps)
+        if cfg.mla is not None:
+            o, ckv, kr = attn.mla_decode(params["attn"], h, pos, cache["ckv"], cache["kr"], cfg)
+            new_cache["ckv"], new_cache["kr"] = ckv, kr
+        else:
+            window = _kind_window(cfg, kind)
+            rolling = window if (window is not None and cache["k"].shape[1] == window) else None
+            o, kc, vc = attn.gqa_decode(
+                params["attn"], h, pos, cache["k"], cache["v"], cfg, rolling_window=rolling
+            )
+            new_cache["k"], new_cache["v"] = kc, vc
+        x = x + o
+        if cfg.encdec is not None and "xk" in cache:
+            hx = rmsnorm(x, params["norm_x"], eps)
+            x = x + attn.cross_attn_forward(params["cross"], hx, (cache["xk"], cache["xv"]), cfg)
+        h2 = rmsnorm(x, params["norm2"], eps)
+        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True)
+        x = x + mlp_y
+        _stash_usage(new_cache, moe_usage)
+    elif kind == "cross":
+        if "xk" in cache:
+            h = rmsnorm(x, params["norm1"], eps)
+            x = x + attn.cross_attn_forward(params["cross"], h, (cache["xk"], cache["xv"]), cfg, gated=True)
+            h2 = rmsnorm(x, params["norm2"], eps)
+            mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True)
+            x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * mlp_y
+            _stash_usage(new_cache, moe_usage)
+    elif kind == "rec":
+        h = rmsnorm(x, params["norm1"], eps)
+        o, c = rec_mod.rglru_block_decode(params["rglru"], h, cache, cfg)
+        x = x + o
+        new_cache.update(c)
+        h2 = rmsnorm(x, params["norm2"], eps)
+        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True)
+        x = x + mlp_y
+        _stash_usage(new_cache, moe_usage)
+    elif kind == "m":
+        h = rmsnorm(x, params["norm"], eps)
+        o, c = xlstm_mod.mlstm_block_decode(params["mlstm"], h, cache, cfg)
+        x = x + o
+        new_cache.update(c)
+    elif kind == "s":
+        h = rmsnorm(x, params["norm"], eps)
+        o, c = xlstm_mod.slstm_block_decode(params["slstm"], h, cache, cfg)
+        x = x + o
+        new_cache.update(c)
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full-stack forward
+# ---------------------------------------------------------------------------
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots_saveable":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def _encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper encoder: frames (B, T, d_model) precomputed embeddings (stub
+    frontend per assignment) + sinusoidal positions + non-causal self-attn."""
+    B, T, D = frames.shape
+    pos = jnp.arange(T)
+    half = D // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(frames.dtype)
+    x = frames + pe[None]
+    positions = jnp.broadcast_to(pos[None], (B, T))
+
+    def body(x, p):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        o = attn.gqa_forward(p["attn"], h, positions, cfg, causal=False, return_kv=False)
+        x = x + o
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + swiglu(p["dense"], h2)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["encoder"]["blocks"])
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward_hidden(cfg, params, tokens, *, memory=None, collect_cache=False):
+    """Embed + full stack. Returns (hidden (B,S,D), caches dict or None)."""
+    lay = stack_layout(cfg)
+    memory = memory or {}
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    caches: dict[str, Any] = {}
+
+    def apply_unscanned(section, kinds, base_idx):
+        nonlocal x
+        sec_caches = {}
+        for i, kind in enumerate(kinds):
+            x, c = _block_forward(cfg, kind, section[f"b{i}"], x, positions, memory, collect_cache)
+            if collect_cache:
+                sec_caches[f"b{i}"] = c
+        return sec_caches
+
+    if lay.lead_kinds:
+        caches["lead"] = apply_unscanned(params["lead"], lay.lead_kinds, 0)
+
+    if lay.n_groups:
+        # nested remat for multi-layer units: the scan saves only the group
+        # boundary; each block re-checkpoints so the group's backward
+        # recomputes one block at a time (transients stay O(1 layer) while
+        # saved boundaries shrink by layers_per_unit)
+        inner_remat = cfg.remat == "inner" and len(lay.unit_kinds) > 1
+
+        def block_step(kind, bp, x):
+            return _block_forward(cfg, kind, bp, x, positions, memory, collect_cache)
+
+        if inner_remat:
+            block_step = jax.checkpoint(block_step, static_argnums=(0,))
+
+        def group_body(x, gp):
+            cs = {}
+            for j, kind in enumerate(lay.unit_kinds):
+                x, c = block_step(kind, gp[f"u{j}"], x)
+                if collect_cache:
+                    cs[f"u{j}"] = c
+            return x, (cs if collect_cache else None)
+
+        x, group_caches = jax.lax.scan(_remat(cfg, group_body), x, params["groups"])
+        if collect_cache:
+            caches["groups"] = group_caches
+
+    if lay.tail_kinds:
+        caches_tail = apply_unscanned(params["tail"], lay.tail_kinds, 0)
+        if collect_cache:
+            caches["tail"] = caches_tail
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, (caches if collect_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# entries
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    memory = _memory_from_batch(cfg, params, batch)
+    hidden, _ = forward_hidden(cfg, params, batch["tokens"], memory=memory)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    if cfg.logits_chunk:
+        return chunked_xent(hidden, table, batch["labels"], cfg.logits_chunk)
+    logits = logits_from_embedding(hidden, table)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return softmax_xent(logits, batch["labels"])
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict):
+    """Returns (last-token logits (B, V), caches)."""
+    memory = _memory_from_batch(cfg, params, batch)
+    hidden, caches = forward_hidden(cfg, params, batch["tokens"], memory=memory, collect_cache=True)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = logits_from_embedding(hidden[:, -1, :], table)
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: dict, batch: dict):
+    """batch: tokens (B,1), pos (B,). Returns (logits (B,V), new caches)."""
+    lay = stack_layout(cfg)
+    tokens, pos = batch["tokens"], batch["pos"]
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    new_caches: dict[str, Any] = {}
+
+    if lay.lead_kinds:
+        sec = {}
+        for i, kind in enumerate(lay.lead_kinds):
+            x, c = _block_decode(cfg, kind, params["lead"][f"b{i}"], x, pos, caches["lead"][f"b{i}"], None)
+            sec[f"b{i}"] = c
+        new_caches["lead"] = sec
+
+    if lay.n_groups:
+        def group_body(x, xs):
+            gp, gc = xs
+            cs = {}
+            for j, kind in enumerate(lay.unit_kinds):
+                x, c = _block_decode(cfg, kind, gp[f"u{j}"], x, pos, gc[f"u{j}"], None)
+                cs[f"u{j}"] = c
+            return x, cs
+
+        x, group_caches = jax.lax.scan(group_body, x, (params["groups"], caches["groups"]))
+        new_caches["groups"] = group_caches
+
+    if lay.tail_kinds:
+        sec = {}
+        for i, kind in enumerate(lay.tail_kinds):
+            x, c = _block_decode(cfg, kind, params["tail"][f"b{i}"], x, pos, caches["tail"][f"b{i}"], None)
+            sec[f"b{i}"] = c
+        new_caches["tail"] = sec
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = logits_from_embedding(x[:, 0, :], table)
+    return logits, new_caches
+
+
+def _memory_from_batch(cfg: ModelConfig, params: dict, batch: dict) -> dict:
+    memory = {}
+    if cfg.encdec is not None and "frames" in batch:
+        memory["enc"] = _encode(cfg, params, batch["frames"])
+    if cfg.vlm is not None and "image_embeds" in batch:
+        memory["image"] = batch["image_embeds"]
+    return memory

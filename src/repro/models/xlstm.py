@@ -1,0 +1,317 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponentially gated — parallelizable)
+and sLSTM (scalar memory with nonlinear recurrence — sequential scan).
+
+Both use the stabilized exponential gating of the xLSTM paper
+(arXiv:2405.04517): a running stabilizer m keeps exp(i), exp(f) bounded.
+
+Shapes follow the "block" form of the paper: mLSTM blocks up-project by
+``proj_factor_m`` and are self-contained (no separate FFN); sLSTM blocks run
+the cell at d_model with a gated FFN tail.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.recurrent import causal_conv1d
+from repro.models.spec import ParamSpec
+
+
+def _groupnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head layernorm (GroupNorm with one group per head). x (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    xc = cfg.xlstm
+    di = int(d * xc.proj_factor_m)  # inner width
+    H = cfg.num_heads
+    return {
+        "w_up": ParamSpec((d, 2 * di), ("embed", "ffn")),
+        "conv_w": ParamSpec((xc.conv_width, di), (None, "ffn"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("ffn",), init="zeros"),
+        "w_q": ParamSpec((di, di), ("ffn", None)),
+        "w_k": ParamSpec((di, di), ("ffn", None)),
+        "w_v": ParamSpec((di, di), ("ffn", None)),
+        "w_if": ParamSpec((di, 2 * H), ("ffn", None), scale=0.1),
+        "b_if": ParamSpec((2 * H,), (None,), init="zeros"),
+        "gn_scale": ParamSpec((di,), ("ffn",), init="ones"),
+        "w_down": ParamSpec((di, d), ("ffn", "embed")),
+    }
+
+
+def _mlstm_heads(x: jax.Array, H: int) -> jax.Array:
+    b, s, di = x.shape
+    return x.reshape(b, s, H, di // H)
+
+
+def mlstm_scan(q, k, v, log_i, log_f, state=None):
+    """Stabilized mLSTM recurrence via lax.scan over time.
+
+    q,k,v: (B,S,H,hd) fp32; log_i/log_f: (B,S,H) fp32.
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)) or None.
+    Returns (h (B,S,H,hd) fp32, final_state).
+    """
+    B, S, H, hd = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs  # (B,H,hd) ... (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        i_bar = jnp.exp(li - m_new)[..., None]
+        f_bar = jnp.exp(lf + m - m_new)[..., None]
+        C = f_bar[..., None] * C + i_bar[..., None] * (kt[..., :, None] * vt[..., None, :])
+        n = f_bar * n + i_bar * kt
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new))[..., None]
+        h = jnp.einsum("bhdk,bhd->bhk", C, qt) / denom
+        return (C, n, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        log_i.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int, state=None):
+    """Chunkwise-parallel stabilized mLSTM (xLSTM paper §App; GLA lineage).
+
+    Mathematically identical to ``mlstm_scan`` (the stabilizer max
+    telescopes across chunk boundaries) but processes time in blocks of
+    ``chunk``: intra-chunk contributions use an (L, L) masked score matrix
+    (MXU-friendly), inter-chunk contributions flow through the carried
+    state. Memory for backward drops from O(S) per-step carries to
+    O(S/chunk) chunk-boundary carries — the reason xlstm train_4k fits
+    HBM at all (see EXPERIMENTS.md §Perf).
+
+    q,k,v: (B,S,H,hd) fp32 (k pre-scaled by 1/sqrt(hd));
+    log_i/log_f: (B,S,H) fp32. Returns ((B,S,H,hd) fp32, final_state).
+    """
+    B, S, H, hd = q.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    L = chunk
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    # (n, B, L, H, ...) chunked views, time-major over chunks
+    qc = q.reshape(B, n, L, H, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, n, L, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n, L, H, hd).transpose(1, 0, 2, 3, 4)
+    lic = log_i.reshape(B, n, L, H).transpose(1, 0, 2, 3)
+    lfc = log_f.reshape(B, n, L, H).transpose(1, 0, 2, 3)
+
+    def chunk_step(carry, xs):
+        C, nvec, m_prev = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        qb, kb, vb, li, lf = xs  # (B,L,H,hd) / (B,L,H)
+        # cumulative log decay INCLUDING step t: B_t = sum_{s<=t} lf_s
+        Bcum = jnp.cumsum(lf, axis=1)  # (B,L,H)
+        # u_s = li_s - B_s; running max M_t = max_{s<=t} u_s
+        u = li - Bcum
+        M = jax.lax.cummax(u, axis=1)
+        # stabilizer: m_t = max(B_t + m_prev, B_t + M_t), per (B,L,H)
+        m_t = Bcum + jnp.maximum(m_prev[:, None, :], M)
+        # inter-chunk: exp(B_t + m_prev - m_t) * q_t C_prev   [C already
+        # carries exp(-m_prev) scaling from the previous chunk]
+        w_inter = jnp.exp(Bcum + m_prev[:, None, :] - m_t)  # (B,L,H)
+        h_inter = jnp.einsum("blhd,bhdk->blhk", qb, C) * w_inter[..., None]
+        n_inter = jnp.einsum("blhd,bhd->blh", qb, nvec) * w_inter
+        # intra-chunk: D_{t,s} = exp(B_t - B_s + li_s - m_t) for s <= t
+        # log D = (B_t - m_t)[t] + (li - B)[s]
+        logD = (Bcum - m_t)[:, :, None, :] + u[:, None, :, :]  # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(causal[None, :, :, None], jnp.exp(logD), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) * D
+        h_intra = jnp.einsum("btsh,bshd->bthd", scores, vb)
+        n_intra = scores.sum(axis=2)  # (B,L,H)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_t))[..., None]
+        h = (h_inter + h_intra) / denom
+        # carry to next chunk (t = L row of the same stabilized recurrence)
+        BL = Bcum[:, -1, :]  # (B,H)
+        m_next = m_t[:, -1, :]
+        w_C = jnp.exp(BL + m_prev - m_next)  # (B,H)
+        w_s = jnp.exp(BL[:, None, :] - Bcum + li - m_next[:, None, :])  # (B,L,H)
+        C_next = w_C[..., None, None] * C + jnp.einsum(
+            "blh,blhd,blhk->bhdk", w_s, kb, vb
+        )
+        n_next = w_C[..., None] * nvec + jnp.einsum("blh,blhd->bhd", w_s, kb)
+        return (C_next, n_next, m_next), h
+
+    (C, nvec, m), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc)
+    )
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return h, (C, nvec, m)
+
+
+def _mlstm_qkv(params, x, cfg, conv_state=None):
+    xc = cfg.xlstm
+    H = cfg.num_heads
+    up = jnp.einsum("bsd,dw->bsw", x, params["w_up"].astype(x.dtype))
+    z, o_gate = jnp.split(up, 2, axis=-1)
+    zc, conv_state = causal_conv1d(z, params["conv_w"], params["conv_b"], state=conv_state)
+    zc = jax.nn.silu(zc.astype(jnp.float32)).astype(x.dtype)
+    q = _mlstm_heads(jnp.einsum("bsw,wv->bsv", zc, params["w_q"].astype(x.dtype)), H).astype(jnp.float32)
+    k = _mlstm_heads(jnp.einsum("bsw,wv->bsv", zc, params["w_k"].astype(x.dtype)), H).astype(jnp.float32)
+    v = _mlstm_heads(jnp.einsum("bsw,wv->bsv", z, params["w_v"].astype(x.dtype)), H).astype(jnp.float32)
+    k = k / jnp.sqrt(jnp.float32(k.shape[-1]))
+    gates = jnp.einsum("bsw,wg->bsg", zc, params["w_if"].astype(x.dtype)).astype(jnp.float32) + params[
+        "b_if"
+    ].astype(jnp.float32)
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)  # (B,S,H) each
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid(f)
+    return q, k, v, log_i, log_f, o_gate, conv_state
+
+
+def mlstm_block_forward(params: dict, x: jax.Array, cfg: ModelConfig):
+    H = cfg.num_heads
+    q, k, v, log_i, log_f, o_gate, conv_state = _mlstm_qkv(params, x, cfg)
+    S = x.shape[1]
+    chunk = cfg.xlstm.chunk_size
+    if S > chunk and S % chunk == 0:
+        h, state = mlstm_chunkwise(q, k, v, log_i, log_f, chunk)
+    else:
+        h, state = mlstm_scan(q, k, v, log_i, log_f)
+    h = h.astype(x.dtype).reshape(x.shape[0], x.shape[1], -1)
+    h = _groupnorm(_mlstm_heads(h, H), params["gn_scale"].reshape(H, -1)).reshape(h.shape)
+    h = h * jax.nn.silu(o_gate.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", h, params["w_down"].astype(x.dtype))
+    cache = {"C": state[0], "n": state[1], "m": state[2], "conv": conv_state}
+    return y, cache
+
+
+def mlstm_block_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    H = cfg.num_heads
+    q, k, v, log_i, log_f, o_gate, conv_state = _mlstm_qkv(params, x, cfg, conv_state=cache["conv"])
+    h, state = mlstm_scan(q, k, v, log_i, log_f, state=(cache["C"], cache["n"], cache["m"]))
+    h = h.astype(x.dtype).reshape(x.shape[0], 1, -1)
+    h = _groupnorm(_mlstm_heads(h, H), params["gn_scale"].reshape(H, -1)).reshape(h.shape)
+    h = h * jax.nn.silu(o_gate.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", h, params["w_down"].astype(x.dtype))
+    return y, {"C": state[0], "n": state[1], "m": state[2], "conv": conv_state}
+
+
+def mlstm_abstract_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    xc = cfg.xlstm
+    di = int(cfg.d_model * xc.proj_factor_m)
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "C": jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, H), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, xc.conv_width - 1, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_block_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    xc = cfg.xlstm
+    f = int(d * xc.proj_factor_s)
+    return {
+        "w_zifo": ParamSpec((d, 4 * d), ("embed", "ffn")),
+        "r_zifo": ParamSpec((H, hd, 4 * hd), (None, None, None), scale=0.5),
+        "b_zifo": ParamSpec((4 * d,), ("ffn",), init="zeros"),
+        "gn_scale": ParamSpec((d,), ("embed",), init="ones"),
+        "ffn_up": ParamSpec((d, 2 * f), ("embed", "ffn")),
+        "ffn_down": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def _slstm_cell_step(params, xt, carry, H, hd):
+    """xt: (B, 4*d) pre-activation from input; carry: (c, n, h, m) each (B,H,hd)
+    except m (B,H,hd) too (per-channel stabilizer)."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,hdk->bhk", h, params["r_zifo"].astype(h.dtype))  # (B,H,4*hd)
+    pre = xt.reshape(xt.shape[0], H, 4 * hd).astype(jnp.float32) + rec.astype(jnp.float32)
+    z, i_raw, f_raw, o_raw = jnp.split(pre, 4, axis=-1)  # (B,H,hd)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_raw)
+    log_f = -jax.nn.softplus(-f_raw)  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    i_bar = jnp.exp(i_raw - m_new)
+    f_bar = jnp.exp(log_f + m - m_new)
+    c = f_bar * c + i_bar * z
+    n = f_bar * n + i_bar
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_cell(params, x_pre, cfg, state=None):
+    """x_pre (B,S,4d). Returns (h (B,S,H,hd) fp32, state)."""
+    B, S, _ = x_pre.shape
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((B, H, hd), -1e30, jnp.float32))
+
+    def step(carry, xt):
+        return _slstm_cell_step(params, xt, carry, H, hd)
+
+    state, hs = jax.lax.scan(step, state, x_pre.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2, 3), state
+
+
+def _slstm_tail(params, h, x, cfg):
+    B, S = x.shape[0], x.shape[1]
+    H = cfg.num_heads
+    h = _groupnorm(h.astype(x.dtype), params["gn_scale"].reshape(H, -1)).reshape(B, S, -1)
+    up = jnp.einsum("bsd,df->bsf", h, params["ffn_up"].astype(x.dtype))
+    a, b = jnp.split(up, 2, axis=-1)
+    hf = jax.nn.gelu(a.astype(jnp.float32)).astype(x.dtype) * b
+    return jnp.einsum("bsf,fd->bsd", hf, params["ffn_down"].astype(x.dtype))
+
+
+def slstm_block_forward(params: dict, x: jax.Array, cfg: ModelConfig):
+    x_pre = jnp.einsum("bsd,dk->bsk", x, params["w_zifo"].astype(x.dtype)) + params["b_zifo"].astype(x.dtype)
+    h, state = slstm_cell(params, x_pre, cfg)
+    y = _slstm_tail(params, h, x, cfg)
+    return y, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+
+
+def slstm_block_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    x_pre = jnp.einsum("bsd,dk->bsk", x, params["w_zifo"].astype(x.dtype)) + params["b_zifo"].astype(x.dtype)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    h, state = slstm_cell(params, x_pre, cfg, state=state)
+    y = _slstm_tail(params, h, x, cfg)
+    return y, {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+
+
+def slstm_abstract_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    sd = jax.ShapeDtypeStruct((batch, H, hd), jnp.float32)
+    return {"c": sd, "n": sd, "h": sd, "m": sd}

@@ -1,0 +1,35 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    abstract_adamw,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_adamw,
+    warmup_cosine,
+)
+from repro.optim.compression import (
+    EFState,
+    abstract_error_feedback,
+    compressed_psum,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "abstract_adamw",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "init_adamw",
+    "warmup_cosine",
+    "EFState",
+    "abstract_error_feedback",
+    "compressed_psum",
+    "dequantize_int8",
+    "init_error_feedback",
+    "quantize_int8",
+]

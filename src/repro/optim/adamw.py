@@ -1,0 +1,115 @@
+"""AdamW + global-norm clipping + LR schedules (pure pytree transforms; no
+optax in the container). Moments are stored in fp32 regardless of param
+dtype; the update is computed in fp32 and cast back.
+
+The optimizer state is the canonical FaaSLight "optional collection": 2×
+param bytes that no serving entry can ever reach — the Program Analyzer's
+file-elimination stage drops it from serving artifacts (core.file_elim).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # int32 scalar
+    m: Any  # fp32 pytree
+    v: Any  # fp32 pytree
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # decay is skipped for 1-D leaves (norm scales / biases), per convention
+    decay_min_ndim: int = 2
+
+
+def init_adamw(params: Any) -> AdamWState:
+    # m and v must be *distinct* buffers (donation forbids aliased inputs)
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def abstract_adamw(abstract_params: Any) -> AdamWState:
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), m=z, v=z)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: Optional[jax.Array] = None,
+) -> tuple[Any, AdamWState]:
+    """Returns (new_params, new_state). ``lr`` overrides cfg.lr (schedules)."""
+    if cfg.clip_norm:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr_t = cfg.lr if lr is None else lr
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= cfg.decay_min_ndim:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr_t * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1) -> Callable:
+    """step (int32 array) -> lr (fp32 array); jit-safe."""
+
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return sched

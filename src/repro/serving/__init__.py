@@ -1,0 +1,13 @@
+"""Serving: cold-start manager (before/after1/after2 modes, residency
+policies) + batched generation engine with on-demand fault-in."""
+
+from repro.serving.cold_start import ColdStartReport, ColdStartServer, cold_start
+from repro.serving.engine import GenerationEngine, RequestStats
+
+__all__ = [
+    "ColdStartReport",
+    "ColdStartServer",
+    "cold_start",
+    "GenerationEngine",
+    "RequestStats",
+]

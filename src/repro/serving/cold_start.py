@@ -1,0 +1,196 @@
+"""Cold-start manager: artifact → serving-ready state, with the paper's
+three variants measured end to end.
+
+Phases mirror Fig. 1 of the paper, adapted per DESIGN.md §2:
+
+  read    — storage → host RAM (the paper's "application transmission")
+  upload  — host → device + placeholder allocation ("code loading", part 1)
+  compile — XLA compilation of the warm entry set ("code loading", part 2 —
+            the interpreter-import analogue)
+
+Modes:
+  before — monolithic bundle: every collection read, all params uploaded
+  after1 — collection-pruned bundle (① Optional File Elimination applied)
+  after2 — two-tier artifact: tier-0 read+uploaded, tier-1 placeholder-
+           allocated, hot units preloaded from the optional store; misses
+           fault in at request time (the full FaaSLight pipeline)
+
+Residency policies (DESIGN.md §4.2):
+  strict — tier-0 only (resident_experts=0, cold vocab tail)
+  stats  — + units hot in offline profiles (router/vocab statistics)
+  full   — everything resident (≈ *before* performance, tiered layout)
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import tensorstore_lite as tsl
+from repro.core.analyzer import AnalysisResult
+from repro.core.on_demand import TieredParams
+from repro.core.optional_store import OptionalStore
+from repro.models.zoo import Model
+from repro.utils.tree import flatten_with_paths, tree_from_flat
+
+
+@dataclass
+class ColdStartReport:
+    mode: str
+    read_s: float = 0.0
+    upload_s: float = 0.0
+    compile_s: float = 0.0
+    bytes_read: int = 0
+    bytes_uploaded: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.read_s + self.upload_s + self.compile_s
+
+    def to_dict(self) -> dict:
+        return {
+            "mode": self.mode,
+            "read_s": self.read_s,
+            "upload_s": self.upload_s,
+            "compile_s": self.compile_s,
+            "total_s": self.total_s,
+            "bytes_read": self.bytes_read,
+            "bytes_uploaded": self.bytes_uploaded,
+        }
+
+
+def _block_until_ready(tree: Any) -> None:
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+class ColdStartServer:
+    """A cold-started model server: live params + compiled warm entries."""
+
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        report: ColdStartReport,
+        *,
+        tiered: Optional[TieredParams] = None,
+        store: Optional[OptionalStore] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.report = report
+        self.tiered = tiered
+        self.store = store
+        self._compiled: dict[tuple, Callable] = {}
+
+    # -- warm-set / on-demand compilation ------------------------------------
+    def compiled_prefill(self, B: int, S: int):
+        key = ("prefill", B, S)
+        if key not in self._compiled:
+            fn = jax.jit(lambda p, b: self.model.prefill(p, b))
+            self._compiled[key] = fn
+        return self._compiled[key]
+
+    def compiled_decode(self, B: int):
+        key = ("decode", B)
+        if key not in self._compiled:
+            fn = jax.jit(lambda p, c, b: self.model.decode_step(p, c, b))
+            self._compiled[key] = fn
+        return self._compiled[key]
+
+    def live_params(self) -> Any:
+        return self.tiered.tree() if self.tiered is not None else self.params
+
+
+def cold_start(
+    model: Model,
+    artifact_dir: str,
+    result: Optional[AnalysisResult] = None,
+    *,
+    mode: str = "after2",
+    warm_shapes: tuple = ((1, 64),),  # (B, S) pairs to pre-compile
+    compile_warm_set: bool = True,
+    put: Optional[Callable] = None,  # leaf device_put override (sharded serving)
+) -> ColdStartServer:
+    """Run one timed cold start. ``result`` is required for after2."""
+    put = put or (lambda host: jax.device_put(host))
+    report = ColdStartReport(mode=mode)
+    abstract = model.abstract()
+
+    if mode in ("before", "after1"):
+        prefix = os.path.join(artifact_dir, mode)
+        t0 = time.perf_counter()
+        flat = tsl.read_bundle(prefix, mmap=False)  # move all bytes
+        report.bytes_read = sum(v.nbytes for v in flat.values())
+        t1 = time.perf_counter()
+        # upload the params collection only (other collections have no
+        # device-side consumer at serving time, but their bytes were read)
+        pflat = {
+            p[len("params."):]: v for p, v in flat.items() if p.startswith("params.")
+        }
+        tree = tree_from_flat({p: put(v) for p, v in pflat.items()})
+        _block_until_ready(tree)
+        t2 = time.perf_counter()
+        report.read_s, report.upload_s = t1 - t0, t2 - t1
+        report.bytes_uploaded = sum(v.nbytes for v in pflat.values())
+        server = ColdStartServer(model, tree, report)
+    elif mode == "after2":
+        if result is None:
+            raise ValueError("after2 cold start needs the AnalysisResult (plan)")
+        plan = result.plan
+        t0 = time.perf_counter()
+        tier0 = tsl.read_bundle(os.path.join(artifact_dir, "tier0"), mmap=False)
+        store = OptionalStore(os.path.join(artifact_dir, "optional.blob"))
+        report.bytes_read = sum(v.nbytes for v in tier0.values())
+        t1 = time.perf_counter()
+        flat_abs = dict(flatten_with_paths(abstract))
+        live_flat = {}
+        for path, leaf in flat_abs.items():
+            if plan.decisions[path].tier == 0:
+                live_flat[path] = put(tier0[path])
+            else:
+                # the rewritten stub: placeholder zeros, full shape/sharding
+                live_flat[path] = put(np.zeros(leaf.shape, leaf.dtype))
+        tree = tree_from_flat(live_flat)
+        _block_until_ready(tree)
+        tiered = TieredParams(tree, plan, store)
+        # preload the hot set (the paper's offline-profiled module-init list)
+        hot = [k for d in plan.decisions.values() for k in d.resident_units]
+        moved = tiered.ensure(hot) if hot else 0
+        t2 = time.perf_counter()
+        report.read_s, report.upload_s = t1 - t0, t2 - t1
+        report.bytes_uploaded = report.bytes_read + moved
+        server = ColdStartServer(model, tree, report, tiered=tiered, store=store)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    if compile_warm_set:
+        t3 = time.perf_counter()
+        p = server.live_params()
+        for B, S in warm_shapes:
+            pb, _ = model.prefill_batch_spec(B, S, multimodal=False)
+            pb.pop("frames", None)
+            pb.pop("image_embeds", None)
+            fn = server.compiled_prefill(B, S)
+            _ = fn.lower(p, _zeros_batch(pb)).compile()
+            dfn = server.compiled_decode(B)
+            cache = model.abstract_cache(B, S, multimodal=False)
+            db, _ = model.decode_batch_spec(B)
+            _ = dfn.lower(p, _abs_zeros(cache), _zeros_batch(db)).compile()
+        report.compile_s = time.perf_counter() - t3
+    return server
+
+
+def _zeros_batch(spec: dict) -> dict:
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in spec.items()}
+
+
+def _abs_zeros(tree: Any) -> Any:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree)

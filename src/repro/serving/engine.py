@@ -1,0 +1,200 @@
+"""Batched generation engine with on-demand fault-in (the request path).
+
+The request loop implements the paper's runtime contract: execution never
+fails on a cold unit — it *faults*. Two fault classes:
+
+  * vocab rows — exact pre-fault: the ids a step will embed are known
+    before the step runs, so the engine ensures their row-groups first
+    (zero retries, the paper's best case);
+  * routed experts — detected post-hoc from the step's router-usage masks
+    (riding the cache pytree, see models.transformer._stash_usage); a miss
+    faults the expert units in and re-runs the step. Because routing can
+    shift once real weights replace placeholders, the retry iterates to a
+    fixed point (bounded; ≤3 in practice — measured in RQ4).
+
+Decode caches round-trip through the engine, which strips the usage masks
+before the next step (they are outputs, not state).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.cold_start import ColdStartServer
+from repro.utils.tree import flatten_with_paths
+
+MAX_FAULT_RETRIES = 3
+
+
+@dataclass
+class RequestStats:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    fault_s: float = 0.0
+    prefill_retries: int = 0
+    decode_retries: int = 0
+    faulted_bytes: int = 0
+    faulted_units: int = 0
+    steps: int = 0
+
+
+def _strip_usage(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {k: _strip_usage(v) for k, v in tree.items() if k != "moe_usage"}
+    return tree
+
+
+def _usage_masks(caches: Any) -> dict[str, np.ndarray]:
+    return {
+        p: np.asarray(v)
+        for p, v in flatten_with_paths(caches)
+        if p.endswith("moe_usage")
+    }
+
+
+class GenerationEngine:
+    def __init__(self, server: ColdStartServer, *, max_seq: int = 256):
+        self.server = server
+        self.model = server.model
+        self.max_seq = max_seq
+        self._expert_units_index = self._build_expert_index()
+
+    # -- expert usage → unit keys --------------------------------------------
+    def _build_expert_index(self) -> dict[str, list[str]]:
+        """usage path ("groups.u0.moe_usage") -> expert-table param paths."""
+        tiered = self.server.tiered
+        if tiered is None:
+            return {}
+        idx: dict[str, list[str]] = {}
+        for path, dec in tiered.plan.decisions.items():
+            if dec.granularity != "expert" or dec.tier != 1:
+                continue
+            # "<prefix>.moe.w_gate" is signalled by "<prefix>.moe_usage"
+            prefix = path.rsplit(".moe.", 1)[0]
+            idx.setdefault(f"{prefix}.moe_usage", []).append(path)
+        return idx
+
+    def _expert_keys_from_usage(self, usage: dict[str, np.ndarray]) -> list[str]:
+        tiered = self.server.tiered
+        keys: list[str] = []
+        for upath, mask in usage.items():
+            for table in self._expert_units_index.get(upath, ()):
+                if mask.ndim == 2:  # scanned: (n_groups, E)
+                    for l, e in zip(*np.nonzero(mask)):
+                        keys.append(f"{table}#l{l}e{e}")
+                else:  # unscanned: (E,)
+                    for e in np.nonzero(mask)[0]:
+                        keys.append(f"{table}#e{e}")
+        return [k for k in keys if not tiered.is_resident(k)]
+
+    # -- vocab pre-fault -------------------------------------------------------
+    def _prefault_rows(self, tokens: np.ndarray, stats: RequestStats) -> None:
+        tiered = self.server.tiered
+        if tiered is None:
+            return
+        dec = tiered.plan.decisions.get("embed")
+        if dec is None or dec.tier != 1 or dec.granularity != "rows":
+            return
+        group = dec.units[0].rows[1] - dec.units[0].rows[0]
+        needed = {f"embed#rg{g}" for g in np.unique(np.asarray(tokens) // group)}
+        miss = [k for k in needed if not tiered.is_resident(k)]
+        if miss:
+            t0 = time.perf_counter()
+            moved = tiered.ensure(miss)
+            stats.fault_s += time.perf_counter() - t0
+            stats.faulted_bytes += moved
+            stats.faulted_units += len(miss)
+
+    def _fault_experts(self, caches: Any, stats: RequestStats) -> bool:
+        """Fault any experts the last step routed to. True if faults occurred."""
+        tiered = self.server.tiered
+        if tiered is None:
+            return False
+        miss = self._expert_keys_from_usage(_usage_masks(caches))
+        if not miss:
+            return False
+        t0 = time.perf_counter()
+        moved = tiered.ensure(miss)
+        stats.fault_s += time.perf_counter() - t0
+        stats.faulted_bytes += moved
+        stats.faulted_units += len(miss)
+        return True
+
+    # -- request path -----------------------------------------------------------
+    def generate(
+        self,
+        tokens: jax.Array,  # (B, S) prompt
+        n_steps: int,
+        *,
+        greedy: bool = True,
+    ) -> tuple[np.ndarray, RequestStats]:
+        model, server = self.model, self.server
+        stats = RequestStats()
+        B, S = tokens.shape
+        S_max = self.max_seq
+        assert S + n_steps <= S_max, (S, n_steps, S_max)
+
+        prefill = server.compiled_prefill(B, S)
+        decode = server.compiled_decode(B)
+
+        # exact vocab pre-fault for the prompt
+        self._prefault_rows(np.asarray(tokens), stats)
+
+        # prefill with expert-retry to fixed point
+        t0 = time.perf_counter()
+        batch = {"tokens": tokens}
+        logits, caches = prefill(server.live_params(), batch)
+        for _ in range(MAX_FAULT_RETRIES):
+            if not self._fault_experts(caches, stats):
+                break
+            stats.prefill_retries += 1
+            logits, caches = prefill(server.live_params(), batch)
+        jax.block_until_ready(logits)
+        stats.prefill_s = time.perf_counter() - t0 - stats.fault_s
+
+        # move prefill caches into a max-length decode cache
+        caches = _strip_usage(caches)
+        big = model.init_cache(B, S_max, multimodal=False)
+        caches = _graft_prefill_cache(big, caches)
+
+        out = [np.asarray(jnp.argmax(logits, -1), np.int32)]
+        t1 = time.perf_counter()
+        fault_before_decode = stats.fault_s
+        for step in range(n_steps - 1):
+            tok = jnp.asarray(out[-1])[:, None]
+            self._prefault_rows(np.asarray(tok), stats)
+            pos = jnp.full((B,), S + step, jnp.int32)
+            dbatch = {"tokens": tok, "pos": pos}
+            logits, new_caches = decode(server.live_params(), caches, dbatch)
+            for _ in range(MAX_FAULT_RETRIES):
+                if not self._fault_experts(new_caches, stats):
+                    break
+                stats.decode_retries += 1
+                logits, new_caches = decode(server.live_params(), caches, dbatch)
+            caches = _strip_usage(new_caches)
+            out.append(np.asarray(jnp.argmax(logits, -1), np.int32))
+            stats.steps += 1
+        jax.block_until_ready(logits)
+        stats.decode_s = time.perf_counter() - t1 - (stats.fault_s - fault_before_decode)
+        return np.stack(out, axis=1), stats
+
+
+def _graft_prefill_cache(big: Any, small: Any) -> Any:
+    """Write prefill-sized K/V prefixes into max-length zero caches; carry
+    states (lru/mlstm/conv/latent) transfer as-is."""
+
+    def graft(b, s):
+        s = jnp.asarray(s)
+        if b.shape == s.shape:
+            return s
+        # match leading dims; write the prefix along the (single) seq axis
+        idx = tuple(slice(0, d) for d in s.shape)
+        return b.at[idx].set(s)
+
+    return jax.tree.map(graft, big, small)

@@ -1,0 +1,21 @@
+from repro.sharding.rules import (
+    ACT_RULES,
+    PARAM_RULES,
+    constrain,
+    current_mesh,
+    param_shardings,
+    resolve_pspec,
+    set_rules,
+    use_mesh,
+)
+
+__all__ = [
+    "ACT_RULES",
+    "PARAM_RULES",
+    "constrain",
+    "current_mesh",
+    "param_shardings",
+    "resolve_pspec",
+    "set_rules",
+    "use_mesh",
+]

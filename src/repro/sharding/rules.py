@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules → PartitionSpec resolution.
+
+Every param leaf carries logical axis names (from its ParamSpec); activations
+are constrained at block boundaries with logical names. Rules map logical
+names to *ordered candidate lists* of mesh axes; resolution is greedy with
+divisibility checks and first-wins conflict handling, so the same rule set
+works across all ten architectures (e.g. kv_heads=8 on a 16-way model axis
+simply falls back to replication instead of failing).
+
+Parallelism coverage (DESIGN.md §6):
+  DP   — "batch" → ("pod", "data")
+  FSDP — params' "embed" → "data" (toggle: ModelConfig.fsdp)
+  TP   — "heads"/"ffn"/"vocab" → "model"
+  EP   — "experts" → "model" (divisibility-gated, else TP-within-expert)
+  SP   — "kv_seq"/"seq_shard" → "model" for long-context decode
+  PP   — separate stage-axis pipeline in repro.training.pipeline
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.utils.tree import flatten_axes_tree, flatten_with_paths, tree_from_flat
+
+# logical axis -> ordered mesh-axis candidates (first divisible unused wins)
+PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "embed": ("data",),  # FSDP: shard the d_model dim of weights over data
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),
+}
+
+ACT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    # boundary-only context parallelism: the scan-carried layer-boundary
+    # activation (= the remat-saved residual) shards its seq dim over
+    # "model"; inside the block the first consumer re-gathers it. Sharding
+    # seq *inside* blocks would double-book the model axis against TP
+    # (ffn/heads) and makes XLA all-gather entire weight matrices instead
+    # (observed 13 TB/device/step; see EXPERIMENTS.md §Perf).
+    "seq_shard": ("model",),
+    "embed": (),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "kv_seq": ("model",),  # SP: shard long KV caches over model
+    # MoE dispatch-buffer capacity dim: token-parallel over the batch axes.
+    # Without this XLA contracts expert matmuls over the FSDP-sharded embed
+    # dim and all-reduces (E, C, f) partial sums — 289 GB/device/step on
+    # deepseek train_4k (EXPERIMENTS.md §Perf cell 1).
+    "moe_cap": (),  # variant B: capacity replicated (EP-only dispatch)
+}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.param_rules = dict(PARAM_RULES)
+        self.act_rules = dict(ACT_RULES)
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], param_rules: Optional[dict] = None, act_rules: Optional[dict] = None):
+    """Ambient mesh + rules for constrain()/param_shardings()."""
+    old = (_STATE.mesh, _STATE.param_rules, _STATE.act_rules)
+    _STATE.mesh = mesh
+    if param_rules is not None:
+        _STATE.param_rules = dict(param_rules)
+    if act_rules is not None:
+        _STATE.act_rules = dict(act_rules)
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.param_rules, _STATE.act_rules = old
+
+
+def set_rules(param_rules: Optional[dict] = None, act_rules: Optional[dict] = None) -> None:
+    if param_rules is not None:
+        _STATE.param_rules = dict(param_rules)
+    if act_rules is not None:
+        _STATE.act_rules = dict(act_rules)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def resolve_pspec(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: dict[str, tuple[str, ...]],
+) -> PartitionSpec:
+    """Greedy, divisibility-aware logical->physical resolution.
+
+    A logical axis may map to a *group* of mesh axes (e.g. batch ->
+    ("pod", "data")): the group is taken as one PartitionSpec entry when the
+    dim is divisible by the combined size, otherwise we retry with suffixes
+    of the group, otherwise replicate.
+    """
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    entries: list = []
+    for dim, name in zip(shape, axes):
+        assigned = None
+        if name is not None:
+            cands = rules.get(name, ())
+            # composite assignment: try the full candidate tuple, then suffixes
+            group = [a for a in cands if a in mesh_sizes and a not in used]
+            while group:
+                size = int(np.prod([mesh_sizes[a] for a in group]))
+                if dim % size == 0:
+                    assigned = tuple(group)
+                    used.update(group)
+                    break
+                group = group[1:]
+        if assigned is None:
+            entries.append(None)
+        elif len(assigned) == 1:
+            entries.append(assigned[0])
+        else:
+            entries.append(assigned)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def param_shardings(logical_tree, abstract_tree, mesh: Optional[Mesh] = None, fsdp: bool = True):
+    """Tree of NamedShardings matching an abstract param tree."""
+    mesh = mesh or _STATE.mesh
+    rules = dict(_STATE.param_rules)
+    if not fsdp:
+        rules["embed"] = ()
+    flat_axes = dict(flatten_axes_tree(logical_tree))
+    out = {}
+    for path, leaf in flatten_with_paths(abstract_tree):
+        axes = flat_axes[path]
+        spec = resolve_pspec(axes, leaf.shape, mesh, rules)
+        out[path] = NamedSharding(mesh, spec)
+    return tree_from_flat(out)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint under the ambient mesh; no-op without one."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    spec = resolve_pspec(axes, x.shape, mesh, _STATE.act_rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

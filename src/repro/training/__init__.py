@@ -1,0 +1,20 @@
+from repro.training.pipeline import gpipe_forward, gpipe_loss_fn
+from repro.training.train_loop import (
+    TrainConfig,
+    Trainer,
+    TrainResult,
+    make_train_step,
+    reshard_for_mesh,
+)
+from repro.training.watchdog import StragglerWatchdog
+
+__all__ = [
+    "TrainConfig",
+    "Trainer",
+    "TrainResult",
+    "make_train_step",
+    "reshard_for_mesh",
+    "StragglerWatchdog",
+    "gpipe_forward",
+    "gpipe_loss_fn",
+]

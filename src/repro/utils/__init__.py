@@ -1,0 +1,19 @@
+"""Shared utilities: pytree path handling, statistics, HLO/roofline analysis."""
+
+from repro.utils.tree import (
+    flatten_with_paths,
+    leaf_paths,
+    path_str,
+    tree_from_flat,
+    tree_bytes,
+    tree_num_params,
+)
+
+__all__ = [
+    "flatten_with_paths",
+    "leaf_paths",
+    "path_str",
+    "tree_from_flat",
+    "tree_bytes",
+    "tree_num_params",
+]

@@ -1,0 +1,233 @@
+"""HLO text analysis: collective-byte accounting + roofline terms.
+
+The dry-run (launch/dryrun.py) lowers and compiles every
+(arch × shape × mesh) cell. ``compiled.cost_analysis()`` exposes FLOPs and
+bytes-accessed, but *not* collective traffic — we recover that by parsing the
+optimized HLO text and summing operand sizes of every collective op
+(§ROOFLINE ANALYSIS in the assignment).
+
+Hardware model (TPU v5e, per assignment):
+  peak bf16 compute : 197 TFLOP/s / chip
+  HBM bandwidth     : 819 GB/s / chip
+  ICI link bandwidth: ~50 GB/s / link
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, asdict
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "s32": 4,
+    "u32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "bf16": 2,
+    "f16": 2,
+    "f32": 4,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  bf16[256,4096,512]{2,1,0}   or  f32[]   or  (f32[8], u32[8])
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+    "ragged-all-to-all",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[dims]' occurrence."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * nbytes
+
+
+@dataclass
+class CollectiveStats:
+    """Per-collective-kind byte totals for one HLO module (output-shape bytes,
+    the standard proxy for traffic volume per participant)."""
+
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective instruction in HLO text.
+
+    We parse instruction lines of the form
+      ``%name = <shape(s)> <opcode>(...)``
+    and attribute the *result* bytes to the opcode. ``-start`` variants are
+    counted; their ``-done`` halves are skipped to avoid double counting.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3 :]
+        # rhs starts with the result shape, then the opcode.
+        m = re.match(r"(\(?[a-z0-9]+\[[0-9,]*\][^ ]*\)?(?:, [^ ]+)*)\s+([a-z0-9-]+)", rhs)
+        if not m:
+            continue
+        shapes_str, opcode = m.groups()
+        kind = None
+        for c in _COLLECTIVE_OPS:
+            if opcode == c or opcode == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        nbytes = sum(_shape_bytes(x) for x in _SHAPE_RE.findall(shapes_str) for x in [f"{x[0]}[{x[1]}]"])
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    """Three-term roofline for one compiled (arch, shape, mesh) cell.
+
+    All terms are *seconds for the whole step on the whole mesh*, i.e. the
+    per-chip serial time assuming perfect overlap within each term.
+    """
+
+    arch: str
+    shape: str
+    mesh: str
+    num_chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    bytes_per_device: float = 0.0
+    collective_detail: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.num_chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.num_chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # collective_bytes is already per-participant volume (result bytes);
+        # each chip moves its share over its ICI links.
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is 'useful'."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / max term — 1.0 means compute-bound at peak."""
+        b = self.bound_s
+        return self.compute_s / b if b else 0.0
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            useful_flops_ratio=self.useful_flops_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def extract_cost(compiled) -> tuple[float, float]:
+    """(flops, bytes_accessed) from compiled.cost_analysis(), robust to the
+    dict/list-of-dicts signature differences across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return flops, nbytes
+
+
+def extract_memory(compiled) -> dict:
+    """Bytes-per-device figures from compiled.memory_analysis()."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def dense_model_flops(num_params: int, tokens: int) -> float:
+    """6·N·D rule of thumb for a train step; callers pass active params for
+    MoE and divide by 3 for inference (2·N·D)."""
+    return 6.0 * num_params * tokens

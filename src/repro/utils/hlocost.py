@@ -1,0 +1,322 @@
+"""Loop-aware HLO cost analysis (FLOPs / bytes / collectives).
+
+``compiled.cost_analysis()`` counts every while-loop *body once* — for a
+scan-over-layers program that under-reports FLOPs by the layer count, and
+for a gradient-accumulation scan by the microbatch count (verified
+empirically; see EXPERIMENTS.md §Roofline methodology). This module parses
+``compiled.as_text()`` and propagates *execution counts* through the
+computation graph instead:
+
+  * while-loop trip counts come from XLA's own loop analysis
+    (``backend_config={"known_trip_count":{"n":…}}``),
+  * fusions contribute their operand+result bytes (a fusion is one kernel:
+    internals never touch HBM) and their internal dot FLOPs,
+  * collective bytes are result-shape bytes × execution count, per kind.
+
+FLOPs are exact for dot/convolution (2·M·N·K) and 1/element for marked
+elementwise math; bytes are the fused top-level traffic model — both are
+deliberately *structural* quantities, reproducible from the HLO alone.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# opcodes that move no HBM bytes of their own
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "custom-call", "opt-barrier",
+}
+
+# byte-counted opcodes (fusion-optimistic TPU model): ONLY ops that
+# necessarily touch HBM on a TPU backend count traffic. XLA:CPU leaves
+# converts/copies/transposes/elementwise unfused (inflating naive byte sums
+# ~100×); on TPU those fuse into neighbouring kernels. Fusions count their
+# operands+result (one kernel = one HBM round trip); standalone layout or
+# elementwise ops are assumed fuseable and free.
+_HBM_OPS = {
+    "dot", "fusion", "convolution", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "reduce", "reduce-window", "sort", "rng",
+    "rng-bit-generator", "concatenate", "pad",
+}
+
+_ELEMENTWISE_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "floor", "ceil", "sine", "cosine",
+    "convert", "reduce",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes inside a (possibly tuple) type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        b = _DTYPE_BYTES.get(dt)
+        if b:
+            total += _shape_elems(dims) * b
+    return total
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.match(type_str.lstrip("("))
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    return dt, tuple(int(d) for d in dims.split(",") if d)
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operand_str: str
+    attrs: str
+
+    def operand_names(self) -> list:
+        return re.findall(r"%([\w.\-]+)", self.operand_str)
+
+
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s+=\s+(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def parse_hlo(text: str) -> tuple[dict, str]:
+    """-> ({computation: [Instr]}, entry_name)."""
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if not m or cur is None:
+            continue
+        name, rhs = m.groups()
+        op_m = _OPCODE_RE.search(rhs)
+        if not op_m:
+            continue
+        opcode = op_m.group(1)
+        type_str = rhs[: op_m.start()].strip()
+        # balanced-paren operand region
+        i = op_m.end()
+        depth = 1
+        j = i
+        while j < len(rhs) and depth:
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+            j += 1
+        comps[cur].append(
+            Instr(name, type_str, opcode, rhs[i : j - 1], rhs[j:])
+        )
+    return comps, entry
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = field(default_factory=dict)
+    collective_count: dict = field(default_factory=dict)
+    dot_flops: float = 0.0
+
+    def add_collective(self, kind: str, nbytes: float, count: float) -> None:
+        self.collective_bytes += nbytes
+        self.collective_by_kind[kind] = self.collective_by_kind.get(kind, 0.0) + nbytes
+        self.collective_count[kind] = self.collective_count.get(kind, 0.0) + count
+
+
+def _dot_flops(instr: Instr, types: dict) -> float:
+    _, out_shape = _first_shape(instr.type_str)
+    ops = instr.operand_names()
+    if not ops:
+        return 0.0
+    lhs_type = types.get(ops[0], "")
+    _, lhs_shape = _first_shape(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs + instr.operand_str)
+    k = 1
+    if m and lhs_shape:
+        for d in m.group(1).split(","):
+            if d:
+                k *= lhs_shape[int(d)]
+    out_elems = 1
+    for d in out_shape:
+        out_elems *= d
+    return 2.0 * out_elems * k
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_read_bytes(comps: dict, types_by_comp: dict, comp: str) -> float:
+    """HBM bytes a fused kernel reads: per fusion parameter, if every use
+    inside the fusion is a slice/gather, only the sliced windows move (the
+    loop-carried xs-slice pattern); otherwise the full parameter moves."""
+    instrs = comps.get(comp, ())
+    types = types_by_comp.get(comp, {})
+    uses: dict[str, list] = {}
+    params = []
+    for i in instrs:
+        if i.opcode == "parameter":
+            params.append(i)
+        for o in i.operand_names():
+            uses.setdefault(o, []).append(i)
+    total = 0.0
+    for p in params:
+        consumers = uses.get(p.name, [])
+        if consumers and all(c.opcode in _SLICE_OPS for c in consumers):
+            total += sum(_type_bytes(c.type_str) for c in consumers)
+        else:
+            total += _type_bytes(p.type_str)
+    return total
+
+
+# op_name markers of attention-score producers/consumers. Under the Pallas
+# flash kernels (repro.kernels) these tensors are VMEM-resident: the
+# "kernelized" byte model skips their HBM traffic, quantifying the kernels'
+# effect on the memory roofline term (EXPERIMENTS.md §Perf). Conservative:
+# the softmax elementwise chain between the two matmuls stays counted.
+VMEM_SCORE_MARKERS = (
+    "->bqkgs", "bqkgs,",  # flash attention QK^T / PV
+    "->btsh", "btsh,",    # chunkwise mLSTM intra-chunk scores
+    "->bkgs", "bkgs,",    # decode attention
+    "->bhs", "bhs,",      # MLA decode scores
+)
+
+
+def analyze(text: str, *, kernelized: bool = False) -> HloCost:
+    skip_markers = VMEM_SCORE_MARKERS if kernelized else ()
+    comps, entry = parse_hlo(text)
+    cost = HloCost()
+    # result-type symbol table per computation
+    types_by_comp = {
+        c: {i.name: i.type_str for i in instrs} for c, instrs in comps.items()
+    }
+
+    def walk(comp: str, mult: float, bytes_on: bool) -> None:
+        types = types_by_comp.get(comp, {})
+        for instr in comps.get(comp, ()):  # noqa: B007
+            op = instr.opcode
+            if op == "while":
+                m = _TRIP_RE.search(instr.attrs)
+                trip = float(m.group(1)) if m else 1.0
+                bm = re.search(r"body=%?([\w.\-]+)", instr.attrs)
+                if bm:
+                    walk(bm.group(1), mult * trip, bytes_on)
+                continue
+            if op == "conditional":
+                for b in re.findall(r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*%([\w.\-]+)", instr.attrs):
+                    walk(b, mult, bytes_on)
+                continue
+            if op == "call":
+                cm = re.search(r"to_apply=%?([\w.\-]+)", instr.attrs)
+                if cm:
+                    walk(cm.group(1), mult, bytes_on)
+                continue
+            if op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+                skip = any(m in instr.attrs for m in skip_markers)
+                if cm:
+                    walk(cm.group(1), mult, False)  # flops only inside fusions
+                    if bytes_on and not skip:
+                        b = _type_bytes(instr.type_str) + _fusion_read_bytes(
+                            comps, types_by_comp, cm.group(1)
+                        )
+                        cost.bytes += b * mult
+                elif bytes_on and not skip:
+                    b = _type_bytes(instr.type_str) + sum(
+                        _type_bytes(types.get(o, "")) for o in instr.operand_names()
+                    )
+                    cost.bytes += b * mult
+                continue
+
+            kind = None
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                kind = base
+            if kind is not None and not op.endswith("-done"):
+                nb = _type_bytes(instr.type_str)
+                cost.add_collective(kind, nb * mult, mult)
+                if bytes_on:
+                    cost.bytes += nb * mult
+                continue
+
+            if op == "dot":
+                f = _dot_flops(instr, types) * mult
+                cost.flops += f
+                cost.dot_flops += f
+                if bytes_on and not any(m in instr.attrs for m in skip_markers):
+                    b = _type_bytes(instr.type_str) + sum(
+                        _type_bytes(types.get(o, "")) for o in instr.operand_names()
+                    )
+                    cost.bytes += b * mult
+                continue
+
+            if op in _ELEMENTWISE_FLOPS:
+                _, out_shape = _first_shape(instr.type_str)
+                n = 1
+                for d in out_shape:
+                    n *= d
+                cost.flops += n * mult
+
+            if bytes_on and op in _HBM_OPS and not any(m in instr.attrs for m in skip_markers):
+                ops_names = instr.operand_names()
+                if op == "dynamic-slice" or op == "gather":
+                    # reads only the sliced window, not the source buffer
+                    b = 2 * _type_bytes(instr.type_str)
+                elif op == "dynamic-update-slice":
+                    # in-place: only the written window moves
+                    upd = types.get(ops_names[1], "") if len(ops_names) > 1 else ""
+                    b = 2 * _type_bytes(upd)
+                elif op == "scatter":
+                    upd = types.get(ops_names[-1], "") if ops_names else ""
+                    b = 2 * _type_bytes(upd)
+                else:
+                    b = _type_bytes(instr.type_str) + sum(
+                        _type_bytes(types.get(o, "")) for o in ops_names
+                    )
+                cost.bytes += b * mult
+
+    if entry:
+        walk(entry, 1.0, True)
+    return cost

@@ -1,0 +1,121 @@
+"""Pytree path utilities.
+
+Parameters across the framework are nested dicts of arrays (no flax). Every
+leaf is addressed by a canonical dotted path string, e.g.
+``"blocks.attn.q_proj"`` — these paths are the *function names* of the
+FaaSLight analogy: the unit at which reachability is computed and at which
+the optional store keys its compressed entries.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import numpy as np
+from jax.tree_util import (
+    DictKey,
+    FlattenedIndexKey,
+    GetAttrKey,
+    SequenceKey,
+)
+
+
+def _key_to_str(k: Any) -> str:
+    if isinstance(k, DictKey):
+        return str(k.key)
+    if isinstance(k, SequenceKey):
+        return str(k.idx)
+    if isinstance(k, GetAttrKey):
+        return str(k.name)
+    if isinstance(k, FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def path_str(path: tuple) -> str:
+    """Canonical dotted string for a jax key path."""
+    return ".".join(_key_to_str(k) for k in path)
+
+
+def flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree into ``[(dotted_path, leaf), ...]`` (sorted order of
+    jax's flatten, which is deterministic)."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(path_str(p), v) for p, v in leaves]
+
+
+def leaf_paths(tree: Any) -> list[str]:
+    return [p for p, _ in flatten_with_paths(tree)]
+
+
+def tree_from_flat(flat: Mapping[str, Any]) -> dict:
+    """Rebuild a nested dict from dotted paths. Integer path segments become
+    dict keys as-is (we only use dicts, never lists, in param trees)."""
+    out: dict = {}
+    for path, leaf in flat.items():
+        parts = path.split(".")
+        node = out
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+    return out
+
+
+def _leaf_nbytes(x: Any) -> int:
+    if hasattr(x, "nbytes"):
+        return int(x.nbytes)
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return 0
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across leaves (works on arrays and ShapeDtypeStructs)."""
+    return sum(_leaf_nbytes(x) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_num_params(tree: Any) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        if hasattr(x, "shape"):
+            total += int(np.prod(x.shape)) if x.shape else 1
+    return total
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(dotted_path, leaf) -> leaf`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(lambda p, v: fn(path_str(p), v), tree)
+
+
+def select_paths(tree: Any, predicate: Callable[[str], bool]) -> dict:
+    """Subset of leaves whose dotted path satisfies ``predicate`` (flat dict)."""
+    return {p: v for p, v in flatten_with_paths(tree) if predicate(p)}
+
+
+def iter_chunks(seq: Iterable, n: int):
+    buf = []
+    for x in seq:
+        buf.append(x)
+        if len(buf) == n:
+            yield buf
+            buf = []
+    if buf:
+        yield buf
+
+
+def flatten_axes_tree(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a tree whose *leaves are tuples* (e.g. logical-axis tuples).
+    The generic flatten would recurse into the tuples; this one stops at
+    non-dict nodes."""
+    out = []
+
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, f"{prefix}.{k}" if prefix else str(k))
+        else:
+            out.append((prefix, node))
+
+    rec(tree, "")
+    return out

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device;
+only launch/dryrun.py forces the 512-device placeholder topology (and the
+multi-device tests below spawn subprocesses to do the same)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def rand_batch(key, spec, vocab):
+    """Materialize a concrete batch from ShapeDtypeStruct specs."""
+    out = {}
+    for k, v in spec.items():
+        kk = jax.random.fold_in(key, hash(k) % (2**31))
+        if v.dtype == jnp.int32:
+            out[k] = jax.random.randint(kk, v.shape, 0, vocab)
+        else:
+            out[k] = jax.random.normal(kk, v.shape, jnp.float32).astype(v.dtype)
+    return out

@@ -1,0 +1,226 @@
+"""FaaSLight core tests: reachability exactness, tier partitioning rules,
+file elimination, optional store roundtrip, on-demand fault-in."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import (
+    DeploymentProfile,
+    OptionalStore,
+    TieredParams,
+    analyze,
+    build_artifact,
+    build_reachability,
+    eliminate_collections,
+    write_monolithic,
+)
+from repro.core.optional_store import OptionalStoreWriter
+from repro.models.zoo import build_model
+from repro.utils.tree import flatten_with_paths
+
+
+# ---------------------------------------------------------------------------
+# param_graph: exact graph-level reachability
+# ---------------------------------------------------------------------------
+
+
+def test_whisper_decode_never_reaches_encoder():
+    model = build_model(get_reduced("whisper-base"))
+    rep = build_reachability(model.entries(B=1, S=8), model.abstract())
+    for p, entries in rep.reachable.items():
+        if p.startswith("encoder"):
+            assert "decode_step" not in entries, p
+            assert "prefill" in entries  # but audio prefill does reach it
+        elif p == "embed":
+            assert "decode_step" in entries
+
+
+def test_vlm_text_only_never_reaches_cross_attn():
+    model = build_model(get_reduced("llama-3.2-vision-90b"))
+    rep = build_reachability(model.entries(B=1, S=8), model.abstract())
+    for p, entries in rep.reachable.items():
+        if ".cross." in p:
+            assert not any(e.endswith("_text_only") for e in entries), (p, entries)
+
+
+def test_decode_does_not_reach_kv_projections_of_cross_attn():
+    """Decode reads cached xk/xv, so wk/wv of VLM cross-attn are dead even
+    for multimodal decode — a strictly finer result than file-level DCE."""
+    model = build_model(get_reduced("llama-3.2-vision-90b"))
+    rep = build_reachability(model.entries(B=1, S=8), model.abstract())
+    wk = [p for p in rep.reachable if ".cross.wk" in p]
+    assert wk
+    for p in wk:
+        assert "decode_step" not in rep.reachable[p]
+
+
+def test_remat_does_not_defeat_precision():
+    cfg = get_reduced("llama-3.2-vision-90b")
+    for remat in ("none", "full"):
+        model = build_model(cfg.replace(remat=remat))
+        rep = build_reachability(
+            [e for e in model.entries(B=1, S=8) if e.name == "prefill_text_only"],
+            model.abstract(),
+        )
+        dead = {p for p, s in rep.reachable.items() if not s}
+        assert any(".cross." in p for p in dead), remat
+
+
+# ---------------------------------------------------------------------------
+# partitioning
+# ---------------------------------------------------------------------------
+
+
+def _profile(**kw):
+    base = dict(resident_experts=1, hot_vocab_fraction=0.25,
+                min_tier1_bytes=1024, vocab_row_group=128)
+    base.update(kw)
+    return DeploymentProfile(**base)
+
+
+def test_tier_plan_moe():
+    model = build_model(get_reduced("mixtral-8x22b"))
+    res = analyze(model, _profile(), trace_B=1, trace_S=16)
+    plan = res.plan
+    for p, d in plan.decisions.items():
+        if "moe.w_" in p:
+            assert d.tier == 1 and d.granularity == "expert", p
+            # per-(layer, expert) units; resident_experts=1 per layer
+            n_layers, n_exp = 2, 4
+            assert len(d.units) == n_layers * n_exp
+            assert len(d.resident_units) == n_layers * 1
+        if p.endswith("router"):
+            assert d.tier == 0, "router must stay resident"
+    assert 0.0 < plan.tier0_fraction < 1.0
+    assert plan.cold_resident_bytes < plan.total_bytes
+
+
+def test_tier_plan_small_leaves_resident():
+    model = build_model(get_reduced("yi-34b"))
+    res = analyze(model, _profile(min_tier1_bytes=1 << 30), trace_B=1, trace_S=16)
+    # with a huge min size, everything is tier-0
+    assert all(d.tier == 0 for d in res.plan.decisions.values())
+
+
+def test_tier_plan_training_profile_keeps_all():
+    from repro.core import TRAINING_PROFILE
+
+    model = build_model(get_reduced("mixtral-8x22b"))
+    res = analyze(model, TRAINING_PROFILE, trace_B=1, trace_S=16)
+    assert all(d.tier == 0 for d in res.plan.decisions.values())
+
+
+def test_file_elimination():
+    collections = {
+        "params": {"w": np.zeros((4, 4), np.float32)},
+        "opt_state": {"m": np.zeros((4, 4), np.float32), "v": np.zeros((4, 4), np.float32)},
+        "ema": {"w": np.zeros((4, 4), np.float32)},
+    }
+    kept, report = eliminate_collections(collections)
+    assert set(kept) == {"params"}
+    assert report.dropped_bytes == 3 * 64
+    kept_t, report_t = eliminate_collections(collections, for_training=True)
+    assert set(kept_t) == set(collections)
+
+
+# ---------------------------------------------------------------------------
+# optional store ("lightweight file")
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_dtypes(tmp_path):
+    import ml_dtypes
+
+    path = str(tmp_path / "o.blob")
+    arrays = {
+        "a": np.random.randn(32, 16).astype(np.float32),
+        "b": np.random.randn(64).astype(ml_dtypes.bfloat16),
+        "c": np.arange(100, dtype=np.int32),
+    }
+    with OptionalStoreWriter(path) as w:
+        for k, v in arrays.items():
+            w.add(k, v)
+    store = OptionalStore(path)
+    for k, v in arrays.items():
+        got = store.fetch(k)
+        assert got.dtype == v.dtype and got.shape == v.shape
+        assert np.ascontiguousarray(got).tobytes() == v.tobytes()
+    assert store.compressed_bytes <= store.raw_bytes * 1.1
+
+
+def test_store_compression_byteplane(tmp_path):
+    """bf16 weights compress meaningfully (byte-planed exponent bytes)."""
+    import ml_dtypes
+
+    path = str(tmp_path / "o.blob")
+    w = (np.random.randn(512, 256) * 0.02).astype(ml_dtypes.bfloat16)
+    with OptionalStoreWriter(path) as wr:
+        wr.add("w", w)
+    store = OptionalStore(path)
+    assert store.compressed_bytes < 0.9 * store.raw_bytes
+
+
+def test_store_atomicity(tmp_path):
+    path = str(tmp_path / "o.blob")
+    try:
+        with OptionalStoreWriter(path) as w:
+            w.add("x", np.zeros(4, np.float32))
+            raise RuntimeError("crash mid-build")
+    except RuntimeError:
+        pass
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".partial")
+
+
+# ---------------------------------------------------------------------------
+# artifact + on-demand fault-in
+# ---------------------------------------------------------------------------
+
+
+def test_artifact_and_fault_in(tmp_path, rng):
+    cfg = get_reduced("mixtral-8x22b")
+    model = build_model(cfg)
+    res = analyze(model, _profile(), trace_B=1, trace_S=16)
+    params = model.init(rng)
+    meta = build_artifact(params, res, str(tmp_path))
+    assert meta["tier1_compressed_bytes"] <= meta["tier1_raw_bytes"]
+
+    store = OptionalStore(str(tmp_path / "optional.blob"))
+    flat = dict(flatten_with_paths(params))
+    # zeroed placeholders for tier-1
+    from repro.utils.tree import tree_from_flat
+
+    lf = dict(flat)
+    tier1 = [p for p, d in res.plan.decisions.items() if d.tier == 1]
+    for p in tier1:
+        lf[p] = jnp.zeros_like(lf[p])
+    tp = TieredParams(tree_from_flat(lf), res.plan, store)
+
+    key = "groups.u0.moe.w_up#l1e3"
+    ref = np.asarray(flat["groups.u0.moe.w_up"])[1, 3]
+    moved = tp.ensure([key])
+    assert moved == ref.nbytes
+    got = np.asarray(tp.leaf("groups.u0.moe.w_up"))[1, 3]
+    np.testing.assert_array_equal(got, ref)
+    assert tp.ensure([key]) == 0  # idempotent
+    assert tp.stats.misses == 1
+
+    # full hydration == original params
+    tp.ensure_all()
+    for p in tier1:
+        np.testing.assert_array_equal(np.asarray(tp.leaf(p)), np.asarray(flat[p]))
+
+
+def test_monolithic_baselines(tmp_path, rng):
+    cfg = get_reduced("yi-34b")
+    model = build_model(cfg)
+    params = model.init(rng)
+    opt = {"m": jax.tree.map(jnp.zeros_like, params)}
+    p_before = write_monolithic({"params": params, "opt_state": opt}, str(tmp_path))
+    p_after1 = write_monolithic({"params": params, "opt_state": opt}, str(tmp_path), pruned=True)
+    assert os.path.getsize(p_before) > os.path.getsize(p_after1)

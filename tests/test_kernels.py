@@ -1,0 +1,176 @@
+"""Pallas kernel validation (deliverable c): shape/dtype sweeps + hypothesis
+property tests, every kernel vs its pure-jnp ref.py oracle in interpret
+mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.tiered_gather.ops import tiered_gather
+from repro.kernels.tiered_gather.ref import tiered_gather_ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, Hkv, hd, causal, window, softcap, dtype
+    (2, 128, 128, 4, 2, 64, True, None, None, jnp.float32),
+    (1, 256, 256, 8, 8, 64, True, None, 50.0, jnp.float32),
+    (2, 100, 100, 4, 1, 32, True, 32, None, jnp.float32),
+    (1, 64, 192, 4, 2, 64, False, None, None, jnp.float32),
+    (1, 128, 128, 4, 2, 128, True, None, None, jnp.bfloat16),
+    (3, 96, 96, 6, 2, 64, True, 48, None, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_oracle(case):
+    B, Sq, Sk, H, Hkv, hd, causal, window, softcap, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sq=st.integers(8, 96),
+    hkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 3]),
+    hd=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(sq, hkv, g, hd, causal):
+    B, H = 2, hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(sq * 131 + hd), 3)
+    q = jax.random.normal(ks[0], (B, sq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, sq, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, sq, hkv, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 8, 2, 64, 1024, False, None),
+    (4, 4, 4, 128, 600, False, 50.0),
+    (2, 8, 1, 64, 512, True, None),
+    (1, 16, 8, 32, 96, False, None),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_vs_oracle(case):
+    B, H, Hkv, hd, Skv, rolling, cap = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Skv, Hkv, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Skv, Hkv, hd), jnp.float32)
+    kv_len = jax.random.randint(ks[3], (B,), 1, Skv + 64)
+    out = decode_attention(q, kc, vc, kv_len, rolling=rolling, softcap=cap, interpret=True)
+    ref = decode_attention_ref(q, kc, vc, kv_len, rolling=rolling, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    skv=st.integers(16, 700),
+    hkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    hd=st.sampled_from([32, 64]),
+)
+def test_decode_attention_property(skv, hkv, g, hd):
+    B, H = 2, hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(skv * 7 + hd), 4)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, skv, hkv, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, skv, hkv, hd), jnp.float32)
+    kv_len = jax.random.randint(ks[3], (B,), 1, skv + 1)
+    out = decode_attention(q, kc, vc, kv_len, interpret=True, bk=128)
+    ref = decode_attention_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rglru scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(2, 128, 256), (1, 100, 96), (3, 512, 512), (1, 7, 16)])
+def test_rglru_vs_oracle(shape):
+    B, S, W = shape
+    ka, kb = jax.random.split(KEY)
+    a = jax.random.uniform(ka, (B, S, W), jnp.float32, 0.8, 0.999)
+    b = jax.random.normal(kb, (B, S, W), jnp.float32) * 0.1
+    out = rglru_scan(a, b, interpret=True)
+    ref = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 300), w=st.integers(8, 200))
+def test_rglru_property(s, w):
+    ka, kb = jax.random.split(jax.random.PRNGKey(s * 1009 + w))
+    a = jax.random.uniform(ka, (1, s, w), jnp.float32, 0.0, 0.999)
+    b = jax.random.normal(kb, (1, s, w), jnp.float32)
+    out = rglru_scan(a, b, interpret=True, bt=64, bw=64)
+    ref = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tiered gather
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", [(1024, 64, 32, 128), (500, 128, 17, 100), (64, 8, 4, 16)])
+def test_tiered_gather_vs_oracle(case):
+    V, D, N, gs = case
+    kt, ki, km = jax.random.split(KEY, 3)
+    table = jax.random.normal(kt, (V, D), jnp.float32)
+    ids = jax.random.randint(ki, (N,), -5, V + 5)
+    G = (V + gs - 1) // gs
+    mask = jax.random.randint(km, (G,), 0, 2)
+    out, miss = tiered_gather(table, ids, mask, group_size=gs, interpret=True)
+    rout, rmiss = tiered_gather_ref(table, ids, mask, group_size=gs)
+    np.testing.assert_array_equal(np.asarray(miss), np.asarray(rmiss))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(rout))
+
+
+@settings(max_examples=10, deadline=None)
+@given(v=st.integers(16, 600), n=st.integers(1, 64), gs=st.integers(4, 128))
+def test_tiered_gather_property(v, n, gs):
+    key = jax.random.PRNGKey(v * 31 + n)
+    kt, ki, km = jax.random.split(key, 3)
+    table = jax.random.normal(kt, (v, 16), jnp.float32)
+    ids = jax.random.randint(ki, (n,), -3, v + 3)
+    G = (v + gs - 1) // gs
+    mask = jax.random.randint(km, (G,), 0, 2)
+    out, miss = tiered_gather(table, ids, mask, group_size=gs, interpret=True)
+    rout, rmiss = tiered_gather_ref(table, ids, mask, group_size=gs)
+    np.testing.assert_array_equal(np.asarray(miss), np.asarray(rmiss))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(rout))
+    # invariant: every miss row is exactly zero
+    assert np.all(np.asarray(out)[np.asarray(miss) == 1] == 0)

@@ -1,0 +1,124 @@
+"""Serving integration: cold-start modes, generation parity (the paper's
+correctness guarantee: tiered == full), on-demand fault accounting (RQ4),
+modal artifacts."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import DeploymentProfile, analyze, build_artifact, write_monolithic
+from repro.models.zoo import build_model
+from repro.optim import init_adamw
+from repro.serving import GenerationEngine, cold_start
+
+
+def _setup(tmp_path, arch="mixtral-8x22b", **prof_kw):
+    cfg = get_reduced(arch).replace(collect_moe_usage=True)
+    model = build_model(cfg)
+    base = dict(resident_experts=1, hot_vocab_fraction=0.25,
+                min_tier1_bytes=1024, vocab_row_group=128)
+    base.update(prof_kw)
+    profile = DeploymentProfile(**base)
+    res = analyze(model, profile, trace_B=1, trace_S=16)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    outdir = str(tmp_path)
+    write_monolithic({"params": params, "opt_state": {"m": opt.m, "v": opt.v}}, outdir)
+    write_monolithic({"params": params, "opt_state": {"m": opt.m, "v": opt.v}}, outdir, pruned=True)
+    build_artifact(params, res, outdir)
+    return cfg, model, res, outdir
+
+
+def test_cold_start_modes_and_parity(tmp_path):
+    cfg, model, res, outdir = _setup(tmp_path)
+    servers = {}
+    for mode in ("before", "after1", "after2"):
+        s = cold_start(model, outdir, res if mode == "after2" else None,
+                       mode=mode, warm_shapes=((2, 8),))
+        servers[mode] = s
+        assert s.report.total_s > 0
+    # bytes read strictly shrink across the paper's pipeline
+    assert servers["before"].report.bytes_read > servers["after1"].report.bytes_read
+    assert servers["after1"].report.bytes_read > servers["after2"].report.bytes_read
+
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 8), 0, cfg.vocab_size)
+    out_full, _ = GenerationEngine(servers["before"], max_seq=32).generate(toks, 6)
+    out_tier, st = GenerationEngine(servers["after2"], max_seq=32).generate(toks, 6)
+    np.testing.assert_array_equal(out_full, out_tier)
+    assert st.faulted_units > 0  # cold experts were faulted in
+    assert st.prefill_retries <= 3
+
+
+def test_strict_residency_still_correct(tmp_path):
+    """Even with a fully cold tier-1 (strict policy), generation matches."""
+    cfg, model, res, outdir = _setup(tmp_path, resident_experts=0, hot_vocab_fraction=0.0)
+    s_full = cold_start(model, outdir, None, mode="before", warm_shapes=((1, 8),))
+    s_tier = cold_start(model, outdir, res, mode="after2", warm_shapes=((1, 8),))
+    assert s_tier.tiered.resident_fraction() == 0.0
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab_size)
+    out_full, _ = GenerationEngine(s_full, max_seq=24).generate(toks, 4)
+    out_tier, st = GenerationEngine(s_tier, max_seq=24).generate(toks, 4)
+    np.testing.assert_array_equal(out_full, out_tier)
+    assert st.faulted_bytes > 0
+
+
+def test_fault_is_one_time_cost(tmp_path):
+    """RQ4: the second request over the same routes faults nothing."""
+    cfg, model, res, outdir = _setup(tmp_path)
+    server = cold_start(model, outdir, res, mode="after2", warm_shapes=((2, 8),))
+    eng = GenerationEngine(server, max_seq=32)
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 8), 0, cfg.vocab_size)
+    _, st1 = eng.generate(toks, 4)
+    _, st2 = eng.generate(toks, 4)
+    assert st1.faulted_units > 0
+    assert st2.faulted_units == 0
+    assert st2.prefill_retries == 0
+
+
+def test_whisper_text_only_artifact_excludes_encoder(tmp_path, rng):
+    cfg = get_reduced("whisper-base")
+    model = build_model(cfg)
+    profile = DeploymentProfile(modalities=("text",), min_tier1_bytes=256)
+    res = analyze(model, profile, trace_B=1, trace_S=8)
+    enc = [p for p, d in res.plan.decisions.items() if p.startswith("encoder")]
+    assert enc and all(res.plan.decisions[p].tier == 1 for p in enc)
+    # text-only serving never touches the encoder -> zero faults
+    params = model.init(rng)
+    outdir = str(tmp_path)
+    build_artifact(params, res, outdir)
+    server = cold_start(model, outdir, res, mode="after2", warm_shapes=((1, 8),))
+    eng = GenerationEngine(server, max_seq=24)
+    toks = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    out, st = eng.generate(toks, 4)
+    assert st.faulted_units == 0
+    assert out.shape == (1, 4)
+
+
+def test_stats_policy_reduces_faults(tmp_path):
+    """Hot-unit stats preloading (the paper's offline profiling) cuts
+    request-time faults vs naive residency."""
+    from repro.data import DataConfig, SyntheticTokenPipeline
+
+    arch = "yi-34b"
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = SyntheticTokenPipeline(DataConfig(cfg.vocab_size, 64, 4, seed=5))
+    stats = pipe.vocab_row_stats(n_steps=2, row_group=64)
+    toks = jnp.asarray(pipe.batch_at(10)["tokens"][:2, :8])
+
+    faults = {}
+    for name, hot in (("naive", None), ("stats", stats)):
+        profile = DeploymentProfile(hot_vocab_fraction=0.25, min_tier1_bytes=1024,
+                                    vocab_row_group=64)
+        res = analyze(model, profile, hot_units_stats=hot, trace_B=1, trace_S=8)
+        d = str(tmp_path / name)
+        build_artifact(params, res, d)
+        server = cold_start(model, d, res, mode="after2", warm_shapes=((2, 8),))
+        _, st = GenerationEngine(server, max_seq=24).generate(toks, 4)
+        faults[name] = st.faulted_units
+    assert faults["stats"] <= faults["naive"]

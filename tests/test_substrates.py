@@ -1,0 +1,216 @@
+"""Substrate units: optimizer, compression, data pipeline, checkpoint
+bundles, sharding rules, HLO cost analyzer, paper statistics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import read_bundle, write_bundle
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.optim import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    dequantize_int8,
+    init_adamw,
+    quantize_int8,
+    warmup_cosine,
+)
+from repro.sharding.rules import ACT_RULES, PARAM_RULES, resolve_pspec
+from repro.utils.hlocost import analyze
+from repro.utils.stats import cohens_d, mann_whitney_u
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    p = {"w": jnp.array([3.0, -2.0]), "norm": jnp.array([1.5])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    st_ = init_adamw(p)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum((p["norm"] - 1.0) ** 2)
+    for _ in range(100):
+        p, st_ = adamw_update(cfg, jax.grad(loss)(p), st_, p)
+    assert float(loss(p)) < 1e-3
+
+
+def test_adamw_moments_not_aliased():
+    p = {"w": jnp.zeros((8, 8))}
+    s = init_adamw(p)
+    assert s.m["w"].unsafe_buffer_pointer() != s.v["w"].unsafe_buffer_pointer()
+
+
+def test_weight_decay_skips_1d():
+    p = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    cfg = AdamWConfig(lr=1.0, weight_decay=0.5, clip_norm=0.0)
+    p2, _ = adamw_update(cfg, g, init_adamw(p), p)
+    assert float(jnp.abs(p2["scale"] - 1.0).max()) < 1e-6  # no decay
+    assert float(jnp.abs(p2["w"] - 1.0).max()) > 0.1  # decayed
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 10.0 * np.sqrt(10)) < 1e-3
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+def test_schedule_shape():
+    sched = warmup_cosine(1e-3, 10, 100, min_frac=0.1)
+    assert float(sched(jnp.array(0))) == 0.0
+    assert abs(float(sched(jnp.array(10))) - 1e-3) < 1e-9
+    assert float(sched(jnp.array(100))) == pytest.approx(1e-4, rel=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_error_bound(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (257,)) * 10 ** ((seed % 7) - 3)
+    q, scale = quantize_int8(g)
+    err = jnp.abs(dequantize_int8(q, scale) - g).max()
+    # symmetric quantizer: error <= scale/2 (+ eps for clip at +-127)
+    assert float(err) <= float(scale) * 0.5 + 1e-6 or float(err) <= float(scale)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_sharding():
+    dc = DataConfig(vocab_size=1000, seq_len=64, global_batch=8, seed=3)
+    p0 = SyntheticTokenPipeline(dc, shard=0, num_shards=2)
+    p1 = SyntheticTokenPipeline(dc, shard=1, num_shards=2)
+    assert np.array_equal(p0.batch_at(5)["tokens"], p0.batch_at(5)["tokens"])
+    assert not np.array_equal(p0.batch_at(5)["tokens"], p1.batch_at(5)["tokens"])
+    assert not np.array_equal(p0.batch_at(5)["tokens"], p0.batch_at(6)["tokens"])
+    b = p0.batch_at(0)
+    assert b["tokens"].shape == (4, 64)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_data_zipf_stats_sum_to_one():
+    dc = DataConfig(vocab_size=4096, seq_len=128, global_batch=4)
+    stats = SyntheticTokenPipeline(dc).vocab_row_stats(n_steps=2, row_group=512)
+    assert abs(sum(stats.values()) - 1.0) < 1e-9
+    # Zipf: group 0 is the hottest
+    assert stats["embed#rg0"] == max(stats.values())
+
+
+# ---------------------------------------------------------------------------
+# checkpoint bundle
+# ---------------------------------------------------------------------------
+
+
+def test_bundle_partial_read(tmp_path):
+    import ml_dtypes
+
+    arrays = {
+        "big": np.random.randn(256, 64).astype(np.float32),
+        "bf": np.random.randn(33).astype(ml_dtypes.bfloat16),
+    }
+    write_bundle(str(tmp_path / "b"), arrays)
+    sub = read_bundle(str(tmp_path / "b"), keys=["bf"])
+    assert list(sub) == ["bf"]
+    assert sub["bf"].tobytes() == arrays["bf"].tobytes()
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_pspec_divisibility_fallback():
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh(1, 1)  # 1 device: everything divisible by 1
+    spec = resolve_pspec(("vocab", "embed"), (50_000, 512), mesh, PARAM_RULES)
+    assert spec is not None
+
+
+def test_resolve_pspec_composite_batch():
+    """batch -> ("pod","data") composes, with suffix fallback when the pod
+    product doesn't divide."""
+    import jax
+    from jax.sharding import PartitionSpec
+
+    # emulate resolution logic without building a 512-dev mesh: use a tiny
+    # mesh with the same axis names
+    devs = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    from jax.sharding import Mesh
+
+    mesh = Mesh(devs, ("pod", "data", "model"))
+    spec = resolve_pspec(("batch", "seq"), (8, 128), mesh, ACT_RULES)
+    assert spec[0] == ("pod", "data")
+    spec1 = resolve_pspec(("batch",), (1,), mesh, ACT_RULES)
+    assert spec1 == PartitionSpec(("pod", "data"))  # 1 % 1 == 0 on tiny mesh
+
+
+# ---------------------------------------------------------------------------
+# loop-aware HLO cost analysis
+# ---------------------------------------------------------------------------
+
+
+def test_hlocost_counts_loop_trips():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    c = jax.jit(f).lower(jnp.ones((128, 128)), jnp.ones((128, 128))).compile()
+    cost = analyze(c.as_text())
+    expect = 10 * 2 * 128**3
+    assert abs(cost.dot_flops - expect) / expect < 0.01
+    # raw cost_analysis undercounts by the trip count — the reason this
+    # module exists
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < cost.dot_flops / 5
+
+
+def test_hlocost_nested_loops():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    c = jax.jit(f).lower(jnp.ones((64, 64)), jnp.ones((64, 64))).compile()
+    cost = analyze(c.as_text())
+    expect = 20 * 2 * 64**3
+    assert abs(cost.dot_flops - expect) / expect < 0.01
+
+
+# ---------------------------------------------------------------------------
+# paper statistics (§5.1)
+# ---------------------------------------------------------------------------
+
+
+def test_mann_whitney_separated_samples():
+    a = np.arange(20, dtype=float)
+    b = np.arange(20, dtype=float) + 100
+    u, p = mann_whitney_u(a, b)
+    assert p < 1e-6
+
+
+def test_mann_whitney_identical_samples():
+    a = np.random.RandomState(0).randn(20)
+    u, p = mann_whitney_u(a, a.copy())
+    assert p > 0.9
+
+
+def test_cohens_d_magnitudes():
+    rs = np.random.RandomState(1)
+    a = rs.randn(200)
+    assert abs(cohens_d(a, a + 0.8)) > 0.7  # large effect
+    assert abs(cohens_d(a, a + 0.01)) < 0.1  # negligible
