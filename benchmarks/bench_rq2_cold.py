@@ -53,9 +53,9 @@ def run(base_dir: str, archs=BENCH_ARCHS, n_runs: int = 5, compile_warm: bool = 
     return rows
 
 
-def main(base_dir: str, n_runs: int = 5) -> list[str]:
+def main(base_dir: str, n_runs: int = 5, archs=None, compile_warm: bool = True) -> list[str]:
     out = []
-    rows = run(base_dir, n_runs=n_runs)
+    rows = run(base_dir, archs=archs or BENCH_ARCHS, n_runs=n_runs, compile_warm=compile_warm)
     for r in rows:
         out.append(csv_row(
             f"rq2_cold/{r['arch']}",

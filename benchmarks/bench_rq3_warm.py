@@ -1,8 +1,14 @@
-"""RQ3 (paper §5.4): warm-start neutrality + memory benefit.
+"""RQ3 (paper §5.4): warm-start neutrality + memory benefit + prefetch.
 
 Once the server is resident, tiered serving must not be slower than full
 serving (the on-demand machinery is off the warm path), and the resident
 parameter bytes are strictly smaller.
+
+Beyond-paper residency layer (DESIGN.md §8): a third server runs the
+``stats`` residency preset — device-bytes budget at 50% of tier-1 plus the
+async prefetcher — and reports the prefetch hit-rate (fraction of demand
+touches hidden by hints) and the p50/p99 miss-stall, i.e. the time a
+request-path ``ensure()`` spent blocked on a cold or in-flight unit.
 """
 
 from __future__ import annotations
@@ -26,6 +32,30 @@ def _warm_latencies(engine, toks, n_runs: int, steps: int = 4) -> list[float]:
     return out
 
 
+def _prefetch_pressure(app, toks, n_runs: int, steps: int = 4) -> dict:
+    """Serve under the ``stats`` budget preset: evictions force re-faults,
+    hints race them — measure how much latency the prefetcher hides."""
+    server = timed_cold_start(app, "after2", residency="stats")
+    try:
+        engine = GenerationEngine(server, max_seq=32)
+        for _ in range(max(2, n_runs)):
+            engine.generate(toks, steps)
+        if server.prefetcher is not None:
+            server.prefetcher.drain(10.0)
+        ts = server.tiered.stats
+        return {
+            "prefetch_hit_rate": ts.prefetch_hit_rate,
+            "stall_p50_ms": ts.stall_percentile(50) * 1e3,
+            "stall_p99_ms": ts.stall_percentile(99) * 1e3,
+            "evictions": ts.evictions,
+            "refaults": ts.refaults,
+            "budget_bytes": server.tiered.residency.budget_bytes or 0,
+            "max_resident_bytes": server.tiered.residency.max_resident_bytes,
+        }
+    finally:
+        server.close()
+
+
 def run(base_dir: str, archs=BENCH_ARCHS[:4], n_runs: int = 5) -> list[dict]:
     rows = []
     for arch in archs:
@@ -33,13 +63,17 @@ def run(base_dir: str, archs=BENCH_ARCHS[:4], n_runs: int = 5) -> list[dict]:
         toks = request_tokens(app)
         s_full = timed_cold_start(app, "before")
         s_tier = timed_cold_start(app, "after2")
-        lat_full = _warm_latencies(GenerationEngine(s_full, max_seq=32), toks, n_runs)
-        lat_tier = _warm_latencies(GenerationEngine(s_tier, max_seq=32), toks, n_runs)
-        cmp = compare(f"{arch}/warm", lat_full, lat_tier)
-        # memory analogue: device-resident param bytes
-        full_bytes = app.result.plan.total_bytes
-        tier = s_tier.tiered
-        resident = app.result.plan.cold_resident_bytes + tier.stats.total_miss_bytes
+        try:
+            lat_full = _warm_latencies(GenerationEngine(s_full, max_seq=32), toks, n_runs)
+            lat_tier = _warm_latencies(GenerationEngine(s_tier, max_seq=32), toks, n_runs)
+            cmp = compare(f"{arch}/warm", lat_full, lat_tier)
+            # memory analogue: device-resident param bytes (tier-0 + live tier-1)
+            full_bytes = app.result.plan.total_bytes
+            resident = app.result.plan.tier0_bytes + s_tier.tiered.resident_bytes
+        finally:
+            s_full.close()
+            s_tier.close()
+        pressure = _prefetch_pressure(app, toks, n_runs)
         rows.append(
             {
                 "arch": arch,
@@ -49,6 +83,7 @@ def run(base_dir: str, archs=BENCH_ARCHS[:4], n_runs: int = 5) -> list[dict]:
                 "p_value": cmp.p_value,
                 "neutral": cmp.p_value >= 0.05,
                 "resident_bytes_pct": 100.0 * resident / full_bytes,
+                **pressure,
             }
         )
     return rows
@@ -62,6 +97,9 @@ def main(base_dir: str, n_runs: int = 5) -> list[str]:
             r["warm_tiered_ms"] * 1e3,
             f"full={r['warm_full_ms']:.1f}ms|tiered={r['warm_tiered_ms']:.1f}ms"
             f"|delta={r['delta_pct']:+.1f}%|p={r['p_value']:.3f}"
-            f"|neutral={r['neutral']}|resident={r['resident_bytes_pct']:.1f}%",
+            f"|neutral={r['neutral']}|resident={r['resident_bytes_pct']:.1f}%"
+            f"|pf_hit_rate={r['prefetch_hit_rate']:.2f}"
+            f"|stall_p50={r['stall_p50_ms']:.2f}ms|stall_p99={r['stall_p99_ms']:.2f}ms"
+            f"|evictions={r['evictions']}",
         ))
     return out

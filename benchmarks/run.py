@@ -20,6 +20,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--runs", type=int, default=5, help="cold-start repetitions (paper: 20)")
     ap.add_argument("--fast", action="store_true", help="3 runs, fewer archs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: rq2 only, one arch, 2 runs, no warm-set compile (~30s)")
     ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
     ap.add_argument("--only", default="", help="comma list: rq1,rq2,rq3,rq4,rq5,rq6,roofline")
     args = ap.parse_args(argv)
@@ -42,6 +44,18 @@ def main(argv=None) -> int:
     os.makedirs(scratch, exist_ok=True)
     print(f"# FaaSLight-JAX benchmarks (artifacts: {scratch}; runs={n_runs})")
     print("name,us_per_call,derived")
+
+    if args.smoke:
+        try:
+            for row in bench_rq2_cold.main(
+                scratch, n_runs=2, archs=("mixtral-8x22b",), compile_warm=False
+            ):
+                print(row)
+            return 0
+        except Exception:
+            print("rq2_smoke/ERROR,0.0,exception", file=sys.stdout)
+            traceback.print_exc()
+            return 1
 
     sections = []
     if want("rq1"):

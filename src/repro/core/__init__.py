@@ -11,8 +11,15 @@ from repro.core.entrypoints import (
     recognize_entries,
 )
 from repro.core.file_elim import eliminate_collections, eliminate_files
-from repro.core.on_demand import LoaderStats, TieredParams, placeholder_tree
+from repro.core.on_demand import (
+    LoadEvent,
+    LoaderStats,
+    ResidencyManager,
+    TieredParams,
+    placeholder_tree,
+)
 from repro.core.optional_store import OptionalStore, OptionalStoreWriter, write_store
+from repro.core.prefetch import Prefetcher, PrefetchStats
 from repro.core.param_graph import ReachabilityReport, build_reachability, entry_param_liveness
 from repro.core.partition import TierDecision, TierPlan, Unit, build_tier_plan
 
@@ -28,9 +35,13 @@ __all__ = [
     "recognize_entries",
     "eliminate_collections",
     "eliminate_files",
+    "LoadEvent",
     "LoaderStats",
+    "ResidencyManager",
     "TieredParams",
     "placeholder_tree",
+    "Prefetcher",
+    "PrefetchStats",
     "OptionalStore",
     "OptionalStoreWriter",
     "write_store",

@@ -1,4 +1,4 @@
-"""④ On-demand loading — the ``rewrite_template`` analogue.
+"""④ On-demand loading — the ``rewrite_template`` analogue (DESIGN.md §8).
 
 The paper rewrites each optional function to a 2-line stub that, on first
 invocation, reads the lightweight file, materializes the separated code, and
@@ -10,14 +10,28 @@ bytes in unit-by-unit when requests need them.
 Correctness backstop, as in the paper: a misprediction (cold expert routed
 to, cold vocab row sampled) is a *latency* event — fetch + decompress +
 device upload + row scatter — never a failure. ``ensure()`` is idempotent
-and thread-safe; the loaded-set survives for the life of the process (the
-paper's "one-time cost per container").
+and thread-safe.
+
+Beyond the seed's monotone loaded-set, residency is a per-unit state
+machine governed by a ``ResidencyManager`` (DESIGN.md §8.1):
+
+    COLD ──ensure()/prefetch──▶ LOADING ──install──▶ RESIDENT
+      ▲                                                 │
+      └───────────── evict (LRU, unpinned) ◀────────────┘
+
+A configurable device-bytes budget bounds the RESIDENT set; when an
+install would exceed it, least-recently-used unpinned units are evicted
+back to placeholder zeros before the new bytes land — resident bytes never
+exceed the budget while any victim is evictable. Eviction never touches a
+LOADING unit (an in-flight read can't be yanked) and never touches a
+pinned unit (``ensure(pin=True)`` / ``release()`` bracket a request step).
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Optional
 
@@ -29,6 +43,11 @@ from repro.core.optional_store import OptionalStore
 from repro.core.partition import TierPlan, Unit
 from repro.utils.tree import flatten_with_paths, tree_from_flat
 
+# residency states (DESIGN.md §8.1)
+COLD = "cold"          # placeholder zeros on device; bytes not charged
+LOADING = "loading"    # a read/decode/upload is in flight; never evictable
+RESIDENT = "resident"  # real bytes on device; charged against the budget
+
 
 @dataclass
 class LoadEvent:
@@ -36,21 +55,186 @@ class LoadEvent:
     nbytes: int
     fetch_s: float
     upload_s: float
+    t: float = 0.0          # monotonic completion time
+    source: str = "fault"   # "fault" | "prefetch" | "preload"
 
 
 @dataclass
 class LoaderStats:
     events: list = field(default_factory=list)
-    misses: int = 0
-    hits: int = 0
+    misses: int = 0          # synchronous request-path loads
+    hits: int = 0            # already-resident touches
+    prefetch_hits: int = 0   # first demand-touch of a prefetch-loaded unit
+    prefetch_waits: int = 0  # demand overlapped an in-flight prefetch load
+    evictions: int = 0
+    evicted_bytes: int = 0
+    refaults: int = 0        # loads of a previously-evicted unit
+    stalls: list = field(default_factory=list)  # per-ensure miss-stall seconds
 
     @property
     def total_miss_bytes(self) -> int:
+        return sum(e.nbytes for e in self.events if e.source != "prefetch")
+
+    @property
+    def total_loaded_bytes(self) -> int:
         return sum(e.nbytes for e in self.events)
 
     @property
     def total_miss_s(self) -> float:
-        return sum(e.fetch_s + e.upload_s for e in self.events)
+        return sum(e.fetch_s + e.upload_s for e in self.events if e.source != "prefetch")
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Of demand-touched cold units, fraction hidden by the prefetcher."""
+        n = self.prefetch_hits + self.prefetch_waits + self.misses
+        return (self.prefetch_hits + self.prefetch_waits) / n if n else 0.0
+
+    def stall_percentile(self, q: float) -> float:
+        if not self.stalls:
+            return 0.0
+        return float(np.percentile(np.asarray(self.stalls), q))
+
+
+class ResidencyManager:
+    """Per-unit residency state machine + device-bytes budget accounting.
+
+    All mutation happens under a shared lock (the owner's ``RLock``); a
+    condition on that lock lets demand loads wait for in-flight prefetch
+    loads instead of duplicating the read. LRU order is an ``OrderedDict``
+    over RESIDENT keys, refreshed on every touch; eviction walks it oldest
+    first, skipping pinned units.
+    """
+
+    def __init__(self, lock: threading.RLock, *, budget_bytes: Optional[int] = None):
+        self._lock = lock
+        self.cv = threading.Condition(lock)
+        self.budget_bytes = budget_bytes
+        self._state: dict[str, str] = {}
+        self._nbytes: dict[str, int] = {}
+        self._pins: dict[str, int] = {}
+        # ordered set of RESIDENT keys, old→new; dict order IS the recency
+        self._lru: OrderedDict[str, None] = OrderedDict()
+        self._loaders: dict[str, str] = {}   # LOADING key -> claimant source
+        self._sources: dict[str, str] = {}   # RESIDENT key -> load source
+        self._unclaimed_prefetch: set[str] = set()  # prefetched, not yet demanded
+        self._evicted_once: set[str] = set()
+        self.resident_bytes = 0
+        self.max_resident_bytes = 0  # high-water mark (budget invariant probe)
+        self.overshoot_events = 0    # installs that couldn't make room
+
+    # -- queries (lock held by caller or uncontended reads) -------------------
+    def state_of(self, key: str) -> str:
+        return self._state.get(key, COLD)
+
+    def is_resident(self, key: str) -> bool:
+        return self._state.get(key) == RESIDENT
+
+    @property
+    def resident_keys(self) -> set:
+        with self._lock:
+            return set(self._lru)
+
+    def pins_of(self, key: str) -> int:
+        return self._pins.get(key, 0)
+
+    def loader_of(self, key: str) -> str:
+        """Source that owns an in-flight LOADING key ("" if none)."""
+        return self._loaders.get(key, "")
+
+    # -- transitions (caller MUST hold the lock) ------------------------------
+    def begin_load(self, key: str, source: str) -> bool:
+        """COLD → LOADING. False if already loading/resident (caller skips
+        or waits); the claimant that got True owns the read."""
+        if self._state.get(key, COLD) != COLD:
+            return False
+        self._state[key] = LOADING
+        self._loaders[key] = source
+        return True
+
+    def commit_load(self, key: str, nbytes: int, source: str) -> None:
+        """LOADING → RESIDENT: charge the budget, make the key MRU."""
+        assert self._state.get(key) == LOADING, (key, self._state.get(key))
+        self._state[key] = RESIDENT
+        self._nbytes[key] = nbytes
+        self._sources[key] = source
+        self._loaders.pop(key, None)
+        self._lru[key] = None
+        self._lru.move_to_end(key)
+        if source == "prefetch":
+            self._unclaimed_prefetch.add(key)
+        self.resident_bytes += nbytes
+        self.max_resident_bytes = max(self.max_resident_bytes, self.resident_bytes)
+        self.cv.notify_all()
+
+    def abort_load(self, key: str) -> None:
+        """LOADING → COLD (read failed or prefetcher shut down mid-claim)."""
+        if self._state.get(key) == LOADING:
+            self._state[key] = COLD
+            self._loaders.pop(key, None)
+            self.cv.notify_all()
+
+    def touch(self, key: str, *, claim_prefetch: bool = True) -> str:
+        """Refresh LRU recency on an access. With ``claim_prefetch`` (demand
+        touches) returns "prefetch" exactly once per prefetch-loaded unit —
+        the hit-accounting credit; hint touches pass False so they don't
+        consume the credit a later demand touch should claim."""
+        if key in self._lru:
+            self._lru.move_to_end(key)
+        if claim_prefetch and key in self._unclaimed_prefetch:
+            self._unclaimed_prefetch.discard(key)
+            return "prefetch"
+        return ""
+
+    def pin(self, keys: Iterable[str]) -> None:
+        for k in keys:
+            self._pins[k] = self._pins.get(k, 0) + 1
+
+    def release(self, keys: Iterable[str]) -> None:
+        for k in keys:
+            n = self._pins.get(k, 0) - 1
+            if n <= 0:
+                self._pins.pop(k, None)
+            else:
+                self._pins[k] = n
+
+    def select_victims(self, need_bytes: int) -> list[str]:
+        """Oldest-first unpinned RESIDENT keys freeing ≥ need_bytes (best
+        effort — may free less if the evictable pool is too small)."""
+        victims, freed = [], 0
+        for k in self._lru:  # iteration order = old → new
+            if freed >= need_bytes:
+                break
+            if self._pins.get(k, 0) > 0:
+                continue
+            victims.append(k)
+            freed += self._nbytes.get(k, 0)
+        return victims
+
+    def evict_commit(self, key: str) -> int:
+        """RESIDENT → COLD after the placeholder reinstall; credits bytes."""
+        assert self._state.get(key) == RESIDENT and self._pins.get(key, 0) == 0
+        nb = self._nbytes.pop(key, 0)
+        self._state[key] = COLD
+        self._lru.pop(key, None)
+        self._sources.pop(key, None)
+        self._unclaimed_prefetch.discard(key)
+        self._evicted_once.add(key)
+        self.resident_bytes -= nb
+        return nb
+
+    def was_evicted(self, key: str) -> bool:
+        return key in self._evicted_once
+
+    def wait_resident(self, key: str, timeout: float = 30.0) -> bool:
+        """Block until ``key`` leaves LOADING (caller holds the lock via the
+        condition). True if it became RESIDENT; False on abort/timeout."""
+        deadline = time.monotonic() + timeout
+        while self._state.get(key) == LOADING:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return False
+            self.cv.wait(remaining)
+        return self._state.get(key) == RESIDENT
 
 
 class TieredParams:
@@ -64,18 +248,25 @@ class TieredParams:
       executable; strict deployments can zero-page it.
 
     ``tree()`` returns the current param pytree to pass into compiled fns.
+    ``device_budget_bytes`` bounds real-resident tier-1 bytes; see
+    ``ResidencyManager`` for the eviction contract.
     """
 
-    def __init__(self, tree: dict, plan: TierPlan, store: Optional[OptionalStore]):
+    def __init__(
+        self,
+        tree: dict,
+        plan: TierPlan,
+        store: Optional[OptionalStore],
+        *,
+        device_budget_bytes: Optional[int] = None,
+    ):
         self._tree = tree
         self._flat = dict(flatten_with_paths(tree))
         self.plan = plan
         self.store = store
         self.stats = LoaderStats()
-        self._resident: set[str] = set()
         self._lock = threading.RLock()
-        # placeholder-resident units: every tier-1 unit starts cold except
-        # the plan's preloaded hot set (loaded by the cold-start manager).
+        self.residency = ResidencyManager(self._lock, budget_bytes=device_budget_bytes)
         self._all_units: dict[str, Unit] = {}
         for d in plan.decisions.values():
             for u in d.units:
@@ -83,50 +274,261 @@ class TieredParams:
 
     # -- residency ----------------------------------------------------------
     def is_resident(self, key: str) -> bool:
-        return key in self._resident
+        return self.residency.is_resident(key)
 
     def mark_resident(self, key: str) -> None:
-        self._resident.add(key)
+        """Force-mark without moving bytes (testing/bootstrap escape hatch)."""
+        with self._lock:
+            if self.residency.begin_load(key, "mark"):
+                self.residency.commit_load(key, self._unit_nbytes(key), "mark")
 
     @property
     def resident_keys(self) -> set:
-        return set(self._resident)
+        return self.residency.resident_keys
+
+    @property
+    def resident_bytes(self) -> int:
+        return self.residency.resident_bytes
 
     def resident_fraction(self) -> float:
         n = len(self._all_units)
-        return len(self._resident) / n if n else 1.0
+        return len(self.residency.resident_keys) / n if n else 1.0
+
+    def _unit_nbytes(self, key: str) -> int:
+        u = self._all_units.get(key)
+        if u is not None and u.nbytes:
+            return u.nbytes
+        if self.store is not None and key in self.store.entries:
+            return self.store.entries[key].rsize
+        return 0
 
     # -- the rewrite_template analogue ---------------------------------------
-    def ensure(self, keys: Iterable[str]) -> int:
+    def ensure(self, keys: Iterable[str], *, pin: bool = False, source: str = "fault") -> int:
         """Fault in the given unit keys. Returns bytes moved (0 = warm hit).
 
-        This is the two-line stub body: check residency, fetch on miss.
+        This is the two-line stub body grown into the state machine: check
+        residency, claim COLD keys, read+decode off the lock, evict-to-fit,
+        install, and wait out any loads another thread (the prefetcher)
+        already owns. Idempotent and thread-safe; with ``pin=True`` the
+        keys stay unevictable until a matching ``release()``.
         """
-        moved = 0
+        keys = list(dict.fromkeys(keys))
+        t_start = time.perf_counter()
+        res = self.residency
+        to_load: list[str] = []
+        wait_for: list[tuple[str, str]] = []  # (key, in-flight loader source)
         with self._lock:
-            miss = [k for k in keys if k not in self._resident]
-            if not miss:
-                self.stats.hits += len(list(keys)) if not isinstance(keys, (list, tuple, set)) else len(keys)
-                return 0
+            for k in keys:
+                st = res.state_of(k)
+                if st == RESIDENT:
+                    if res.touch(k) == "prefetch":
+                        self.stats.prefetch_hits += 1
+                    else:
+                        self.stats.hits += 1
+                elif st == LOADING:
+                    wait_for.append((k, res.loader_of(k)))
+                else:
+                    if res.begin_load(k, source):
+                        to_load.append(k)
+            if pin:
+                res.pin(keys)
+        if not to_load and not wait_for:
+            return 0
+
+        moved = 0
+        if to_load:
             if self.store is None:
+                with self._lock:
+                    for k in to_load:
+                        res.abort_load(k)
                 raise RuntimeError(
-                    f"tier-1 units {miss[:3]}... required but no optional store attached"
+                    f"tier-1 units {to_load[:3]}... required but no optional store attached"
                 )
-            for key in sorted(miss, key=lambda k: self.store.entries[k].offset):
-                t0 = time.perf_counter()
-                arr = self.store.fetch(key)
-                t1 = time.perf_counter()
-                self._install(self._all_units[key], arr)
-                t2 = time.perf_counter()
-                self._resident.add(key)
-                self.stats.misses += 1
-                self.stats.events.append(LoadEvent(key, arr.nbytes, t1 - t0, t2 - t1))
+            ordered = sorted(to_load, key=lambda k: self.store.entries[k].offset)
+            for i, key in enumerate(ordered):
+                try:
+                    t0 = time.perf_counter()
+                    arr = self.store.fetch(key)  # pread + decompress, no lock
+                    t1 = time.perf_counter()
+                except Exception:
+                    with self._lock:
+                        # roll back this key AND every not-yet-loaded claim,
+                        # or they'd sit in LOADING with no loader forever
+                        for k in ordered[i:]:
+                            res.abort_load(k)
+                    raise
+                with self._lock:
+                    self._evict_to_fit(arr.nbytes)
+                    self._install(self._all_units[key], arr)
+                    t2 = time.perf_counter()
+                    res.commit_load(key, arr.nbytes, source)
+                    if res.was_evicted(key):
+                        self.stats.refaults += 1
+                    if source == "fault":  # preload is not a request-path miss
+                        self.stats.misses += 1
+                    self.stats.events.append(
+                        LoadEvent(key, arr.nbytes, t1 - t0, t2 - t1,
+                                  t=time.monotonic(), source=source)
+                    )
                 moved += arr.nbytes
+
+        if wait_for:
+            with self._lock:
+                for k, loader in wait_for:
+                    while not res.is_resident(k):
+                        if res.begin_load(k, source):
+                            # the other loader aborted — take over synchronously
+                            self._lock.release()
+                            try:
+                                moved += self._load_one(k, source)
+                            finally:
+                                self._lock.acquire()
+                            break
+                        if not res.wait_resident(k) and res.state_of(k) == LOADING:
+                            # never return with the key silently cold — the
+                            # caller would compute on placeholder zeros
+                            raise RuntimeError(
+                                f"timed out waiting for in-flight load of {k!r}"
+                            )
+                        # COLD after an abort: loop back and try to claim
+                    else:
+                        res.touch(k)
+                        if loader == "prefetch":
+                            self.stats.prefetch_waits += 1
+                        # a sibling demand load already counted its miss
+        if source == "fault":  # miss-stall percentiles are request-path only
+            self.stats.stalls.append(time.perf_counter() - t_start)
         return moved
+
+    def _load_one(self, key: str, source: str) -> int:
+        """Synchronous load of one already-claimed key (takeover path)."""
+        res = self.residency
+        try:
+            t0 = time.perf_counter()
+            arr = self.store.fetch(key)
+            t1 = time.perf_counter()
+        except Exception:
+            with self._lock:
+                res.abort_load(key)
+            raise
+        with self._lock:
+            self._evict_to_fit(arr.nbytes)
+            self._install(self._all_units[key], arr)
+            t2 = time.perf_counter()
+            res.commit_load(key, arr.nbytes, source)
+            if source == "fault":
+                self.stats.misses += 1
+            self.stats.events.append(
+                LoadEvent(key, arr.nbytes, t1 - t0, t2 - t1,
+                          t=time.monotonic(), source=source)
+            )
+        return arr.nbytes
 
     def ensure_all(self) -> int:
         """Load every tier-1 unit (degrades to the 'full' baseline)."""
         return self.ensure(list(self._all_units))
+
+    def touch(self, keys: Iterable[str]) -> None:
+        """Refresh LRU recency without demand-access accounting (used by
+        predictive hints on already-resident units)."""
+        with self._lock:
+            for k in keys:
+                self.residency.touch(k, claim_prefetch=False)
+
+    def release(self, keys: Iterable[str]) -> None:
+        """Unpin keys pinned by ``ensure(pin=True)`` — they become
+        evictable again once every pin is released. If pinned installs
+        overshot the budget, the excess is reclaimed here (LRU first), so
+        over-budget residency never outlives the step that forced it."""
+        with self._lock:
+            self.residency.release(keys)
+            self._evict_to_budget()
+
+    def _evict_to_budget(self) -> None:
+        """Evict LRU unpinned units until resident bytes fit the budget.
+        Caller holds the lock."""
+        res = self.residency
+        if res.budget_bytes is None:
+            return
+        need = res.resident_bytes - res.budget_bytes
+        if need <= 0:
+            return
+        for k in res.select_victims(need):
+            self._evict_one(k)
+
+    # -- prefetch integration (DESIGN.md §8.2) -------------------------------
+    def claim_for_prefetch(self, key: str) -> bool:
+        """COLD → LOADING on behalf of the prefetcher's reader thread."""
+        if key not in self._all_units:
+            return False
+        with self._lock:
+            return self.residency.begin_load(key, "prefetch")
+
+    def abort_prefetch(self, key: str) -> None:
+        with self._lock:
+            self.residency.abort_load(key)
+
+    def install_prefetched(self, key: str, arr: np.ndarray, fetch_s: float = 0.0) -> int:
+        """Upload one staged host array claimed via ``claim_for_prefetch``.
+
+        The host-side dtype conversion/copy happens *before* taking the
+        shared lock (leaf dtypes are fixed at allocation), so request-path
+        ``ensure()`` calls are not serialized behind the bulk of the
+        background upload work.
+        """
+        unit = self._all_units.get(key)
+        if unit is None or self.residency.state_of(key) != LOADING:
+            return 0
+        nbytes = arr.nbytes
+        host = jnp.asarray(arr, dtype=self._flat[unit.path].dtype)
+        with self._lock:
+            if self.residency.state_of(key) != LOADING:
+                return 0
+            self._evict_to_fit(nbytes)
+            t0 = time.perf_counter()
+            self._install(unit, host)
+            upload_s = time.perf_counter() - t0
+            self.residency.commit_load(key, nbytes, "prefetch")
+            self.stats.events.append(
+                LoadEvent(key, nbytes, fetch_s, upload_s,
+                          t=time.monotonic(), source="prefetch")
+            )
+        return nbytes
+
+    # -- eviction -------------------------------------------------------------
+    def _evict_to_fit(self, incoming_nbytes: int) -> None:
+        """Evict LRU unpinned units until the incoming bytes fit the budget.
+        Caller holds the lock. If nothing is evictable the install proceeds
+        (correctness over budget) and the overshoot is counted."""
+        res = self.residency
+        budget = res.budget_bytes
+        if budget is None:
+            return
+        need = res.resident_bytes + incoming_nbytes - budget
+        if need <= 0:
+            return
+        for k in res.select_victims(need):
+            self._evict_one(k)
+        if res.resident_bytes + incoming_nbytes > budget:
+            res.overshoot_events += 1
+
+    def _evict_one(self, key: str) -> int:
+        """Reinstall the placeholder for one RESIDENT unpinned unit."""
+        unit = self._all_units[key]
+        self._install_placeholder(unit)
+        nb = self.residency.evict_commit(key)
+        self.stats.evictions += 1
+        self.stats.evicted_bytes += nb
+        return nb
+
+    def evict(self, keys: Iterable[str]) -> int:
+        """Explicitly evict resident, unpinned units. Returns bytes freed."""
+        freed = 0
+        with self._lock:
+            for k in keys:
+                if self.residency.is_resident(k) and self.residency.pins_of(k) == 0:
+                    freed += self._evict_one(k)
+        return freed
 
     # -- installation --------------------------------------------------------
     def _install(self, unit: Unit, arr: np.ndarray) -> None:
@@ -139,6 +541,18 @@ class TieredParams:
             new = leaf.at[unit.sel + (slice(lo, hi),)].set(host) if unit.sel else leaf.at[lo:hi].set(host)
         else:  # (layer,) expert slice
             new = leaf.at[unit.sel].set(host)
+        self._set_leaf(unit.path, new)
+
+    def _install_placeholder(self, unit: Unit) -> None:
+        """The eviction inverse of ``_install``: zero the unit's slice."""
+        leaf = self._flat[unit.path]
+        if not unit.sel and unit.rows is None:
+            new = jax.device_put(jnp.zeros(leaf.shape, leaf.dtype), self._leaf_sharding(leaf))
+        elif unit.rows is not None:
+            lo, hi = unit.rows
+            new = leaf.at[unit.sel + (slice(lo, hi),)].set(0) if unit.sel else leaf.at[lo:hi].set(0)
+        else:
+            new = leaf.at[unit.sel].set(0)
         self._set_leaf(unit.path, new)
 
     def _leaf_sharding(self, leaf):

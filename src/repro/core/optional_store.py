@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 import os
 import struct
+import threading
 import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Optional
@@ -139,7 +140,13 @@ class OptionalStoreWriter:
 
 
 class OptionalStore:
-    """Read side — opened once at cold start; ``fetch`` per miss."""
+    """Read side — opened once at cold start; ``fetch`` per miss.
+
+    Reads are thread-safe: the request path (synchronous fault-in) and the
+    prefetcher's reader thread (DESIGN.md §8) share one handle, so byte
+    reads go through ``os.pread`` (positioned, no shared seek cursor) with
+    a locked seek+read fallback for platforms without ``pread``.
+    """
 
     def __init__(self, path: str):
         self.path = path
@@ -153,6 +160,8 @@ class OptionalStore:
             for k, v in man["entries"].items()
         }
         self._f = open(path, "rb")
+        self._read_lock = threading.Lock()
+        self._pread = getattr(os, "pread", None)
         if self._f.read(len(MAGIC)) != MAGIC:
             raise ValueError(f"{path}: bad magic — not an optional store")
 
@@ -170,11 +179,25 @@ class OptionalStore:
     def raw_bytes(self) -> int:
         return sum(e.rsize for e in self.entries.values())
 
-    def fetch(self, key: str) -> np.ndarray:
+    def read_raw(self, key: str) -> bytes:
+        """Positioned read of one unit's compressed frame (thread-safe)."""
         e = self.entries[key]
-        self._f.seek(e.offset)
-        buf = self._f.read(e.csize)
+        if self._pread is not None:
+            return self._pread(self._f.fileno(), e.csize, e.offset)
+        with self._read_lock:
+            self._f.seek(e.offset)
+            return self._f.read(e.csize)
+
+    def decode(self, key: str, buf: bytes) -> np.ndarray:
+        """Decompress one unit's frame (CPU-bound; safe off the lock)."""
+        e = self.entries[key]
         return _decode(buf, e.codec, e.shape, _np_dtype(e.dtype))
+
+    def fetch(self, key: str) -> np.ndarray:
+        return self.decode(key, self.read_raw(key))
+
+    def unit_nbytes(self, key: str) -> int:
+        return self.entries[key].rsize
 
     def fetch_many(self, keys: Iterable[str]) -> dict[str, np.ndarray]:
         # sort by offset: sequential reads, one pass over the file region

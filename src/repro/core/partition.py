@@ -2,7 +2,8 @@
 
 Combines the exact graph-level reachability (param_graph) with the model's
 access annotations (ParamSpec.access) and the deployment profile into a
-per-leaf ``TierDecision``. The strategy mirrors §4 of the paper exactly:
+per-leaf ``TierDecision`` (DESIGN.md §4). The strategy mirrors §4 of the
+paper exactly:
 
   * *aggressive identification*: any leaf whose bytes can be deferred is
     deferred — unreachable leaves, modal leaves outside the served
@@ -38,12 +39,15 @@ class Unit:
     ``sel`` is an integer index prefix into the leaf (e.g. ``(layer,
     expert)`` for a scan-stacked expert table, ``(expert,)`` unstacked);
     ``rows`` is a half-open row range on the axis after the prefix.
+    ``nbytes`` is the raw (uncompressed) device cost of the unit — the
+    quantity the residency budget charges/credits (DESIGN.md §8).
     """
 
     key: str          # "<path>" | "<path>#l<i>e<j>" | "<path>#rg<i>"
     path: str
     sel: tuple = ()
     rows: Optional[tuple] = None  # (row_start, row_end)
+    nbytes: int = 0
 
 
 @dataclass(frozen=True)
@@ -118,25 +122,34 @@ def _leaf_nbytes(leaf: Any) -> int:
     return int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize if leaf.shape else np.dtype(leaf.dtype).itemsize
 
 
-def _expert_units(path: str, shape: tuple, expert_axis: int) -> tuple:
+def _expert_units(path: str, shape: tuple, expert_axis: int, itemsize: int) -> tuple:
     """Per-expert units; for scan-stacked tables (axes = ("layers",
     "experts", …)) the unit is one (layer, expert) slice — the finest
     granularity a request's routing decision selects."""
     n_exp = shape[expert_axis]
     if expert_axis == 0:
-        return tuple(Unit(f"{path}#e{e}", path, sel=(e,)) for e in range(n_exp))
+        slice_bytes = int(np.prod(shape[1:])) * itemsize
+        return tuple(
+            Unit(f"{path}#e{e}", path, sel=(e,), nbytes=slice_bytes)
+            for e in range(n_exp)
+        )
     n_layers = shape[0]
+    slice_bytes = int(np.prod(shape[2:])) * itemsize
     return tuple(
-        Unit(f"{path}#l{l}e{e}", path, sel=(l, e))
+        Unit(f"{path}#l{l}e{e}", path, sel=(l, e), nbytes=slice_bytes)
         for l in range(n_layers)
         for e in range(n_exp)
     )
 
 
-def _row_units(path: str, n_rows: int, group: int) -> tuple:
+def _row_units(path: str, n_rows: int, group: int, row_nbytes: int) -> tuple:
     n_groups = math.ceil(n_rows / group)
     return tuple(
-        Unit(f"{path}#rg{g}", path, rows=(g * group, min((g + 1) * group, n_rows)))
+        Unit(
+            f"{path}#rg{g}", path,
+            rows=(g * group, min((g + 1) * group, n_rows)),
+            nbytes=(min((g + 1) * group, n_rows) - g * group) * row_nbytes,
+        )
         for g in range(n_groups)
     )
 
@@ -165,7 +178,7 @@ def build_tier_plan(
             decisions[path] = TierDecision(
                 path, 1, "leaf",
                 "unreachable from served entries (static)", nbytes,
-                units=(Unit(path, path),),
+                units=(Unit(path, path, nbytes=nbytes),),
             )
             continue
 
@@ -183,7 +196,7 @@ def build_tier_plan(
             else:
                 decisions[path] = TierDecision(
                     path, 1, "leaf", f"modal:{modality} not in profile", nbytes,
-                    units=(Unit(path, path),),
+                    units=(Unit(path, path, nbytes=nbytes),),
                 )
             continue
 
@@ -196,7 +209,7 @@ def build_tier_plan(
             if profile.resident_experts < 0:
                 decisions[path] = TierDecision(path, 0, "expert", "baseline: all experts resident", nbytes)
                 continue
-            units = _expert_units(path, leaf.shape, expert_axis)
+            units = _expert_units(path, leaf.shape, expert_axis, np.dtype(leaf.dtype).itemsize)
             n_res = min(profile.resident_experts, n_exp)
             # group units by layer prefix so each layer keeps n_res residents
             by_layer: dict = {}
@@ -219,7 +232,7 @@ def build_tier_plan(
             if profile.hot_vocab_fraction >= 1.0:
                 decisions[path] = TierDecision(path, 0, "rows", "baseline: all rows resident", nbytes)
                 continue
-            units = _row_units(path, n_rows, profile.vocab_row_group)
+            units = _row_units(path, n_rows, profile.vocab_row_group, nbytes // n_rows)
             n_res = int(math.ceil(len(units) * profile.hot_vocab_fraction))
             if hot_units_stats:
                 ranked = sorted(units, key=lambda u: -hot_units_stats.get(u.key, 0.0))

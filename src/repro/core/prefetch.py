@@ -1,0 +1,244 @@
+"""⑤ Predictive prefetch — hiding the one-time fault latency (DESIGN.md §8.2).
+
+FaaSLight makes a misprediction a latency event instead of a failure; the
+profile-guided follow-up (arXiv:2504.19283) shows that *predictively*
+loading the deferred tail hides most of that latency. The ``Prefetcher``
+consumes access hints from the serving engine (router usage masks, top-k
+vocab candidates from the last decoded logits) and pulls tier-1 units from
+the ``OptionalStore`` off the request path:
+
+    hint(keys) ──▶ [hint set] ──reader thread──▶ fetch+decompress (host)
+                                  │ bounded, double-buffered staging
+                                  ▼
+                   [stage queue] ──uploader thread──▶ device install
+
+Two threads pipeline the work: the *reader* does pread + zlib decompress
+(both release the GIL) into host staging buffers, while the *uploader*
+drains staged buffers into the device via ``TieredParams.install_prefetched``.
+The stage queue is bounded (default two buffers — classic double
+buffering), so a slow device never lets host staging grow without bound,
+and decompress of batch N+1 overlaps upload of batch N, which overlaps the
+model's own compute on the request thread.
+
+Claim protocol (the "eviction never races an in-flight read" invariant):
+the reader claims each key COLD→LOADING via ``claim_for_prefetch`` before
+touching the store; a demand ``ensure()`` that wants a claimed key waits on
+the residency condition instead of reading twice, and eviction never
+selects a LOADING unit. On shutdown every unfinished claim is aborted back
+to COLD so no waiter hangs.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core.on_demand import TieredParams
+
+
+@dataclass
+class PrefetchStats:
+    hints: int = 0             # keys offered via hint()
+    enqueued: int = 0          # keys accepted (cold + not already queued)
+    loaded_units: int = 0
+    loaded_bytes: int = 0
+    skipped_resident: int = 0  # hints dropped because already resident/queued
+    batches: int = 0
+    errors: int = 0
+
+    def to_dict(self) -> dict:
+        return {
+            "hints": self.hints,
+            "enqueued": self.enqueued,
+            "loaded_units": self.loaded_units,
+            "loaded_bytes": self.loaded_bytes,
+            "skipped_resident": self.skipped_resident,
+            "batches": self.batches,
+            "errors": self.errors,
+        }
+
+
+@dataclass
+class _Stage:
+    """One host staging buffer: decoded units awaiting device upload."""
+
+    items: list = field(default_factory=list)  # (key, np.ndarray, fetch_s)
+
+
+class Prefetcher:
+    """Background tier-1 loader driven by engine hints (DESIGN.md §8.2)."""
+
+    def __init__(
+        self,
+        tiered: TieredParams,
+        *,
+        batch_units: int = 8,
+        queue_depth: int = 2,
+        name: str = "prefetch",
+    ):
+        if tiered.store is None:
+            raise ValueError("prefetcher needs a TieredParams with an optional store")
+        self.tiered = tiered
+        self.batch_units = max(1, batch_units)
+        self.stats = PrefetchStats()
+        # hint set keeps insertion order (FIFO priority) while deduping
+        self._hints: OrderedDict[str, None] = OrderedDict()
+        self._hint_lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stage_q: queue.Queue[_Stage] = queue.Queue(maxsize=max(1, queue_depth))
+        self._inflight = 0  # claimed by reader, not yet installed/aborted
+        self._idle = threading.Condition(self._hint_lock)
+        self._stop = threading.Event()
+        self._reader = threading.Thread(target=self._read_loop, name=f"{name}-read", daemon=True)
+        self._uploader = threading.Thread(target=self._upload_loop, name=f"{name}-upload", daemon=True)
+        self._reader.start()
+        self._uploader.start()
+
+    # -- producer side ---------------------------------------------------------
+    def hint(self, keys: Iterable[str]) -> int:
+        """Offer access hints. Non-blocking; cold keys join the FIFO hint
+        set, already-resident keys get an LRU-recency touch (a predicted
+        reuse should not be the next eviction victim). Returns keys
+        accepted for loading."""
+        if self._stop.is_set():
+            return 0
+        accepted = 0
+        touch: list[str] = []
+        res = self.tiered.residency
+        with self._hint_lock:
+            for k in keys:
+                self.stats.hints += 1
+                if k in self._hints or res.state_of(k) != "cold":
+                    self.stats.skipped_resident += 1
+                    if res.is_resident(k):
+                        touch.append(k)
+                    continue
+                self._hints[k] = None
+                accepted += 1
+            self.stats.enqueued += accepted
+        if touch:
+            self.tiered.touch(touch)
+        if accepted:
+            self._wake.set()
+        return accepted
+
+    @property
+    def hit_rate(self) -> float:
+        return self.tiered.stats.prefetch_hit_rate
+
+    # -- lifecycle -------------------------------------------------------------
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Block until every accepted hint is installed (or aborted)."""
+        deadline = time.monotonic() + timeout
+        with self._idle:
+            while self._hints or self._inflight:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._idle.wait(min(remaining, 0.1))
+        return True
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        self._wake.set()
+        self._reader.join(timeout)
+        self._uploader.join(timeout)
+        # abort anything still staged so demand waiters never hang
+        while True:
+            try:
+                stage = self._stage_q.get_nowait()
+            except queue.Empty:
+                break
+            for key, _, _ in stage.items:
+                self.tiered.abort_prefetch(key)
+                self._done(1)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- reader thread: fetch + decompress into host staging -------------------
+    def _next_batch(self) -> list[str]:
+        with self._hint_lock:
+            batch = []
+            while self._hints and len(batch) < self.batch_units:
+                batch.append(self._hints.popitem(last=False)[0])
+            if not self._hints:
+                self._wake.clear()
+            self._inflight += len(batch)
+        return batch
+
+    def _done(self, n: int) -> None:
+        with self._idle:
+            self._inflight -= n
+            self._idle.notify_all()
+
+    def _read_loop(self) -> None:
+        store = self.tiered.store
+        while not self._stop.is_set():
+            if not self._wake.wait(timeout=0.05):
+                continue
+            batch = self._next_batch()
+            if not batch:
+                continue
+            claimed = [k for k in batch if self.tiered.claim_for_prefetch(k)]
+            self._done(len(batch) - len(claimed))
+            if not claimed:
+                continue
+            stage = _Stage()
+            for key in sorted(claimed, key=lambda k: store.entries[k].offset):
+                if self._stop.is_set():
+                    self.tiered.abort_prefetch(key)
+                    self._done(1)
+                    continue
+                try:
+                    t0 = time.perf_counter()
+                    buf = store.read_raw(key)
+                    arr = store.decode(key, buf)
+                    stage.items.append((key, arr, time.perf_counter() - t0))
+                except Exception:
+                    self.stats.errors += 1
+                    self.tiered.abort_prefetch(key)
+                    self._done(1)
+            if not stage.items:
+                continue
+            self.stats.batches += 1
+            while not self._stop.is_set():
+                try:
+                    self._stage_q.put(stage, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            else:  # stopping with a full queue: roll the claims back
+                for key, _, _ in stage.items:
+                    self.tiered.abort_prefetch(key)
+                    self._done(1)
+        # shutdown: abort any hints claimed would-be (none claimed here);
+        # outstanding hint-set entries are simply forgotten.
+
+    # -- uploader thread: staged host arrays → device ---------------------------
+    def _upload_loop(self) -> None:
+        while not (self._stop.is_set() and self._stage_q.empty()):
+            try:
+                stage = self._stage_q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            for key, arr, fetch_s in stage.items:
+                try:
+                    moved = self.tiered.install_prefetched(key, arr, fetch_s)
+                    if moved:
+                        self.stats.loaded_units += 1
+                        self.stats.loaded_bytes += moved
+                except Exception:
+                    self.stats.errors += 1
+                    self.tiered.abort_prefetch(key)
+                finally:
+                    self._done(1)

@@ -39,7 +39,12 @@ def main(argv=None) -> int:
     ap.add_argument("--gen-steps", type=int, default=8)
     ap.add_argument("--resident-experts", type=int, default=1)
     ap.add_argument("--hot-vocab", type=float, default=0.25)
-    ap.add_argument("--policy", default="stats", choices=["strict", "stats", "full"])
+    ap.add_argument("--policy", default="stats", choices=["strict", "stats", "full"],
+                    help="residency budget preset (DESIGN.md §4.2); also shapes the profile")
+    ap.add_argument("--device-budget-bytes", type=int, default=0,
+                    help="override the preset's tier-1 device budget (0 = preset default)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="disable the async prefetcher even where the preset enables it")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -78,7 +83,10 @@ def main(argv=None) -> int:
         build_artifact(params, result, outdir)
 
     server = cold_start(model, outdir, result if args.mode == "after2" else None,
-                        mode=args.mode, warm_shapes=((args.batch, args.prompt_len),))
+                        mode=args.mode, warm_shapes=((args.batch, args.prompt_len),),
+                        residency=args.policy if args.mode == "after2" else None,
+                        device_budget_bytes=args.device_budget_bytes or None,
+                        prefetch=False if args.no_prefetch else None)
     print(f"[serve] cold start ({args.mode}):", json.dumps(server.report.to_dict(), default=float))
 
     engine = GenerationEngine(server, max_seq=args.prompt_len + args.gen_steps + 8)
@@ -88,7 +96,15 @@ def main(argv=None) -> int:
           f"decode={stats_r.decode_s*1e3:.1f}ms faults={stats_r.faulted_units} "
           f"({stats_r.faulted_bytes/2**20:.1f}MiB, {stats_r.fault_s*1e3:.1f}ms)")
     if server.tiered is not None:
-        print(f"[serve] resident fraction: {server.tiered.resident_fraction():.3f}")
+        ts = server.tiered.stats
+        budget = server.tiered.residency.budget_bytes
+        print(f"[serve] resident fraction: {server.tiered.resident_fraction():.3f}; "
+              f"resident {server.tiered.resident_bytes:,}B"
+              + (f" / budget {budget:,}B" if budget else " (no budget)"))
+        print(f"[serve] prefetch hit rate {ts.prefetch_hit_rate:.2f}; "
+              f"evictions {ts.evictions}; refaults {ts.refaults}; "
+              f"stall p99 {ts.stall_percentile(99)*1e3:.2f}ms")
+    server.close()
     return 0
 
 

@@ -1,10 +1,17 @@
 """Serving: cold-start manager (before/after1/after2 modes, residency
-policies) + batched generation engine with on-demand fault-in."""
+budget presets) + batched generation engine with on-demand fault-in and
+predictive prefetch hints."""
 
-from repro.serving.cold_start import ColdStartReport, ColdStartServer, cold_start
+from repro.serving.cold_start import (
+    RESIDENCY_PRESETS,
+    ColdStartReport,
+    ColdStartServer,
+    cold_start,
+)
 from repro.serving.engine import GenerationEngine, RequestStats
 
 __all__ = [
+    "RESIDENCY_PRESETS",
     "ColdStartReport",
     "ColdStartServer",
     "cold_start",

@@ -15,10 +15,15 @@ Modes:
            allocated, hot units preloaded from the optional store; misses
            fault in at request time (the full FaaSLight pipeline)
 
-Residency policies (DESIGN.md §4.2):
-  strict — tier-0 only (resident_experts=0, cold vocab tail)
-  stats  — + units hot in offline profiles (router/vocab statistics)
-  full   — everything resident (≈ *before* performance, tiered layout)
+Residency policies (DESIGN.md §4.2) — device-budget presets for the tier-1
+residency layer (``RESIDENCY_PRESETS``):
+  strict — tight budget (25% of tier-1 bytes), no prefetch: misses pay the
+           full fault latency, cold units are evicted aggressively
+  stats  — medium budget (50% of tier-1 bytes) + async prefetch driven by
+           engine hints (the profile-guided follow-up's predictive load)
+  full   — unlimited budget + prefetch (≈ *before* warm performance once
+           every unit has been touched; tiered artifact layout retained)
+An explicit ``device_budget_bytes`` overrides the preset's budget.
 """
 
 from __future__ import annotations
@@ -36,8 +41,16 @@ from repro.checkpoint import tensorstore_lite as tsl
 from repro.core.analyzer import AnalysisResult
 from repro.core.on_demand import TieredParams
 from repro.core.optional_store import OptionalStore
+from repro.core.prefetch import Prefetcher
 from repro.models.zoo import Model
 from repro.utils.tree import flatten_with_paths, tree_from_flat
+
+# residency policy -> (tier-1 budget fraction, prefetch enabled); DESIGN.md §4.2
+RESIDENCY_PRESETS: dict = {
+    "strict": (0.25, False),
+    "stats": (0.5, True),
+    "full": (None, True),
+}
 
 
 @dataclass
@@ -82,13 +95,24 @@ class ColdStartServer:
         *,
         tiered: Optional[TieredParams] = None,
         store: Optional[OptionalStore] = None,
+        prefetcher: Optional[Prefetcher] = None,
     ):
         self.model = model
         self.params = params
         self.report = report
         self.tiered = tiered
         self.store = store
+        self.prefetcher = prefetcher
         self._compiled: dict[tuple, Callable] = {}
+
+    def close(self) -> None:
+        """Stop the prefetch threads and release the store handle."""
+        if self.prefetcher is not None:
+            self.prefetcher.stop()
+            self.prefetcher = None
+        if self.store is not None:
+            self.store.close()
+            self.store = None
 
     # -- warm-set / on-demand compilation ------------------------------------
     def compiled_prefill(self, B: int, S: int):
@@ -118,9 +142,15 @@ def cold_start(
     warm_shapes: tuple = ((1, 64),),  # (B, S) pairs to pre-compile
     compile_warm_set: bool = True,
     put: Optional[Callable] = None,  # leaf device_put override (sharded serving)
+    residency: Optional[str] = None,  # RESIDENCY_PRESETS name (after2 only)
+    device_budget_bytes: Optional[int] = None,  # overrides the preset budget
+    prefetch: Optional[bool] = None,  # overrides the preset prefetch default
+    prefetch_batch_units: int = 8,
 ) -> ColdStartServer:
     """Run one timed cold start. ``result`` is required for after2."""
     put = put or (lambda host: jax.device_put(host))
+    if residency is not None and residency not in RESIDENCY_PRESETS:
+        raise ValueError(f"unknown residency policy {residency!r}; want one of {sorted(RESIDENCY_PRESETS)}")
     report = ColdStartReport(mode=mode)
     abstract = model.abstract()
 
@@ -160,14 +190,29 @@ def cold_start(
                 live_flat[path] = put(np.zeros(leaf.shape, leaf.dtype))
         tree = tree_from_flat(live_flat)
         _block_until_ready(tree)
-        tiered = TieredParams(tree, plan, store)
+        # resolve the residency preset into a budget + prefetch default
+        budget = device_budget_bytes
+        want_prefetch = prefetch
+        if residency is not None:
+            frac, preset_prefetch = RESIDENCY_PRESETS[residency]
+            if budget is None and frac is not None:
+                budget = int(frac * plan.tier1_bytes)
+                # keep the machine functional: never below two of the
+                # largest units (one incoming + one pinned)
+                max_unit = max((e.rsize for e in store.entries.values()), default=0)
+                budget = max(budget, 2 * max_unit)
+            if want_prefetch is None:
+                want_prefetch = preset_prefetch
+        tiered = TieredParams(tree, plan, store, device_budget_bytes=budget)
         # preload the hot set (the paper's offline-profiled module-init list)
         hot = [k for d in plan.decisions.values() for k in d.resident_units]
-        moved = tiered.ensure(hot) if hot else 0
+        moved = tiered.ensure(hot, source="preload") if hot else 0
         t2 = time.perf_counter()
         report.read_s, report.upload_s = t1 - t0, t2 - t1
         report.bytes_uploaded = report.bytes_read + moved
-        server = ColdStartServer(model, tree, report, tiered=tiered, store=store)
+        prefetcher = Prefetcher(tiered, batch_units=prefetch_batch_units) if want_prefetch else None
+        server = ColdStartServer(model, tree, report, tiered=tiered, store=store,
+                                 prefetcher=prefetcher)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 

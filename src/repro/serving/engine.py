@@ -12,6 +12,17 @@ fails on a cold unit — it *faults*. Two fault classes:
     shift once real weights replace placeholders, the retry iterates to a
     fixed point (bounded; ≤3 in practice — measured in RQ4).
 
+With a prefetcher attached (DESIGN.md §8.2) the engine also *emits access
+hints* per decoded batch so the next step's units load off the request
+path: the top-k candidate tokens of the current logits hint the vocab
+row-groups the next embed will touch, and each step's routed-expert set
+hints the experts the next step is most likely to reuse (keeping them
+LRU-fresh and re-pulling them if the budget evicted them).
+
+Under a device-bytes budget, every step's units are pinned for the
+duration of the step (``ensure(pin=True)`` … ``release()``), so eviction
+can never zero a unit between its fault-in and the compute that needs it.
+
 Decode caches round-trip through the engine, which strips the usage masks
 before the next step (they are outputs, not state).
 """
@@ -42,6 +53,8 @@ class RequestStats:
     faulted_bytes: int = 0
     faulted_units: int = 0
     steps: int = 0
+    prefetch_hits: int = 0   # demand touches served by the prefetcher
+    hinted_units: int = 0    # hints this request emitted (accepted)
 
 
 def _strip_usage(tree: Any) -> Any:
@@ -59,11 +72,23 @@ def _usage_masks(caches: Any) -> dict[str, np.ndarray]:
 
 
 class GenerationEngine:
-    def __init__(self, server: ColdStartServer, *, max_seq: int = 256):
+    def __init__(self, server: ColdStartServer, *, max_seq: int = 256, hint_topk: int = 8):
         self.server = server
         self.model = server.model
         self.max_seq = max_seq
+        self.hint_topk = hint_topk
+        self.prefetcher = getattr(server, "prefetcher", None)
         self._expert_units_index = self._build_expert_index()
+        self._row_group = self._embed_row_group()
+
+    def _embed_row_group(self) -> int:
+        tiered = self.server.tiered
+        if tiered is None:
+            return 0
+        dec = tiered.plan.decisions.get("embed")
+        if dec is None or dec.tier != 1 or dec.granularity != "rows":
+            return 0
+        return dec.units[0].rows[1] - dec.units[0].rows[0]
 
     # -- expert usage → unit keys --------------------------------------------
     def _build_expert_index(self) -> dict[str, list[str]]:
@@ -94,37 +119,56 @@ class GenerationEngine:
         return [k for k in keys if not tiered.is_resident(k)]
 
     # -- vocab pre-fault -------------------------------------------------------
-    def _prefault_rows(self, tokens: np.ndarray, stats: RequestStats) -> None:
+    def _prefault_rows(self, tokens: np.ndarray, stats: RequestStats, pins: list) -> None:
+        """Ensure (and pin) the row-groups this step will embed. Keys are
+        appended to ``pins`` *before* the ensure so the caller's finally
+        block releases them even if the load raises mid-batch."""
         tiered = self.server.tiered
-        if tiered is None:
+        if tiered is None or not self._row_group:
             return
-        dec = tiered.plan.decisions.get("embed")
-        if dec is None or dec.tier != 1 or dec.granularity != "rows":
-            return
-        group = dec.units[0].rows[1] - dec.units[0].rows[0]
-        needed = {f"embed#rg{g}" for g in np.unique(np.asarray(tokens) // group)}
-        miss = [k for k in needed if not tiered.is_resident(k)]
-        if miss:
-            t0 = time.perf_counter()
-            moved = tiered.ensure(miss)
-            stats.fault_s += time.perf_counter() - t0
-            stats.faulted_bytes += moved
-            stats.faulted_units += len(miss)
+        group = self._row_group
+        needed = [f"embed#rg{g}" for g in np.unique(np.asarray(tokens) // group)]
+        n_cold = sum(1 for k in needed if not tiered.is_resident(k))
+        pins.extend(needed)
+        t0 = time.perf_counter()
+        moved = tiered.ensure(needed, pin=True)
+        stats.fault_s += time.perf_counter() - t0
+        stats.faulted_bytes += moved
+        stats.faulted_units += n_cold  # incl. waits on in-flight prefetch
 
-    def _fault_experts(self, caches: Any, stats: RequestStats) -> bool:
-        """Fault any experts the last step routed to. True if faults occurred."""
+    def _fault_experts(self, caches: Any, stats: RequestStats, pins: list) -> list[str]:
+        """Fault (and pin) any experts the last step routed to. Returns the
+        newly faulted keys ([] = the step ran fully warm, no retry needed);
+        pins are registered before the load, as in ``_prefault_rows``."""
         tiered = self.server.tiered
         if tiered is None:
-            return False
+            return []
         miss = self._expert_keys_from_usage(_usage_masks(caches))
         if not miss:
-            return False
+            return []
+        pins.extend(miss)
         t0 = time.perf_counter()
-        moved = tiered.ensure(miss)
+        moved = tiered.ensure(miss, pin=True)
         stats.fault_s += time.perf_counter() - t0
         stats.faulted_bytes += moved
         stats.faulted_units += len(miss)
-        return True
+        return miss
+
+    # -- hint emission (DESIGN.md §8.2) ----------------------------------------
+    def _hint_next_step(self, logits, expert_keys: list[str], stats: RequestStats) -> None:
+        """Predictively warm the units the *next* step will likely touch:
+        row-groups of the top-k candidate tokens, plus this step's routed
+        experts (the strongest predictor of next-step routing)."""
+        if self.prefetcher is None:
+            return
+        hints: list[str] = list(expert_keys)
+        if self._row_group:
+            flat = np.asarray(logits).reshape(-1, np.asarray(logits).shape[-1])
+            k = min(self.hint_topk, flat.shape[-1])
+            top = np.argpartition(-flat, k - 1, axis=-1)[:, :k]
+            hints.extend(f"embed#rg{g}" for g in np.unique(top // self._row_group))
+        if hints:
+            stats.hinted_units += self.prefetcher.hint(hints)
 
     # -- request path -----------------------------------------------------------
     def generate(
@@ -135,7 +179,9 @@ class GenerationEngine:
         greedy: bool = True,
     ) -> tuple[np.ndarray, RequestStats]:
         model, server = self.model, self.server
+        tiered = server.tiered
         stats = RequestStats()
+        hits_before = tiered.stats.prefetch_hits + tiered.stats.prefetch_waits if tiered else 0
         B, S = tokens.shape
         S_max = self.max_seq
         assert S + n_steps <= S_max, (S, n_steps, S_max)
@@ -143,20 +189,29 @@ class GenerationEngine:
         prefill = server.compiled_prefill(B, S)
         decode = server.compiled_decode(B)
 
-        # exact vocab pre-fault for the prompt
-        self._prefault_rows(np.asarray(tokens), stats)
-
-        # prefill with expert-retry to fixed point
-        t0 = time.perf_counter()
-        batch = {"tokens": tokens}
-        logits, caches = prefill(server.live_params(), batch)
-        for _ in range(MAX_FAULT_RETRIES):
-            if not self._fault_experts(caches, stats):
-                break
-            stats.prefill_retries += 1
+        # prefill with exact vocab pre-fault + expert-retry to fixed point;
+        # the step's units stay pinned until its outputs are materialized
+        step_pins: list[str] = []
+        expert_keys: list[str] = []
+        try:
+            self._prefault_rows(np.asarray(tokens), stats, step_pins)
+            t0 = time.perf_counter()
+            batch = {"tokens": tokens}
             logits, caches = prefill(server.live_params(), batch)
-        jax.block_until_ready(logits)
-        stats.prefill_s = time.perf_counter() - t0 - stats.fault_s
+            for _ in range(MAX_FAULT_RETRIES):
+                newly = self._fault_experts(caches, stats, step_pins)
+                if not newly:
+                    break
+                expert_keys.extend(newly)
+                stats.prefill_retries += 1
+                logits, caches = prefill(server.live_params(), batch)
+            jax.block_until_ready(logits)
+            stats.prefill_s = time.perf_counter() - t0 - stats.fault_s
+        finally:
+            if tiered is not None and step_pins:
+                tiered.release(step_pins)
+        # hint after release: evicted/still-cold predictions are loadable now
+        self._hint_next_step(logits, expert_keys, stats)
 
         # move prefill caches into a max-length decode cache
         caches = _strip_usage(caches)
@@ -168,20 +223,33 @@ class GenerationEngine:
         fault_before_decode = stats.fault_s
         for step in range(n_steps - 1):
             tok = jnp.asarray(out[-1])[:, None]
-            self._prefault_rows(np.asarray(tok), stats)
-            pos = jnp.full((B,), S + step, jnp.int32)
-            dbatch = {"tokens": tok, "pos": pos}
-            logits, new_caches = decode(server.live_params(), caches, dbatch)
-            for _ in range(MAX_FAULT_RETRIES):
-                if not self._fault_experts(new_caches, stats):
-                    break
-                stats.decode_retries += 1
+            step_pins = []
+            expert_keys = []
+            try:
+                self._prefault_rows(np.asarray(tok), stats, step_pins)
+                pos = jnp.full((B,), S + step, jnp.int32)
+                dbatch = {"tokens": tok, "pos": pos}
                 logits, new_caches = decode(server.live_params(), caches, dbatch)
-            caches = _strip_usage(new_caches)
-            out.append(np.asarray(jnp.argmax(logits, -1), np.int32))
+                for _ in range(MAX_FAULT_RETRIES):
+                    newly = self._fault_experts(new_caches, stats, step_pins)
+                    if not newly:
+                        break
+                    expert_keys.extend(newly)
+                    stats.decode_retries += 1
+                    logits, new_caches = decode(server.live_params(), caches, dbatch)
+                caches = _strip_usage(new_caches)
+                out.append(np.asarray(jnp.argmax(logits, -1), np.int32))
+            finally:
+                if tiered is not None and step_pins:
+                    tiered.release(step_pins)
+            self._hint_next_step(logits, expert_keys, stats)
             stats.steps += 1
         jax.block_until_ready(logits)
         stats.decode_s = time.perf_counter() - t1 - (stats.fault_s - fault_before_decode)
+        if tiered is not None:
+            stats.prefetch_hits = (
+                tiered.stats.prefetch_hits + tiered.stats.prefetch_waits - hits_before
+            )
         return np.stack(out, axis=1), stats
 
 

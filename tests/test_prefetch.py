@@ -1,0 +1,373 @@
+"""Prefetch + residency/eviction subsystem (DESIGN.md §8).
+
+Covers the acceptance contract of the residency layer:
+  * prefetch-hit vs. fault-in parity — a unit loaded via the prefetcher's
+    staging pipeline lands byte-identical to one faulted synchronously;
+  * eviction-under-budget invariant — resident bytes never exceed the
+    device budget while victims are evictable (high-water asserted);
+  * pins block eviction until released; evicted units refault correctly;
+  * demand ensure() waits out an in-flight prefetch instead of re-reading;
+  * a threaded stress of concurrent ensure()/evict/hint stays consistent;
+  * end-to-end generation under a budget below tier-1 size matches the
+    full baseline and never exceeds the budget.
+"""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.entrypoints import SERVING_PROFILE, DeploymentProfile
+from repro.core.on_demand import TieredParams
+from repro.core.optional_store import OptionalStore, write_store
+from repro.core.partition import TierDecision, TierPlan, Unit, _expert_units, _row_units
+from repro.core.prefetch import Prefetcher
+
+ROWS, COLS, N_UNITS = 16, 32, 8
+UNIT_BYTES = ROWS * COLS * 4
+
+
+def _mini(tmp_path, budget=None, name="mini"):
+    """A one-leaf tiered param tree with N_UNITS row-group units backed by
+    a real optional store — the loader state machine without a model."""
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((N_UNITS * ROWS, COLS)).astype(np.float32)
+    units = tuple(
+        Unit(f"emb#rg{g}", "emb", rows=(g * ROWS, (g + 1) * ROWS), nbytes=UNIT_BYTES)
+        for g in range(N_UNITS)
+    )
+    dec = TierDecision("emb", 1, "rows", "test", data.nbytes, units=units)
+    plan = TierPlan({"emb": dec}, SERVING_PROFILE, [])
+    path = str(tmp_path / f"{name}.blob")
+    write_store(path, [(u.key, data[u.rows[0]: u.rows[1]]) for u in units])
+    tp = TieredParams(
+        {"emb": jnp.zeros(data.shape, jnp.float32)}, plan, OptionalStore(path),
+        device_budget_bytes=budget,
+    )
+    return tp, data, units
+
+
+def _leaf_rows(tp, unit):
+    lo, hi = unit.rows
+    return np.asarray(tp.leaf("emb"))[lo:hi]
+
+
+# ---------------------------------------------------------------------------
+# unit cost metadata
+# ---------------------------------------------------------------------------
+
+def test_unit_nbytes_partition_metadata():
+    itemsize = 4
+    shape = (3, 4, 8, 16)  # (layers, experts, d1, d2)
+    eu = _expert_units("w", shape, 1, itemsize)
+    assert len(eu) == 12
+    assert all(u.nbytes == 8 * 16 * itemsize for u in eu)
+    assert sum(u.nbytes for u in eu) == int(np.prod(shape)) * itemsize
+
+    ru = _row_units("emb", 100, 32, 7)
+    assert [u.nbytes for u in ru] == [32 * 7, 32 * 7, 32 * 7, 4 * 7]
+    assert sum(u.nbytes for u in ru) == 100 * 7
+
+
+# ---------------------------------------------------------------------------
+# prefetch-hit vs fault-in parity
+# ---------------------------------------------------------------------------
+
+def test_prefetch_hit_matches_fault_in(tmp_path):
+    tp_fault, data, units = _mini(tmp_path, name="fault")
+    tp_pf, _, _ = _mini(tmp_path, name="pf")
+
+    key = units[2].key
+    moved_fault = tp_fault.ensure([key])
+    assert moved_fault == UNIT_BYTES
+
+    pf = Prefetcher(tp_pf, batch_units=2)
+    try:
+        assert pf.hint([key]) == 1
+        assert pf.drain(10.0)
+        moved_hit = tp_pf.ensure([key])  # demand touch: prefetch hit
+    finally:
+        pf.stop()
+    assert moved_hit == 0
+    assert tp_pf.stats.prefetch_hits == 1
+    assert tp_pf.stats.misses == 0
+    # loaded bytes identical either way — accounting and content
+    ev_fault = [e for e in tp_fault.stats.events if e.key == key]
+    ev_pf = [e for e in tp_pf.stats.events if e.key == key]
+    assert ev_fault[0].nbytes == ev_pf[0].nbytes == UNIT_BYTES
+    assert ev_pf[0].source == "prefetch" and ev_fault[0].source == "fault"
+    np.testing.assert_array_equal(_leaf_rows(tp_fault, units[2]), _leaf_rows(tp_pf, units[2]))
+    np.testing.assert_array_equal(_leaf_rows(tp_pf, units[2]), data[32:48])
+
+
+def test_hint_drops_resident_and_duplicate_keys(tmp_path):
+    tp, _, units = _mini(tmp_path)
+    tp.ensure([units[0].key])
+    pf = Prefetcher(tp, batch_units=4)
+    try:
+        accepted = pf.hint([units[0].key, units[1].key, units[1].key])
+        assert accepted == 1  # resident and duplicate hints dropped
+        assert pf.drain(10.0)
+    finally:
+        pf.stop()
+    assert tp.is_resident(units[1].key)
+    assert pf.stats.skipped_resident == 2
+
+
+# ---------------------------------------------------------------------------
+# eviction under budget
+# ---------------------------------------------------------------------------
+
+def test_eviction_under_budget_invariant(tmp_path):
+    budget = 3 * UNIT_BYTES
+    tp, data, units = _mini(tmp_path, budget=budget)
+    for u in units:
+        tp.ensure([u.key])
+    res = tp.residency
+    assert res.max_resident_bytes <= budget
+    assert res.resident_bytes == len(res.resident_keys) * UNIT_BYTES
+    assert len(res.resident_keys) == 3
+    assert tp.stats.evictions == N_UNITS - 3
+    assert res.overshoot_events == 0
+    # LRU: the last three ensured units are the residents
+    assert res.resident_keys == {u.key for u in units[-3:]}
+    # evicted slices are placeholder zeros again
+    for u in units[:3]:
+        np.testing.assert_array_equal(_leaf_rows(tp, u), np.zeros((ROWS, COLS), np.float32))
+    # refault of an evicted unit restores exact content
+    tp.ensure([units[0].key])
+    assert tp.stats.refaults == 1
+    np.testing.assert_array_equal(_leaf_rows(tp, units[0]), data[:ROWS])
+    assert res.max_resident_bytes <= budget
+
+
+def test_touch_refreshes_lru_order(tmp_path):
+    budget = 2 * UNIT_BYTES
+    tp, _, units = _mini(tmp_path, budget=budget)
+    tp.ensure([units[0].key])
+    tp.ensure([units[1].key])
+    tp.ensure([units[0].key])  # touch: unit 0 becomes MRU
+    tp.ensure([units[2].key])  # evicts unit 1, not unit 0
+    assert tp.residency.resident_keys == {units[0].key, units[2].key}
+
+
+def test_pin_blocks_eviction_until_release(tmp_path):
+    budget = 2 * UNIT_BYTES
+    tp, _, units = _mini(tmp_path, budget=budget)
+    tp.ensure([units[0].key, units[1].key], pin=True)
+    tp.ensure([units[2].key])  # nothing evictable: overshoot, pins survive
+    assert tp.is_resident(units[0].key) and tp.is_resident(units[1].key)
+    assert tp.residency.overshoot_events == 1
+    tp.release([units[0].key, units[1].key])
+    tp.ensure([units[3].key])  # now eviction can make room
+    assert tp.residency.resident_bytes <= budget
+    assert tp.stats.evictions >= 2
+
+
+def test_release_reclaims_overshoot_without_new_installs(tmp_path):
+    """A pinned step that overshot the budget must be reclaimed at
+    release() even if no further install ever triggers eviction."""
+    budget = 2 * UNIT_BYTES
+    tp, _, units = _mini(tmp_path, budget=budget)
+    pinned = [u.key for u in units[:5]]
+    tp.ensure(pinned, pin=True)  # 5 units resident, all pinned: overshoot
+    assert tp.residency.resident_bytes == 5 * UNIT_BYTES
+    tp.release(pinned)  # no subsequent ensure — reclaim happens here
+    assert tp.residency.resident_bytes <= budget
+    assert tp.stats.evictions == 3
+
+
+def test_mid_batch_load_failure_aborts_all_claims(tmp_path):
+    """A fetch error must roll back every still-LOADING claim in the
+    batch, or later ensure() calls would hang then silently no-op."""
+    tp, _, units = _mini(tmp_path)
+    bad, good = units[0].key, units[1].key
+    # corrupt the first unit's offset so it sorts first and its read raises
+    tp.store.entries[bad].offset = -1
+
+    with pytest.raises(Exception):
+        tp.ensure([bad, good])
+    assert tp.residency.state_of(bad) == "cold"
+    assert tp.residency.state_of(good) == "cold"
+    # the unaffected key loads fine afterwards (no stuck LOADING state)
+    assert tp.ensure([good]) == UNIT_BYTES
+
+
+def test_ensure_waits_for_inflight_prefetch(tmp_path):
+    tp, data, units = _mini(tmp_path)
+    key = units[4].key
+    assert tp.claim_for_prefetch(key)
+
+    def finish():
+        time.sleep(0.15)
+        arr = tp.store.fetch(key)
+        tp.install_prefetched(key, arr)
+
+    t = threading.Thread(target=finish)
+    t.start()
+    moved = tp.ensure([key])  # must block on the in-flight load, not re-read
+    t.join()
+    assert moved == 0
+    assert tp.stats.prefetch_waits == 1
+    assert tp.stats.misses == 0
+    np.testing.assert_array_equal(_leaf_rows(tp, units[4]), data[4 * ROWS: 5 * ROWS])
+
+
+def test_ensure_takes_over_aborted_prefetch(tmp_path):
+    tp, data, units = _mini(tmp_path)
+    key = units[5].key
+    assert tp.claim_for_prefetch(key)
+
+    def bail():
+        time.sleep(0.1)
+        tp.abort_prefetch(key)
+
+    t = threading.Thread(target=bail)
+    t.start()
+    moved = tp.ensure([key])  # waiter takes over the load after the abort
+    t.join()
+    assert moved == UNIT_BYTES
+    assert tp.is_resident(key)
+    np.testing.assert_array_equal(_leaf_rows(tp, units[5]), data[5 * ROWS: 6 * ROWS])
+
+
+# ---------------------------------------------------------------------------
+# threaded stress: concurrent ensure / evict / hint
+# ---------------------------------------------------------------------------
+
+def test_threaded_ensure_evict_stress(tmp_path):
+    budget = 4 * UNIT_BYTES
+    tp, data, units = _mini(tmp_path, budget=budget)
+    keys = [u.key for u in units]
+    errors = []
+    stop = threading.Event()
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(40):
+                pick = list(rng.choice(keys, size=rng.integers(1, 4), replace=False))
+                tp.ensure(pick)
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    def evictor():
+        rng = np.random.default_rng(99)
+        try:
+            while not stop.is_set():
+                tp.evict([rng.choice(keys)])
+                time.sleep(0.001)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    pf = Prefetcher(tp, batch_units=3)
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    ev = threading.Thread(target=evictor)
+    ev.start()
+    for t in threads:
+        t.start()
+    for i in range(20):
+        pf.hint([keys[i % len(keys)]])
+    for t in threads:
+        t.join()
+    stop.set()
+    ev.join()
+    pf.drain(10.0)
+    pf.stop()
+
+    assert not errors, errors
+    res = tp.residency
+    # no pins were taken → the budget was never exceeded
+    assert res.max_resident_bytes <= budget
+    # bookkeeping is exact: charged bytes == sum over resident units
+    resident = res.resident_keys
+    assert res.resident_bytes == len(resident) * UNIT_BYTES
+    # device contents match the store for residents, zeros for cold units
+    for u in units:
+        expect = data[u.rows[0]: u.rows[1]] if u.key in resident else np.zeros((ROWS, COLS), np.float32)
+        np.testing.assert_array_equal(_leaf_rows(tp, u), expect)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: generation under a device budget with prefetch
+# ---------------------------------------------------------------------------
+
+def test_generation_under_budget_matches_full(tmp_path):
+    from repro.configs import get_reduced
+    from repro.core import analyze, build_artifact, write_monolithic
+    from repro.models.zoo import build_model
+    from repro.optim import init_adamw
+    from repro.serving import GenerationEngine, cold_start
+
+    arch = "yi-34b"
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    # fine row-groups so a step's pinned working set stays far below budget
+    profile = DeploymentProfile(hot_vocab_fraction=0.1, min_tier1_bytes=1024,
+                                vocab_row_group=32)
+    res = analyze(model, profile, trace_B=1, trace_S=8)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    outdir = str(tmp_path)
+    write_monolithic({"params": params, "opt_state": {"m": opt.m, "v": opt.v}}, outdir)
+    build_artifact(params, res, outdir)
+
+    tier1 = res.plan.tier1_bytes
+    budget = tier1 // 2
+    assert budget < tier1
+
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 4), 0, cfg.vocab_size)
+    s_full = cold_start(model, outdir, None, mode="before", warm_shapes=((1, 4),))
+    out_full, _ = GenerationEngine(s_full, max_seq=24).generate(toks, 4)
+
+    s = cold_start(model, outdir, res, mode="after2", warm_shapes=((1, 4),),
+                   device_budget_bytes=budget, prefetch=True)
+    try:
+        eng = GenerationEngine(s, max_seq=24)
+        out1, st1 = eng.generate(toks, 4)
+        out2, st2 = eng.generate(toks, 4)
+    finally:
+        s.close()
+
+    np.testing.assert_array_equal(out_full, out1)
+    np.testing.assert_array_equal(out_full, out2)
+    # the acceptance invariant: resident bytes never exceeded the budget
+    assert s.tiered.residency.max_resident_bytes <= budget
+    assert s.tiered.resident_bytes <= budget
+    assert st1.faulted_units > 0  # it really ran cold
+
+
+def test_residency_preset_strict_budget(tmp_path):
+    from repro.configs import get_reduced
+    from repro.core import analyze, build_artifact
+    from repro.models.zoo import build_model
+    from repro.serving import RESIDENCY_PRESETS, cold_start
+
+    arch = "yi-34b"
+    cfg = get_reduced(arch)
+    model = build_model(cfg)
+    profile = DeploymentProfile(hot_vocab_fraction=0.1, min_tier1_bytes=1024,
+                                vocab_row_group=32)
+    res = analyze(model, profile, trace_B=1, trace_S=8)
+    params = model.init(jax.random.PRNGKey(0))
+    build_artifact(params, res, str(tmp_path))
+
+    s = cold_start(model, str(tmp_path), res, mode="after2", warm_shapes=((1, 4),),
+                   compile_warm_set=False, residency="strict")
+    try:
+        frac, want_prefetch = RESIDENCY_PRESETS["strict"]
+        assert s.prefetcher is None if not want_prefetch else s.prefetcher is not None
+        budget = s.tiered.residency.budget_bytes
+        assert budget is not None and budget < res.plan.tier1_bytes
+        # loading everything still respects the budget (evicts as it goes)
+        s.tiered.ensure_all()
+        assert s.tiered.residency.max_resident_bytes <= budget
+    finally:
+        s.close()
+
+    with pytest.raises(ValueError):
+        cold_start(model, str(tmp_path), res, mode="after2", residency="bogus")
