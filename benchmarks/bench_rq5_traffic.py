@@ -1,0 +1,140 @@
+"""RQ5-traffic (beyond-paper, DESIGN.md §9): request throughput and
+per-request latency of the continuous-batching scheduler vs. the
+sequential one-request-at-a-time engine, on the same cold-started server
+state.
+
+Both sides serve the SAME request set (N prompts arriving at t=0) against
+an ``after2`` two-tier server, twice each: a **cold pass** that pays the
+one-time costs (jit tracing, XLA compiles, tier-1 fault-in — RQ2/RQ4's
+territory), then the **warm pass** that measures what the host actually
+*sustains*. Sequential latency for request *i* is the FIFO-queue latency
+(its own service time plus every predecessor's) — the apples-to-apples
+number for "all arrived at once". Greedy outputs are asserted identical
+per request, on both passes, before any number is reported.
+
+Standalone: ``python -m benchmarks.bench_rq5_traffic [--smoke]``
+(also wired into benchmarks/run.py as the ``traffic`` section; ``--smoke``
+is the CI entry next to the rq2 smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, setup_app, timed_cold_start
+from repro.serving import ContinuousBatchingScheduler, GenerationEngine, SchedulerStats
+
+
+def run(
+    base_dir: str,
+    arch: str = "mixtral-8x22b",
+    *,
+    concurrency: int = 4,
+    n_requests: int = 8,
+    prompt_len: int = 8,
+    gen_steps: int = 16,
+) -> dict:
+    app = setup_app(arch, base_dir)
+    max_seq = prompt_len + gen_steps + 2
+    prompts = [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i), (prompt_len,), 0, app.cfg.vocab_size))
+        for i in range(n_requests)
+    ]
+
+    # -- sequential baseline: one generate() per request, FIFO ----------------
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len)) as server:
+        eng = GenerationEngine(server, max_seq=max_seq)
+
+        def seq_pass():
+            outs, lat, elapsed = [], [], 0.0
+            t0 = time.perf_counter()
+            for p in prompts:
+                t_req = time.perf_counter()
+                out, _ = eng.generate(jnp.asarray(p[None, :]), gen_steps)
+                elapsed += time.perf_counter() - t_req
+                lat.append(elapsed)  # FIFO: waits behind every predecessor
+                outs.append(np.asarray(out[0]))
+            return outs, lat, time.perf_counter() - t0
+
+        seq_out, _, wall_seq_cold = seq_pass()
+        seq_out2, seq_lat, wall_seq = seq_pass()
+
+    # -- continuous batching on an identically cold server --------------------
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len)) as server:
+        eng = GenerationEngine(server, max_seq=max_seq)
+        sched = ContinuousBatchingScheduler(eng, max_batch=concurrency)
+
+        def cb_pass():
+            t0 = time.perf_counter()
+            reqs = [sched.submit(p, gen_steps) for p in prompts]
+            sched.run()
+            return reqs, time.perf_counter() - t0
+
+        reqs_cold, wall_cb_cold = cb_pass()
+        sched.stats = SchedulerStats()  # report steady-state counters only
+        reqs, wall_cb = cb_pass()
+        stats = sched.stats
+
+    for pass_reqs, pass_refs in ((reqs_cold, seq_out), (reqs, seq_out2)):
+        for r, ref in zip(pass_reqs, pass_refs):
+            if r.error is not None:
+                raise RuntimeError(f"request {r.rid} failed: {r.error}")
+            np.testing.assert_array_equal(r.output, ref)
+
+    cb_lat = np.array([r.latency_s for r in reqs])
+    return {
+        "arch": arch,
+        "concurrency": concurrency,
+        "n_requests": n_requests,
+        "gen_steps": gen_steps,
+        "wall_seq_s": wall_seq,
+        "wall_cb_s": wall_cb,
+        "rps_seq": n_requests / wall_seq,
+        "rps_cb": n_requests / wall_cb,
+        "speedup": wall_seq / wall_cb,
+        "cold_speedup": wall_seq_cold / wall_cb_cold,
+        "seq_p50_ms": float(np.percentile(seq_lat, 50) * 1e3),
+        "seq_p99_ms": float(np.percentile(seq_lat, 99) * 1e3),
+        "cb_p50_ms": float(np.percentile(cb_lat, 50) * 1e3),
+        "cb_p99_ms": float(np.percentile(cb_lat, 99) * 1e3),
+        "steps": stats.steps,
+        "step_faults": stats.faulted_units,
+        "max_active": stats.max_active,
+    }
+
+
+def main(base_dir: str, *, smoke: bool = False) -> list[str]:
+    kw = dict(n_requests=4, gen_steps=6) if smoke else {}
+    r = run(base_dir, **kw)
+    return [
+        csv_row(
+            f"rq5_traffic/{r['arch']}/c{r['concurrency']}",
+            r["wall_cb_s"] / r["n_requests"] * 1e6,
+            f"throughput={r['rps_cb']:.2f}req/s vs sequential {r['rps_seq']:.2f} "
+            f"(sustained speedup {r['speedup']:.2f}x; cold-pass {r['cold_speedup']:.2f}x)"
+            f"|lat_p50={r['cb_p50_ms']:.0f}ms p99={r['cb_p99_ms']:.0f}ms "
+            f"(seq p50={r['seq_p50_ms']:.0f} p99={r['seq_p99_ms']:.0f})"
+            f"|steps={r['steps']}|step_faults={r['step_faults']}"
+            f"|outputs=identical",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 4 requests x 6 steps at concurrency 4")
+    ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
+    args = ap.parse_args()
+    scratch = args.out or tempfile.mkdtemp(prefix="faaslight_traffic_")
+    print("name,us_per_call,derived")
+    for row in main(scratch, smoke=args.smoke):
+        print(row)
+    sys.exit(0)

@@ -23,7 +23,7 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: rq2 only, one arch, 2 runs, no warm-set compile (~30s)")
     ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
-    ap.add_argument("--only", default="", help="comma list: rq1,rq2,rq3,rq4,rq5,rq6,roofline")
+    ap.add_argument("--only", default="", help="comma list: rq1,rq2,rq3,rq4,rq5,traffic,rq6,roofline")
     args = ap.parse_args(argv)
     n_runs = 3 if args.fast else args.runs
 
@@ -33,6 +33,7 @@ def main(argv=None) -> int:
         bench_rq3_warm,
         bench_rq4_overhead,
         bench_rq5_comparison,
+        bench_rq5_traffic,
         bench_rq6_generality,
         roofline,
     )
@@ -68,6 +69,8 @@ def main(argv=None) -> int:
         sections.append(("rq4", lambda: bench_rq4_overhead.main(scratch)))
     if want("rq5"):
         sections.append(("rq5", lambda: bench_rq5_comparison.main(scratch)))
+    if want("traffic"):
+        sections.append(("traffic", lambda: bench_rq5_traffic.main(scratch)))
     if want("rq6"):
         sections.append(("rq6", lambda: bench_rq6_generality.main(scratch)))
     if want("roofline"):

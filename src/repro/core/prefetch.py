@@ -42,6 +42,28 @@ import numpy as np
 from repro.core.on_demand import TieredParams
 
 
+def merge_hints(*hint_lists: Iterable[str]) -> list[str]:
+    """Round-robin-merge per-slot hint lists into one deduped FIFO stream.
+
+    The scheduler collects hints per active slot (each slot's list is
+    ordered most-likely-first); a plain concatenation would let slot 0's
+    long tail starve every other slot's best predictions, because the
+    Prefetcher drains its hint set oldest-first. Interleaving
+    (slot0[0], slot1[0], …, slot0[1], slot1[1], …) keeps the prefetch
+    bandwidth fair across concurrent requests."""
+    out: "OrderedDict[str, None]" = OrderedDict()
+    iters = [iter(h) for h in hint_lists]
+    while iters:
+        survivors = []
+        for it in iters:
+            for k in it:
+                out.setdefault(k, None)
+                survivors.append(it)
+                break
+        iters = survivors
+    return list(out)
+
+
 @dataclass
 class PrefetchStats:
     hints: int = 0             # keys offered via hint()

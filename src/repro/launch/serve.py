@@ -1,9 +1,16 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 The FaaSLight pipeline end-to-end: analyze → build two-tier artifact →
-timed cold start (before / after1 / after2) → serve a batch of generation
-requests through the on-demand engine. This is the paper's experiment
-harness in CLI form (benchmarks/bench_rq*.py drive the same path).
+timed cold start (before / after1 / after2) → serve generation requests
+through the on-demand engine. This is the paper's experiment harness in
+CLI form (benchmarks/bench_rq*.py drive the same path).
+
+Two request modes:
+  * one-shot (default): a single batched ``GenerationEngine.generate()``;
+  * traffic (``--concurrency N``): N continuous-batching slots served by
+    the scheduler (DESIGN.md §9), with ``--requests`` prompts arriving
+    open-loop at ``--arrival-rate`` req/s (0 = all at once), reporting
+    throughput and per-request p50/p99 latency.
 """
 
 from __future__ import annotations
@@ -11,9 +18,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.core import (
@@ -25,7 +35,7 @@ from repro.core import (
 from repro.data import DataConfig, SyntheticTokenPipeline
 from repro.models.zoo import build_model
 from repro.optim import init_adamw
-from repro.serving import GenerationEngine, cold_start
+from repro.serving import ContinuousBatchingScheduler, GenerationEngine, cold_start
 
 
 def main(argv=None) -> int:
@@ -45,6 +55,12 @@ def main(argv=None) -> int:
                     help="override the preset's tier-1 device budget (0 = preset default)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async prefetcher even where the preset enables it")
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="traffic mode: serve through N continuous-batching slots (0 = one-shot)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="traffic mode: number of requests to submit")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="traffic mode: open-loop Poisson arrivals, req/s (0 = all at once)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -82,30 +98,85 @@ def main(argv=None) -> int:
     else:
         build_artifact(params, result, outdir)
 
-    server = cold_start(model, outdir, result if args.mode == "after2" else None,
-                        mode=args.mode, warm_shapes=((args.batch, args.prompt_len),),
-                        residency=args.policy if args.mode == "after2" else None,
-                        device_budget_bytes=args.device_budget_bytes or None,
-                        prefetch=False if args.no_prefetch else None)
-    print(f"[serve] cold start ({args.mode}):", json.dumps(server.report.to_dict(), default=float))
+    warm_B = 1 if args.concurrency > 0 else args.batch
+    # the context manager guarantees prefetcher/store teardown even when
+    # the request path raises (a leaked reader/uploader thread would hang
+    # the process on exit)
+    with cold_start(model, outdir, result if args.mode == "after2" else None,
+                    mode=args.mode, warm_shapes=((warm_B, args.prompt_len),),
+                    residency=args.policy if args.mode == "after2" else None,
+                    device_budget_bytes=args.device_budget_bytes or None,
+                    prefetch=False if args.no_prefetch else None) as server:
+        print(f"[serve] cold start ({args.mode}):", json.dumps(server.report.to_dict(), default=float))
 
-    engine = GenerationEngine(server, max_seq=args.prompt_len + args.gen_steps + 8)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    out, stats_r = engine.generate(prompts, args.gen_steps)
-    print(f"[serve] generated {out.shape}; prefill={stats_r.prefill_s*1e3:.1f}ms "
-          f"decode={stats_r.decode_s*1e3:.1f}ms faults={stats_r.faulted_units} "
-          f"({stats_r.faulted_bytes/2**20:.1f}MiB, {stats_r.fault_s*1e3:.1f}ms)")
-    if server.tiered is not None:
-        ts = server.tiered.stats
-        budget = server.tiered.residency.budget_bytes
-        print(f"[serve] resident fraction: {server.tiered.resident_fraction():.3f}; "
-              f"resident {server.tiered.resident_bytes:,}B"
-              + (f" / budget {budget:,}B" if budget else " (no budget)"))
-        print(f"[serve] prefetch hit rate {ts.prefetch_hit_rate:.2f}; "
-              f"evictions {ts.evictions}; refaults {ts.refaults}; "
-              f"stall p99 {ts.stall_percentile(99)*1e3:.2f}ms")
-    server.close()
+        engine = GenerationEngine(server, max_seq=args.prompt_len + args.gen_steps + 8)
+        if args.concurrency > 0:
+            _serve_traffic(engine, args, cfg)
+        else:
+            prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+            out, stats_r = engine.generate(prompts, args.gen_steps)
+            print(f"[serve] generated {out.shape}; prefill={stats_r.prefill_s*1e3:.1f}ms "
+                  f"decode={stats_r.decode_s*1e3:.1f}ms faults={stats_r.faulted_units} "
+                  f"({stats_r.faulted_bytes/2**20:.1f}MiB, {stats_r.fault_s*1e3:.1f}ms)")
+        if server.tiered is not None:
+            ts = server.tiered.stats
+            budget = server.tiered.residency.budget_bytes
+            print(f"[serve] resident fraction: {server.tiered.resident_fraction():.3f}; "
+                  f"resident {server.tiered.resident_bytes:,}B"
+                  + (f" / budget {budget:,}B" if budget else " (no budget)"))
+            print(f"[serve] prefetch hit rate {ts.prefetch_hit_rate:.2f}; "
+                  f"evictions {ts.evictions}; refaults {ts.refaults}; "
+                  f"stall p99 {ts.stall_percentile(99)*1e3:.2f}ms")
     return 0
+
+
+def _serve_traffic(engine: GenerationEngine, args, cfg) -> None:
+    """Open-loop traffic through the continuous-batching scheduler."""
+    sched = ContinuousBatchingScheduler(engine, max_batch=args.concurrency)
+    sched.warm_compile()  # first step should serve, not compile
+    rng = np.random.default_rng(0)
+    prompts = [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i), (args.prompt_len,), 0, cfg.vocab_size))
+        for i in range(args.requests)
+    ]
+    stop = threading.Event()
+    loop = threading.Thread(target=sched.serve_forever, args=(stop,), name="sched-loop")
+    loop.start()
+    t0 = time.perf_counter()
+    reqs = []
+    try:
+        for p in prompts:
+            reqs.append(sched.submit(p, args.gen_steps))
+            if args.arrival_rate > 0:
+                time.sleep(rng.exponential(1.0 / args.arrival_rate))
+        # bail out early if the loop thread dies instead of blocking the
+        # full timeout per request
+        deadline = time.perf_counter() + 600.0
+        pending = list(reqs)
+        while pending and loop.is_alive() and time.perf_counter() < deadline:
+            if pending[0].wait(1.0):
+                pending.pop(0)
+        pending = [r for r in pending if not r.done]
+        if pending:
+            print(f"[serve] WARNING: {len(pending)}/{len(reqs)} requests unfinished "
+                  f"(loop alive={loop.is_alive()})")
+    finally:
+        stop.set()
+        loop.join()
+    wall = time.perf_counter() - t0
+    done = [r for r in reqs if r.done and r.error is None]
+    lat = np.array([r.latency_s for r in done]) if done else np.zeros(1)
+    ttft = np.array([r.ttft_s for r in done]) if done else np.zeros(1)
+    print(f"[serve] traffic: {len(done)}/{len(reqs)} ok in {wall:.2f}s "
+          f"({len(done) / wall:.2f} req/s over {sched.stats.steps} batched steps, "
+          f"max_active={sched.stats.max_active})")
+    print(f"[serve] latency p50={np.percentile(lat, 50) * 1e3:.0f}ms "
+          f"p99={np.percentile(lat, 99) * 1e3:.0f}ms; "
+          f"ttft p50={np.percentile(ttft, 50) * 1e3:.0f}ms; "
+          f"step faults={sched.stats.faulted_units} ({sched.stats.fault_s * 1e3:.1f}ms)")
+    for r in reqs:
+        if r.error:
+            print(f"[serve] request {r.rid} failed: {r.error}")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,7 @@ def moe_forward(
     return_aux: bool = False,
     return_usage: bool = False,  # also return (E,) bool "expert touched" mask
     serving: bool = False,  # inference dispatch: dropless (small T) / high-capacity
+    usage_rows: jax.Array | None = None,  # (B, S) bool — rows counted in usage
 ):
     m: MoEConfig = cfg.moe
     B, S, d = x.shape
@@ -120,8 +121,14 @@ def moe_forward(
     usage = None
     if return_usage:
         # which experts this batch routed to (pre-capacity — a safe
-        # overapproximation for the serving engine's expert pre-fault)
-        usage = jnp.zeros((E,), bool).at[ids.reshape(-1)].set(True)
+        # overapproximation for the serving engine's expert pre-fault).
+        # With ``usage_rows``, rows outside the mask (a scheduler's free /
+        # completed slots decoding pad tokens) are scattered to the drop
+        # sentinel so their routing never triggers a fault.
+        usage_ids = ids
+        if usage_rows is not None:
+            usage_ids = jnp.where(usage_rows.reshape(T)[:, None], ids, E)
+        usage = jnp.zeros((E,), bool).at[usage_ids.reshape(-1)].set(True, mode="drop")
     if return_aux:
         # switch-style load-balance loss: E * sum_e f_e * P_e
         f_e = jnp.mean(jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(1), axis=0)  # fraction routed

@@ -203,13 +203,17 @@ def _stash_usage(cache, usage) -> None:
         cache["moe_usage"] = usage
 
 
-def _mlp_apply(cfg: ModelConfig, params: dict, x: jax.Array, *, serving: bool = False):
+def _mlp_apply(cfg: ModelConfig, params: dict, x: jax.Array, *, serving: bool = False,
+               usage_rows: Optional[jax.Array] = None):
     """Returns (y, usage) — usage is the (E,) expert-touched mask when the
     config collects router stats (serving engine pre-fault), else None.
-    ``serving`` selects the dropless/high-capacity MoE dispatch."""
+    ``serving`` selects the dropless/high-capacity MoE dispatch;
+    ``usage_rows`` (B, S) bool excludes masked rows from the usage mask
+    (a batched scheduler's inactive slots must not fault experts)."""
     if "moe" in params:
         if cfg.collect_moe_usage:
-            return moe_mod.moe_forward(params["moe"], x, cfg, return_usage=True, serving=serving)
+            return moe_mod.moe_forward(params["moe"], x, cfg, return_usage=True,
+                                       serving=serving, usage_rows=usage_rows)
         return moe_mod.moe_forward(params["moe"], x, cfg, serving=serving), None
     return swiglu(params["dense"], x), None
 
@@ -284,9 +288,12 @@ def _block_forward(cfg, kind, params, x, positions, memory, collect_cache):
     return x, (cache if collect_cache else None)
 
 
-def _block_decode(cfg, kind, params, x, pos, cache, memory):
-    """x (B,1,D); returns (x, new_cache)."""
+def _block_decode(cfg, kind, params, x, pos, cache, memory, active=None):
+    """x (B,1,D); returns (x, new_cache). ``active`` (B,) bool marks the
+    batch rows whose routing should count toward usage masks (continuous-
+    batching scheduler; None = every row counts)."""
     eps = cfg.norm_eps
+    rows = active[:, None] if active is not None else None
     new_cache = dict(cache)
     if kind in ("self", "local", "global", "attn"):
         h = rmsnorm(x, params["norm1"], eps)
@@ -305,7 +312,7 @@ def _block_decode(cfg, kind, params, x, pos, cache, memory):
             hx = rmsnorm(x, params["norm_x"], eps)
             x = x + attn.cross_attn_forward(params["cross"], hx, (cache["xk"], cache["xv"]), cfg)
         h2 = rmsnorm(x, params["norm2"], eps)
-        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True)
+        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True, usage_rows=rows)
         x = x + mlp_y
         _stash_usage(new_cache, moe_usage)
     elif kind == "cross":
@@ -313,7 +320,7 @@ def _block_decode(cfg, kind, params, x, pos, cache, memory):
             h = rmsnorm(x, params["norm1"], eps)
             x = x + attn.cross_attn_forward(params["cross"], h, (cache["xk"], cache["xv"]), cfg, gated=True)
             h2 = rmsnorm(x, params["norm2"], eps)
-            mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True)
+            mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True, usage_rows=rows)
             x = x + jnp.tanh(params["gate_ffn"].astype(x.dtype)) * mlp_y
             _stash_usage(new_cache, moe_usage)
     elif kind == "rec":
@@ -322,7 +329,7 @@ def _block_decode(cfg, kind, params, x, pos, cache, memory):
         x = x + o
         new_cache.update(c)
         h2 = rmsnorm(x, params["norm2"], eps)
-        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True)
+        mlp_y, moe_usage = _mlp_apply(cfg, params, h2, serving=True, usage_rows=rows)
         x = x + mlp_y
         _stash_usage(new_cache, moe_usage)
     elif kind == "m":
@@ -461,9 +468,13 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict):
 
 
 def decode_step(cfg: ModelConfig, params: dict, caches: dict, batch: dict):
-    """batch: tokens (B,1), pos (B,). Returns (logits (B,V), new caches)."""
+    """batch: tokens (B,1), pos (B,), optional active (B,) bool. Returns
+    (logits (B,V), new caches). ``active`` only gates usage-mask collection
+    (see ``_block_decode``); cache-row masking for inactive slots is the
+    caller's job (``Model.decode_step_masked``)."""
     lay = stack_layout(cfg)
     tokens, pos = batch["tokens"], batch["pos"]
+    active = batch.get("active")
     B = tokens.shape[0]
     x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
     x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
@@ -472,7 +483,7 @@ def decode_step(cfg: ModelConfig, params: dict, caches: dict, batch: dict):
     if lay.lead_kinds:
         sec = {}
         for i, kind in enumerate(lay.lead_kinds):
-            x, c = _block_decode(cfg, kind, params["lead"][f"b{i}"], x, pos, caches["lead"][f"b{i}"], None)
+            x, c = _block_decode(cfg, kind, params["lead"][f"b{i}"], x, pos, caches["lead"][f"b{i}"], None, active=active)
             sec[f"b{i}"] = c
         new_caches["lead"] = sec
 
@@ -481,7 +492,7 @@ def decode_step(cfg: ModelConfig, params: dict, caches: dict, batch: dict):
             gp, gc = xs
             cs = {}
             for j, kind in enumerate(lay.unit_kinds):
-                x, c = _block_decode(cfg, kind, gp[f"u{j}"], x, pos, gc[f"u{j}"], None)
+                x, c = _block_decode(cfg, kind, gp[f"u{j}"], x, pos, gc[f"u{j}"], None, active=active)
                 cs[f"u{j}"] = c
             return x, cs
 
@@ -491,7 +502,7 @@ def decode_step(cfg: ModelConfig, params: dict, caches: dict, batch: dict):
     if lay.tail_kinds:
         sec = {}
         for i, kind in enumerate(lay.tail_kinds):
-            x, c = _block_decode(cfg, kind, params["tail"][f"b{i}"], x, pos, caches["tail"][f"b{i}"], None)
+            x, c = _block_decode(cfg, kind, params["tail"][f"b{i}"], x, pos, caches["tail"][f"b{i}"], None, active=active)
             sec[f"b{i}"] = c
         new_caches["tail"] = sec
 

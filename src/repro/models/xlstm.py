@@ -131,11 +131,25 @@ def mlstm_chunkwise(q, k, v, log_i, log_f, chunk: int, state=None):
         qb, kb, vb, li, lf = xs  # (B,L,H,hd) / (B,L,H)
         # cumulative log decay INCLUDING step t: B_t = sum_{s<=t} lf_s
         Bcum = jnp.cumsum(lf, axis=1)  # (B,L,H)
-        # u_s = li_s - B_s; running max M_t = max_{s<=t} u_s
+        # u_s = li_s - B_s (intra-chunk score offsets, rounding tolerated —
+        # the h comparison absorbs it; see tolerance note below)
         u = li - Bcum
-        M = jax.lax.cummax(u, axis=1)
-        # stabilizer: m_t = max(B_t + m_prev, B_t + M_t), per (B,L,H)
-        m_t = Bcum + jnp.maximum(m_prev[:, None, :], M)
+        # stabilizer: mathematically m_t = B_t + max(m_prev, max_{s<=t}(li_s
+        # - B_s)), but evaluating that through the float32 cumsum drifts by
+        # ~eps·|B_t| (≈1.5e-5 at S=256), off from the recurrent path's m.
+        # Since m is *state* (it crosses chunk/request boundaries and is
+        # compared bitwise against mlstm_scan in tests), run the exact
+        # max-plus recurrence m_t = max(lf_t + m_{t-1}, li_t) instead — an
+        # elementwise (B,H) scan whose ops match mlstm_scan one for one.
+        def m_step(m, x_t):
+            li_t, lf_t = x_t
+            m_new = jnp.maximum(lf_t + m, li_t)
+            return m_new, m_new
+
+        _, m_scan = jax.lax.scan(
+            m_step, m_prev, (li.transpose(1, 0, 2), lf.transpose(1, 0, 2))
+        )
+        m_t = m_scan.transpose(1, 0, 2)  # (B,L,H)
         # inter-chunk: exp(B_t + m_prev - m_t) * q_t C_prev   [C already
         # carries exp(-m_prev) scaling from the previous chunk]
         w_inter = jnp.exp(Bcum + m_prev[:, None, :] - m_t)  # (B,L,H)

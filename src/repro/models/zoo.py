@@ -97,6 +97,23 @@ class Model:
     def decode_step(self, params, caches, batch):
         return tf.decode_step(self.cfg, params, caches, batch)
 
+    def decode_step_masked(self, params, caches, batch):
+        """One decode step over a scheduler's slot batch — requires
+        ``batch["active"]`` (the continuous-batching entry, DESIGN.md §9).
+
+        ``active`` gates exactly one thing: usage-mask collection
+        (``moe_forward(usage_rows=...)``), so a free/completed slot
+        decoding a pad token can never fault a cold expert in. Inactive
+        rows otherwise compute garbage that is never read — their logits
+        are ignored and their cache rows are rebuilt from zeros at the
+        next admission (``scheduler._graft_slot_cache``), so there is no
+        per-leaf select on the request path (an earlier variant froze
+        inactive rows with a full-cache ``where`` merge; that copy cost
+        more per step than the batching saved)."""
+        if "active" not in batch:
+            raise ValueError("decode_step_masked needs batch['active'] (B,) bool")
+        return tf.decode_step(self.cfg, params, caches, batch)
+
     # -- caches --------------------------------------------------------------
     def _block_cache_template(self, kind: str, B: int, S_max: int, multimodal: bool) -> dict:
         cfg = self.cfg
@@ -225,6 +242,13 @@ class Model:
             "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
         }
         axes = {"tokens": ("batch", None), "pos": ("batch",)}
+        return specs, axes
+
+    def decode_masked_batch_spec(self, B: int) -> tuple[dict, dict]:
+        """decode_batch_spec plus the scheduler's per-slot active mask."""
+        specs, axes = self.decode_batch_spec(B)
+        specs["active"] = jax.ShapeDtypeStruct((B,), jnp.bool_)
+        axes["active"] = ("batch",)
         return specs, axes
 
     # -- entry registry (Application Entry Recognition) ----------------------

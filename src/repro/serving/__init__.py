@@ -1,6 +1,7 @@
 """Serving: cold-start manager (before/after1/after2 modes, residency
-budget presets) + batched generation engine with on-demand fault-in and
-predictive prefetch hints."""
+budget presets), batched generation engine with on-demand fault-in and
+predictive prefetch hints, and the continuous-batching request scheduler
+(DESIGN.md §9)."""
 
 from repro.serving.cold_start import (
     RESIDENCY_PRESETS,
@@ -9,6 +10,12 @@ from repro.serving.cold_start import (
     cold_start,
 )
 from repro.serving.engine import GenerationEngine, RequestStats
+from repro.serving.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    RequestQueue,
+    SchedulerStats,
+)
 
 __all__ = [
     "RESIDENCY_PRESETS",
@@ -17,4 +24,8 @@ __all__ = [
     "cold_start",
     "GenerationEngine",
     "RequestStats",
+    "ContinuousBatchingScheduler",
+    "Request",
+    "RequestQueue",
+    "SchedulerStats",
 ]

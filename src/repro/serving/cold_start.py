@@ -114,6 +114,15 @@ class ColdStartServer:
             self.store.close()
             self.store = None
 
+    # context-manager form: the launcher/benchmarks wrap serving in
+    # ``with cold_start(...) as server`` so a raising request path can
+    # never leak the prefetcher's reader/uploader threads
+    def __enter__(self) -> "ColdStartServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- warm-set / on-demand compilation ------------------------------------
     def compiled_prefill(self, B: int, S: int):
         key = ("prefill", B, S)
@@ -126,6 +135,17 @@ class ColdStartServer:
         key = ("decode", B)
         if key not in self._compiled:
             fn = jax.jit(lambda p, c, b: self.model.decode_step(p, c, b))
+            self._compiled[key] = fn
+        return self._compiled[key]
+
+    def compiled_decode_masked(self, B: int):
+        """Masked decode over ``max_batch`` slots — the continuous-batching
+        scheduler's one compiled decode shape (DESIGN.md §9): inactive rows
+        contribute nothing to the usage masks (so a free slot can never
+        fault a unit in); their cache rows are rebuilt at next admission."""
+        key = ("decode_masked", B)
+        if key not in self._compiled:
+            fn = jax.jit(lambda p, c, b: self.model.decode_step_masked(p, c, b))
             self._compiled[key] = fn
         return self._compiled[key]
 

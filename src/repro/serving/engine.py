@@ -155,20 +155,107 @@ class GenerationEngine:
         return miss
 
     # -- hint emission (DESIGN.md §8.2) ----------------------------------------
+    def topk_row_hints(self, logits) -> list[str]:
+        """Embed row-group keys for the top-k candidate tokens of ``logits``
+        ((V,), (B, V), …) — the vocab half of a predictive hint. The
+        scheduler calls this per active slot and round-robin-merges the
+        lists (``core.prefetch.merge_hints``) so no slot starves another."""
+        if not self._row_group:
+            return []
+        flat = np.asarray(logits).reshape(-1, np.asarray(logits).shape[-1])
+        k = min(self.hint_topk, flat.shape[-1])
+        top = np.argpartition(-flat, k - 1, axis=-1)[:, :k]
+        return [f"embed#rg{g}" for g in np.unique(top // self._row_group)]
+
     def _hint_next_step(self, logits, expert_keys: list[str], stats: RequestStats) -> None:
         """Predictively warm the units the *next* step will likely touch:
         row-groups of the top-k candidate tokens, plus this step's routed
         experts (the strongest predictor of next-step routing)."""
         if self.prefetcher is None:
             return
-        hints: list[str] = list(expert_keys)
-        if self._row_group:
-            flat = np.asarray(logits).reshape(-1, np.asarray(logits).shape[-1])
-            k = min(self.hint_topk, flat.shape[-1])
-            top = np.argpartition(-flat, k - 1, axis=-1)[:, :k]
-            hints.extend(f"embed#rg{g}" for g in np.unique(top // self._row_group))
+        hints: list[str] = list(expert_keys) + self.topk_row_hints(logits)
         if hints:
             stats.hinted_units += self.prefetcher.hint(hints)
+
+    # -- step primitives (shared by generate() and the scheduler) ---------------
+    def prefill_step(self, tokens: jax.Array, stats: RequestStats, *, hint: bool = True):
+        """Prefill one prompt batch under the fault-in contract: exact vocab
+        pre-fault, expert retry to fixed point, with the step's units pinned
+        until its outputs are materialized. Returns
+        ``(logits, caches, expert_keys)`` — caches usage-stripped, ready for
+        grafting; ``expert_keys`` are the experts this step faulted (the
+        scheduler merges them into its cross-slot hint stream when ``hint``
+        is off)."""
+        server = self.server
+        tiered = server.tiered
+        B, S = tokens.shape
+        prefill = server.compiled_prefill(B, S)
+        step_pins: list[str] = []
+        expert_keys: list[str] = []
+        try:
+            self._prefault_rows(np.asarray(tokens), stats, step_pins)
+            fault0 = stats.fault_s
+            t0 = time.perf_counter()
+            batch = {"tokens": tokens}
+            logits, caches = prefill(server.live_params(), batch)
+            for _ in range(MAX_FAULT_RETRIES):
+                newly = self._fault_experts(caches, stats, step_pins)
+                if not newly:
+                    break
+                expert_keys.extend(newly)
+                stats.prefill_retries += 1
+                logits, caches = prefill(server.live_params(), batch)
+            jax.block_until_ready(logits)
+            stats.prefill_s += time.perf_counter() - t0 - (stats.fault_s - fault0)
+        finally:
+            if tiered is not None and step_pins:
+                tiered.release(step_pins)
+        # hint after release: evicted/still-cold predictions are loadable now
+        if hint:
+            self._hint_next_step(logits, expert_keys, stats)
+        return logits, _strip_usage(caches), expert_keys
+
+    def decode_once(
+        self,
+        decode_fn,
+        caches: Any,
+        dbatch: dict,
+        stats: RequestStats,
+        *,
+        prefault_tokens: Optional[np.ndarray] = None,
+        hint: bool = True,
+    ):
+        """One decode step under the fault-in contract. ``prefault_tokens``
+        defaults to the batch tokens; the scheduler passes only the active
+        slots' tokens so free/completed slots never fault vocab rows.
+        Returns ``(logits, new_caches, expert_keys)``, caches
+        usage-stripped and ready for the next step."""
+        server = self.server
+        tiered = server.tiered
+        if prefault_tokens is None:
+            prefault_tokens = np.asarray(dbatch["tokens"])
+        step_pins: list[str] = []
+        expert_keys: list[str] = []
+        try:
+            self._prefault_rows(np.asarray(prefault_tokens), stats, step_pins)
+            fault0 = stats.fault_s
+            t0 = time.perf_counter()
+            logits, new_caches = decode_fn(server.live_params(), caches, dbatch)
+            for _ in range(MAX_FAULT_RETRIES):
+                newly = self._fault_experts(new_caches, stats, step_pins)
+                if not newly:
+                    break
+                expert_keys.extend(newly)
+                stats.decode_retries += 1
+                logits, new_caches = decode_fn(server.live_params(), caches, dbatch)
+            jax.block_until_ready(logits)
+            stats.decode_s += time.perf_counter() - t0 - (stats.fault_s - fault0)
+        finally:
+            if tiered is not None and step_pins:
+                tiered.release(step_pins)
+        if hint:
+            self._hint_next_step(logits, expert_keys, stats)
+        return logits, _strip_usage(new_caches), expert_keys
 
     # -- request path -----------------------------------------------------------
     def generate(
@@ -184,68 +271,33 @@ class GenerationEngine:
         hits_before = tiered.stats.prefetch_hits + tiered.stats.prefetch_waits if tiered else 0
         B, S = tokens.shape
         S_max = self.max_seq
-        assert S + n_steps <= S_max, (S, n_steps, S_max)
+        if S + n_steps > S_max:
+            # a bare assert would vanish under ``python -O``; the request
+            # path must reject over-length work unconditionally (the
+            # scheduler turns this into an admission rejection)
+            raise ValueError(
+                f"request needs {S + n_steps} positions (prompt {S} + {n_steps} steps) "
+                f"but the engine was compiled for max_seq={S_max}"
+            )
 
-        prefill = server.compiled_prefill(B, S)
         decode = server.compiled_decode(B)
 
-        # prefill with exact vocab pre-fault + expert-retry to fixed point;
-        # the step's units stay pinned until its outputs are materialized
-        step_pins: list[str] = []
-        expert_keys: list[str] = []
-        try:
-            self._prefault_rows(np.asarray(tokens), stats, step_pins)
-            t0 = time.perf_counter()
-            batch = {"tokens": tokens}
-            logits, caches = prefill(server.live_params(), batch)
-            for _ in range(MAX_FAULT_RETRIES):
-                newly = self._fault_experts(caches, stats, step_pins)
-                if not newly:
-                    break
-                expert_keys.extend(newly)
-                stats.prefill_retries += 1
-                logits, caches = prefill(server.live_params(), batch)
-            jax.block_until_ready(logits)
-            stats.prefill_s = time.perf_counter() - t0 - stats.fault_s
-        finally:
-            if tiered is not None and step_pins:
-                tiered.release(step_pins)
-        # hint after release: evicted/still-cold predictions are loadable now
-        self._hint_next_step(logits, expert_keys, stats)
+        logits, caches, _ = self.prefill_step(tokens, stats)
 
         # move prefill caches into a max-length decode cache
-        caches = _strip_usage(caches)
         big = model.init_cache(B, S_max, multimodal=False)
         caches = _graft_prefill_cache(big, caches)
 
         out = [np.asarray(jnp.argmax(logits, -1), np.int32)]
-        t1 = time.perf_counter()
-        fault_before_decode = stats.fault_s
+        stats.steps = 1  # the prefill-produced token is step #1 (RQ4's
+        # faults/step would otherwise be skewed for short generations)
         for step in range(n_steps - 1):
             tok = jnp.asarray(out[-1])[:, None]
-            step_pins = []
-            expert_keys = []
-            try:
-                self._prefault_rows(np.asarray(tok), stats, step_pins)
-                pos = jnp.full((B,), S + step, jnp.int32)
-                dbatch = {"tokens": tok, "pos": pos}
-                logits, new_caches = decode(server.live_params(), caches, dbatch)
-                for _ in range(MAX_FAULT_RETRIES):
-                    newly = self._fault_experts(new_caches, stats, step_pins)
-                    if not newly:
-                        break
-                    expert_keys.extend(newly)
-                    stats.decode_retries += 1
-                    logits, new_caches = decode(server.live_params(), caches, dbatch)
-                caches = _strip_usage(new_caches)
-                out.append(np.asarray(jnp.argmax(logits, -1), np.int32))
-            finally:
-                if tiered is not None and step_pins:
-                    tiered.release(step_pins)
-            self._hint_next_step(logits, expert_keys, stats)
+            pos = jnp.full((B,), S + step, jnp.int32)
+            dbatch = {"tokens": tok, "pos": pos}
+            logits, caches, _ = self.decode_once(decode, caches, dbatch, stats)
+            out.append(np.asarray(jnp.argmax(logits, -1), np.int32))
             stats.steps += 1
-        jax.block_until_ready(logits)
-        stats.decode_s = time.perf_counter() - t1 - (stats.fault_s - fault_before_decode)
         if tiered is not None:
             stats.prefetch_hits = (
                 tiered.stats.prefetch_hits + tiered.stats.prefetch_waits - hits_before

@@ -1,0 +1,417 @@
+"""Continuous-batching request scheduler over the on-demand engine
+(DESIGN.md §9).
+
+``GenerationEngine.generate()`` serves exactly one batch synchronously —
+one request's cold-unit fault-in stalls the whole host. The scheduler
+turns the same fault-in/pin/prefetch machinery into a serving loop:
+
+  * **slots** — a fixed ``max_batch`` of decode lanes over ONE compiled
+    masked-decode executable (``ColdStartServer.compiled_decode_masked``).
+    Per slot: the owning request, its token position, its last emitted
+    token; the done/free state is the ``active`` mask fed to the compiled
+    step. Inactive rows ride the batch as pad lanes: their routing never
+    reaches the usage masks (so a free slot can never fault a unit in),
+    and whatever garbage they write to their own cache row is overwritten
+    wholesale at the slot's next admission — pad lanes cost compute,
+    never correctness.
+  * **admission** — between decode steps, queued prompts fill free slots:
+    prefill runs on its own compiled (1, S) shape, then the prefill cache
+    is grafted into the slot row of the batched decode cache
+    (``_graft_slot_cache``). Over-length requests are *rejected* at
+    admission (``Request.error``), never raised out of the loop.
+  * **union fault handling** — each decode step issues one
+    ``ensure(pin=True)`` over the union of all active slots' vocab
+    row-groups, and one expert fault/retry loop over the union of routed
+    expert misses. A request whose units are cold adds latency to the
+    *step*, not a serialization point per request — all slots' misses
+    load in a single offset-sorted batch.
+  * **fairness** — admission is strictly FIFO (arrival order), every
+    active slot advances exactly one token per step, and predictive hints
+    are round-robin-merged across slots (``core.prefetch.merge_hints``)
+    so one request's long tail can't starve another's next-step units.
+
+Greedy outputs are per-slot identical to running each request alone
+through ``generate()`` (tested in tests/test_scheduler.py): decode rows
+are computationally independent, dropless MoE dispatch is per-token
+exact, and admission rebuilds the slot's cache row from scratch.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prefetch import merge_hints
+from repro.serving.engine import GenerationEngine, RequestStats
+from repro.utils.tree import flatten_with_paths, tree_from_flat
+
+
+@dataclass
+class Request:
+    """One generation request moving through the scheduler."""
+
+    rid: int
+    tokens: np.ndarray  # (S,) int32 prompt
+    n_steps: int
+    submitted_t: float = 0.0
+    admitted_t: float = 0.0
+    first_token_t: float = 0.0
+    finished_t: float = 0.0
+    out: list = field(default_factory=list)  # emitted token ids
+    stats: RequestStats = field(default_factory=RequestStats)
+    error: Optional[str] = None
+    _done: threading.Event = field(default_factory=threading.Event, repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._done.wait(timeout)
+
+    def finish(self, error: Optional[str] = None) -> None:
+        self.error = error
+        self.finished_t = time.perf_counter()
+        self._done.set()
+
+    @property
+    def output(self) -> np.ndarray:
+        return np.asarray(self.out, np.int32)
+
+    @property
+    def latency_s(self) -> float:
+        """Submit → last token (0 until finished)."""
+        return max(0.0, self.finished_t - self.submitted_t)
+
+    @property
+    def ttft_s(self) -> float:
+        """Submit → first token (prefill wait included)."""
+        return max(0.0, self.first_token_t - self.submitted_t)
+
+
+class RequestQueue:
+    """Thread-safe FIFO of pending requests.
+
+    Arrival order IS the admission order — the scheduler's fairness
+    contract (DESIGN.md §9) starts here. ``submit`` is safe from any
+    thread (a traffic generator, an RPC handler); the scheduler thread
+    pops."""
+
+    def __init__(self) -> None:
+        self._q: deque[Request] = deque()
+        self._lock = threading.Lock()
+        self._next_rid = 0
+
+    def submit(self, tokens, n_steps: int) -> Request:
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            req = Request(rid, tokens, int(n_steps),
+                          submitted_t=time.perf_counter())
+            self._q.append(req)
+        return req
+
+    def pop(self) -> Optional[Request]:
+        with self._lock:
+            return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+
+@dataclass
+class SchedulerStats:
+    """Aggregate loop accounting (per-request numbers live on each
+    ``Request.stats``; step-shared costs — the union fault, the batched
+    decode — are only meaningful at the loop level)."""
+
+    steps: int = 0          # batched decode steps executed
+    admitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    failed: int = 0         # admitted requests killed by a decode-step failure
+    decode_s: float = 0.0
+    fault_s: float = 0.0
+    faulted_units: int = 0
+    faulted_bytes: int = 0
+    decode_retries: int = 0
+    max_active: int = 0     # high-water concurrent slots
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class ContinuousBatchingScheduler:
+    """Slot-based continuous batching over ``GenerationEngine`` primitives.
+
+    Single-consumer: exactly one thread drives ``step()``/``run()`` (the
+    serving loop); any thread may ``submit()``. The decode cache, slot
+    arrays, and stats are owned by the loop thread — the underlying
+    ``TieredParams`` residency layer provides its own locking for the
+    fault/prefetch traffic the loop generates.
+    """
+
+    def __init__(
+        self,
+        engine: GenerationEngine,
+        *,
+        max_batch: int = 4,
+        queue: Optional[RequestQueue] = None,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        self.server = engine.server
+        self.model = engine.model
+        self.max_batch = max_batch
+        self.queue = queue if queue is not None else RequestQueue()
+        self.stats = SchedulerStats()
+        self._slots: list[Optional[Request]] = [None] * max_batch
+        self._pos = np.zeros(max_batch, np.int32)       # next decode position
+        self._last_tok = np.zeros(max_batch, np.int32)  # token feeding the next step
+        self._caches = self.model.init_cache(max_batch, engine.max_seq, multimodal=False)
+        self._decode = self.server.compiled_decode_masked(max_batch)
+        # one jitted graft for every (group size, prompt len) signature;
+        # donating the batched cache lets XLA update the slot rows in place
+        # instead of copying every leaf per admission
+        self._graft = jax.jit(_graft_slot_cache, donate_argnums=(0,))
+
+    def warm_compile(self) -> None:
+        """Pre-compile the masked decode at the slot batch shape so the
+        first traffic step serves instead of compiling (admission prefills
+        and grafts still compile per prompt length on first use)."""
+        model, B = self.model, self.max_batch
+        cache = model.abstract_cache(B, self.engine.max_seq, multimodal=False)
+        db, _ = model.decode_masked_batch_spec(B)
+        # lower() takes the ShapeDtypeStruct trees directly — materializing
+        # a zero cache here would transiently double device cache memory
+        self._decode.lower(self.server.live_params(), cache, db).compile()
+
+    # -- submission ------------------------------------------------------------
+    def submit(self, tokens, n_steps: int) -> Request:
+        """Enqueue one prompt. Decoding is greedy (argmax) — the
+        sequential-equivalence contract is only defined for greedy."""
+        return self.queue.submit(tokens, n_steps)
+
+    @property
+    def active(self) -> list[int]:
+        return [i for i, r in enumerate(self._slots) if r is not None]
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and len(self.queue) == 0
+
+    # -- admission ---------------------------------------------------------------
+    def _admit(self) -> int:
+        """Fill free slots from the queue (FIFO). Same-length prompts
+        admitted in the same round share ONE batched prefill (the step
+        primitives are batch-agnostic, so their vocab/expert faults union
+        for free); the resulting cache rows are grafted into the slots in
+        a single jitted call. Returns the number of requests admitted."""
+        free = [i for i, r in enumerate(self._slots) if r is None]
+        picked: list[tuple[int, Request]] = []
+        while free:
+            req = self.queue.pop()
+            if req is None:
+                break
+            S = int(req.tokens.size)
+            if S == 0 or S + req.n_steps > self.engine.max_seq or req.n_steps < 1:
+                # reject, don't crash: the loop must survive bad requests
+                self.stats.rejected += 1
+                req.finish(error=(
+                    f"rejected: prompt {S} + {req.n_steps} steps exceeds "
+                    f"max_seq={self.engine.max_seq} (or is empty)"
+                ))
+                continue
+            picked.append((free.pop(0), req))
+
+        admitted = 0
+        hints: list[list[str]] = []
+        # group same-length prompts (everything picked is admitted this
+        # round, so grouping cannot reorder anyone past anyone else)
+        groups: dict[int, list[tuple[int, Request]]] = {}
+        for slot, req in picked:
+            groups.setdefault(req.tokens.size, []).append((slot, req))
+        for S, grp in groups.items():
+            slots = [s for s, _ in grp]
+            reqs = [r for _, r in grp]
+            now = time.perf_counter()
+            for r in reqs:
+                r.admitted_t = now
+            shared = RequestStats()
+            try:
+                toks = jnp.asarray(np.stack([r.tokens for r in reqs]))
+                logits, caches, expert_keys = self.engine.prefill_step(
+                    toks, shared, hint=False
+                )
+            except Exception as e:
+                # a failed fault-in must not kill the loop (or leave the
+                # submitters waiting forever) — fail the group's requests,
+                # return their slots, keep serving
+                self.stats.failed += len(reqs)
+                for r in reqs:
+                    r.finish(error=f"prefill failed: {e!r}")
+                continue
+            self._caches = self._graft(self._caches, caches, jnp.asarray(slots, jnp.int32))
+            lg = np.asarray(logits)
+            for i, (slot, req) in enumerate(grp):
+                # group costs are shared: every member waited out the batch
+                req.stats.prefill_s += shared.prefill_s
+                req.stats.fault_s += shared.fault_s
+                req.stats.prefill_retries += shared.prefill_retries
+                req.stats.faulted_units += shared.faulted_units
+                req.stats.faulted_bytes += shared.faulted_bytes
+                tok = int(lg[i].argmax())
+                req.out.append(tok)
+                req.stats.steps = 1  # the prefill-produced token
+                req.first_token_t = time.perf_counter()
+                self._pos[slot] = S
+                self._last_tok[slot] = tok
+                self._slots[slot] = req
+                self.stats.admitted += 1
+                admitted += 1
+                hints.append(self.engine.topk_row_hints(lg[i]))
+                if len(req.out) >= req.n_steps:  # single-token request
+                    self._retire(slot)
+            if expert_keys:
+                hints.append(list(expert_keys))
+        self._emit_hints(hints)
+        return admitted
+
+    def _retire(self, slot: int) -> None:
+        req = self._slots[slot]
+        assert req is not None
+        self._slots[slot] = None
+        self._last_tok[slot] = 0
+        self._pos[slot] = 0
+        self.stats.completed += 1
+        req.finish()
+
+    def _emit_hints(self, per_slot_hints: list[list[str]]) -> None:
+        pf = self.engine.prefetcher
+        if pf is None:
+            return
+        merged = merge_hints(*per_slot_hints)
+        if merged:
+            pf.hint(merged)
+
+    # -- the serving loop --------------------------------------------------------
+    def step(self) -> bool:
+        """Admit new work, then advance every active slot one token with a
+        single masked decode over the union of their faults. Returns True
+        if anything happened (admission or decode)."""
+        admitted = self._admit()
+        active = self.active
+        self.stats.max_active = max(self.stats.max_active, len(active))
+        if not active:
+            return admitted > 0
+
+        mask = np.zeros(self.max_batch, bool)
+        mask[active] = True
+        dbatch = {
+            "tokens": jnp.asarray(self._last_tok[:, None]),
+            "pos": jnp.asarray(self._pos),
+            "active": jnp.asarray(mask),
+        }
+        # union fault handling: ONE pinned ensure over every active slot's
+        # row-groups + one expert retry loop over the union of misses
+        step_stats = RequestStats()
+        try:
+            logits, self._caches, expert_keys = self.engine.decode_once(
+                self._decode, self._caches, dbatch, step_stats,
+                prefault_tokens=self._last_tok[active], hint=False,
+            )
+        except Exception as e:
+            # same contract as admission: a failed step fault-in must not
+            # kill the loop or leave the active slots' submitters waiting
+            # forever — fail those requests, return their slots, keep
+            # serving the queue
+            self.stats.failed += len(active)
+            for i in active:
+                req = self._slots[i]
+                self._slots[i] = None
+                self._last_tok[i] = 0
+                self._pos[i] = 0
+                req.finish(error=f"decode step failed: {e!r}")
+            return True
+        self.stats.decode_s += step_stats.decode_s
+        self.stats.fault_s += step_stats.fault_s
+        self.stats.faulted_units += step_stats.faulted_units
+        self.stats.faulted_bytes += step_stats.faulted_bytes
+        self.stats.decode_retries += step_stats.decode_retries
+        self.stats.steps += 1
+
+        lg = np.asarray(logits)
+        hints: list[list[str]] = []
+        for i in active:
+            req = self._slots[i]
+            tok = int(lg[i].argmax())
+            req.out.append(tok)
+            req.stats.steps += 1
+            self._last_tok[i] = tok
+            self._pos[i] += 1
+            if len(req.out) >= req.n_steps:
+                self._retire(i)
+            else:
+                hints.append(self.engine.topk_row_hints(lg[i]))
+        if expert_keys:
+            hints.append(list(expert_keys))
+        self._emit_hints(hints)
+        return True
+
+    def run(self, *, max_steps: Optional[int] = None) -> None:
+        """Drive the loop until the queue is empty and every slot is free
+        (or ``max_steps`` decode steps have run)."""
+        steps = 0
+        while not self.idle:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+
+    def serve_forever(self, stop: threading.Event, poll_s: float = 0.002) -> None:
+        """Loop until ``stop`` is set, sleeping briefly when idle — the
+        threaded form used by the traffic benchmark and launcher."""
+        while not stop.is_set():
+            if not self.step():
+                time.sleep(poll_s)
+
+
+def _graft_slot_cache(big: Any, small: Any, slots: jax.Array) -> Any:
+    """Write an admission group's prefill cache (B=k) into slot rows
+    ``slots`` ((k,) int32) of the batched decode cache.
+
+    Each slot row is rebuilt from zeros (matching ``Model.init_cache``)
+    with the prefill prefix written along the sequence axis — exactly the
+    sequential path's ``_graft_prefill_cache`` semantics, applied per
+    batch row. Scanned-group leaves are (n_groups, B, ...): batch is axis
+    1 there, axis 0 everywhere else. Jit-compiled by the scheduler (one
+    signature per group size × prompt length) with the big cache donated,
+    so steady-state admission is a handful of in-place row updates, not a
+    full-cache copy."""
+    big_flat = dict(flatten_with_paths(big))
+    out = dict(big_flat)
+    for path, s in flatten_with_paths(small):
+        b = out[path]
+        s = jnp.asarray(s)
+        ax = 1 if path.startswith("groups.") else 0
+        row_shape = b.shape[:ax] + b.shape[ax + 1:]
+        for i in range(s.shape[ax]):
+            src = jax.lax.index_in_dim(s, i, axis=ax, keepdims=False).astype(b.dtype)
+            if src.shape == row_shape:
+                row = src  # carry-state leaf (mlstm C/n/m, lru, conv): full copy
+            else:
+                idx = tuple(slice(0, d) for d in src.shape)
+                row = jnp.zeros(row_shape, b.dtype).at[idx].set(src)
+            b = jax.lax.dynamic_update_index_in_dim(b, row, slots[i], ax)
+        out[path] = b
+    return tree_from_flat(out)

@@ -339,6 +339,9 @@ def test_generation_under_budget_matches_full(tmp_path):
     assert s.tiered.residency.max_resident_bytes <= budget
     assert s.tiered.resident_bytes <= budget
     assert st1.faulted_units > 0  # it really ran cold
+    # step accounting counts the prefill-produced token too — faults/step
+    # metrics must divide by n_steps, not n_steps - 1
+    assert st1.steps == st2.steps == 4
 
 
 def test_residency_preset_strict_budget(tmp_path):

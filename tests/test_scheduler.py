@@ -1,0 +1,196 @@
+"""Continuous-batching scheduler (DESIGN.md §9).
+
+Covers the scheduler contract:
+  * interleaved-admission equivalence — greedy tokens of concurrently
+    scheduled requests match the same requests run sequentially through
+    ``generate()``;
+  * slot reuse — more requests than slots all complete, FIFO, with the
+    compiled batch shape never exceeded;
+  * admission rejection — an over-length request fails with an error and
+    the loop keeps serving (and ``generate()`` itself raises ValueError,
+    not a stripped-under-``-O`` assert);
+  * pin-vs-eviction under a tight device budget — one slot's pinned
+    working set is never evicted while other slots fault (threaded);
+  * budgeted end-to-end — scheduler outputs under an eviction-pressure
+    budget still match the full baseline;
+  * hint merging is round-robin-fair across slots.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import DeploymentProfile, analyze, build_artifact, write_monolithic
+from repro.core.prefetch import merge_hints
+from repro.models.zoo import build_model
+from repro.serving import ContinuousBatchingScheduler, GenerationEngine, cold_start
+
+from test_prefetch import COLS, ROWS, UNIT_BYTES, _leaf_rows, _mini
+
+ARCH = "mixtral-8x22b"
+PROMPT_LEN = 6
+MAX_SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def app(tmp_path_factory):
+    cfg = get_reduced(ARCH).replace(collect_moe_usage=True)
+    model = build_model(cfg)
+    profile = DeploymentProfile(resident_experts=1, hot_vocab_fraction=0.25,
+                                min_tier1_bytes=1024, vocab_row_group=128)
+    res = analyze(model, profile, trace_B=1, trace_S=16)
+    params = model.init(jax.random.PRNGKey(0))
+    outdir = str(tmp_path_factory.mktemp("sched"))
+    write_monolithic({"params": params, "opt_state": {}}, outdir)
+    build_artifact(params, res, outdir)
+    return cfg, model, res, outdir
+
+
+def _prompts(cfg, n, seed0=0):
+    return [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(seed0 + i), (PROMPT_LEN,), 0, cfg.vocab_size))
+        for i in range(n)
+    ]
+
+
+def _sequential_reference(cfg, model, res, outdir, prompts, steps, **cold_kw):
+    outs = []
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),), **cold_kw) as server:
+        eng = GenerationEngine(server, max_seq=MAX_SEQ)
+        for p, n in zip(prompts, steps):
+            out, _ = eng.generate(jnp.asarray(p[None, :]), n)
+            outs.append(np.asarray(out[0]))
+    return outs
+
+
+def test_interleaved_admission_matches_sequential(app):
+    """Five requests with staggered lengths through three slots: every
+    request's greedy tokens equal its solo sequential run."""
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 5)
+    steps = [5, 3, 6, 2, 4]  # staggered completions force interleaving
+    refs = _sequential_reference(cfg, model, res, outdir, prompts, steps)
+
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),)) as server:
+        sched = ContinuousBatchingScheduler(
+            GenerationEngine(server, max_seq=MAX_SEQ), max_batch=3)
+        reqs = [sched.submit(p, n) for p, n in zip(prompts, steps)]
+        sched.run()
+
+    for r, ref, n in zip(reqs, refs, steps):
+        assert r.done and r.error is None
+        assert r.stats.steps == n  # prefill token + per-decode accounting
+        np.testing.assert_array_equal(r.output, ref)
+    assert sched.stats.completed == 5
+    assert sched.stats.max_active <= 3
+
+
+def test_slot_reuse_after_completion(app):
+    """More requests than slots: freed slots re-admit from the queue and
+    every request completes over the single compiled batch shape."""
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 6, seed0=20)
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),)) as server:
+        sched = ContinuousBatchingScheduler(
+            GenerationEngine(server, max_seq=MAX_SEQ), max_batch=2)
+        reqs = [sched.submit(p, 3) for p in prompts]
+        sched.run()
+    assert all(r.done and r.error is None for r in reqs)
+    assert [len(r.out) for r in reqs] == [3] * 6
+    assert sched.stats.admitted == 6 and sched.stats.completed == 6
+    assert sched.stats.max_active <= 2
+    # FIFO fairness: completion order respects arrival for equal lengths
+    finish = [r.finished_t for r in reqs]
+    assert finish == sorted(finish)
+
+
+def test_over_length_rejected_loop_survives(app):
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 2, seed0=40)
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),)) as server:
+        eng = GenerationEngine(server, max_seq=MAX_SEQ)
+        # the engine itself must raise, not assert (stripped under -O)
+        with pytest.raises(ValueError, match="max_seq"):
+            eng.generate(jnp.asarray(prompts[0][None, :]), MAX_SEQ)
+        sched = ContinuousBatchingScheduler(eng, max_batch=2)
+        ok1 = sched.submit(prompts[0], 3)
+        bad = sched.submit(np.zeros(MAX_SEQ, np.int32), 4)  # over-length
+        ok2 = sched.submit(prompts[1], 3)
+        sched.run()
+    assert bad.done and bad.error is not None and "rejected" in bad.error
+    assert bad.out == []
+    for r in (ok1, ok2):
+        assert r.done and r.error is None and len(r.out) == 3
+    assert sched.stats.rejected == 1 and sched.stats.completed == 2
+
+
+def test_scheduler_under_budget_matches_full(app):
+    """Eviction pressure (budget = tier-1/2) must not change any request's
+    tokens: the union-fault path pins every active slot's working set for
+    the step."""
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 4, seed0=60)
+    steps = [4, 4, 4, 4]
+    refs = _sequential_reference(cfg, model, res, outdir, prompts, steps)
+    budget = res.plan.tier1_bytes // 2
+    with cold_start(model, outdir, res, mode="after2", warm_shapes=((1, PROMPT_LEN),),
+                    device_budget_bytes=budget, prefetch=True) as server:
+        sched = ContinuousBatchingScheduler(
+            GenerationEngine(server, max_seq=MAX_SEQ), max_batch=4)
+        reqs = [sched.submit(p, n) for p, n in zip(prompts, steps)]
+        sched.run()
+        resident = server.tiered.resident_bytes
+    assert resident <= budget
+    for r, ref in zip(reqs, refs):
+        assert r.done and r.error is None
+        np.testing.assert_array_equal(r.output, ref)
+
+
+def test_active_slot_pins_survive_other_slots_faults(tmp_path):
+    """The step invariant behind union faulting: while one slot's units
+    are pinned (mid-step), other slots hammering ensure() under a tight
+    budget evict only each other — never the pinned working set."""
+    budget = 4 * UNIT_BYTES
+    tp, data, units = _mini(tmp_path, budget=budget)
+    slot_a = [u.key for u in units[:2]]  # the active step's pinned set
+    slot_b = [u.key for u in units[2:]]  # 6 cold units fighting for 2 lanes
+    tp.ensure(slot_a, pin=True)
+    errors: list = []
+
+    def faulter(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(30):
+                tp.ensure(list(rng.choice(slot_b, size=2, replace=False)))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=faulter, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    for u in units[:2]:
+        assert tp.is_resident(u.key)
+        assert not tp.residency.was_evicted(u.key)
+        np.testing.assert_array_equal(_leaf_rows(tp, u), data[u.rows[0]:u.rows[1]])
+    # victims always existed among slot B's unpinned units → never over budget
+    assert tp.residency.max_resident_bytes <= budget
+    tp.release(slot_a)
+    assert tp.residency.resident_bytes <= budget
+
+
+def test_merge_hints_round_robin_fair():
+    merged = merge_hints(["a1", "a2", "a3"], ["b1", "b2"], ["a1", "c1"])
+    assert merged == ["a1", "b1", "a2", "b2", "c1", "a3"]
+    assert merge_hints() == []
+    assert merge_hints([], ["x"], []) == ["x"]
