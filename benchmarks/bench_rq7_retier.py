@@ -1,0 +1,185 @@
+"""RQ7 (beyond-paper, DESIGN.md §11): does one profile → re-tier →
+re-serve cycle reduce request-path cold-fault bytes and raise the
+prefetch hit rate, without changing a single output token?
+
+Three passes over the SAME request set per architecture, each on a fresh
+cold start, all under the ``stats`` residency preset (50%-of-tier-1
+device budget — the memory-pressure regime where re-tiering matters: the
+reduced configs are small enough that an unbudgeted request warms the
+whole tier-1 pool in one pass, leaving nothing to predict):
+
+  * **profile** — the original one-shot-analyzed artifact, prefetch OFF
+    (so the trace sees every fault undisturbed), ``AccessTrace`` attached;
+  * **retier** — the artifact replanned from that trace
+    (``replan_from_trace`` under a promotion budget of half the observed
+    fault bytes) and rewritten out-of-place (``retier_artifact``), plain
+    prefetch ON;
+  * **retier+pred** — same re-tiered artifact with the trace-trained
+    ``TransitionPredictor`` armed (evicted units are re-pulled *ahead* of
+    their refault, not at it).
+
+Greedy outputs are asserted identical across all passes before any number
+is reported; the cold-fault-bytes reduction and the hit-rate increase over
+the (prefetch-less) profile pass are asserted, not just printed.
+
+Standalone: ``python -m benchmarks.bench_rq7_retier [--smoke] [--json-out F]``
+(wired into benchmarks/run.py as the ``rq7`` section and the CI smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, setup_app, timed_cold_start
+from repro.core import AccessTrace, TransitionPredictor, replan_from_trace, retier_artifact
+from repro.serving import GenerationEngine, cold_start
+
+
+def _workload(server, prompts, gen_steps: int, max_seq: int):
+    """Serve the fixed request set sequentially; returns (outputs, stats)."""
+    eng = GenerationEngine(server, max_seq=max_seq)
+    outs = []
+    for p in prompts:
+        out, _ = eng.generate(jnp.asarray(p[None, :]), gen_steps)
+        outs.append(np.asarray(out[0]))
+    return outs, server.tiered.stats
+
+
+def run(
+    base_dir: str,
+    arch: str = "mixtral-8x22b",
+    *,
+    prompt_len: int = 8,
+    gen_steps: int = 10,
+    n_requests: int = 3,
+    promote_budget_frac: float = 0.5,
+) -> dict:
+    app = setup_app(arch, base_dir)
+    max_seq = prompt_len + gen_steps + 2
+    prompts = [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(200 + i), (prompt_len,), 0, app.cfg.vocab_size))
+        for i in range(n_requests)
+    ]
+
+    # -- pass 1: profile (prefetch off so the trace sees every fault) ---------
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                          residency="stats", prefetch=False, trace=True) as server:
+        outs_profile, stats = _workload(server, prompts, gen_steps, max_seq)
+        fault_bytes_before = stats.request_fault_bytes
+        faults_before = stats.misses
+        hit_before = stats.prefetch_hit_rate
+        trace = server.tiered.trace
+
+    # round-trip through JSON — the exact path the launcher's
+    # --profile-out / --retier-from flags take
+    trace = AccessTrace.from_json(trace.to_json())
+
+    # -- re-tier under a promotion budget: promote the hottest half of the
+    # observed fault bytes, leaving cold traffic for the predictor to hide
+    budget = max(1, int(fault_bytes_before * promote_budget_frac))
+    new_plan, report = replan_from_trace(app.result.plan, trace, app.result.reach,
+                                         max_promote_bytes=budget)
+    retier_dir = app.outdir.rstrip("/") + "-retier"
+    retier_artifact(app.outdir, new_plan, out_dir=retier_dir, report=report)
+    new_result = dataclasses.replace(app.result, plan=new_plan)
+
+    # -- pass 2: re-tiered artifact, plain prefetch --------------------------
+    with cold_start(app.model, retier_dir, new_result, mode="after2",
+                    warm_shapes=((1, prompt_len),), residency="stats",
+                    prefetch=True) as server:
+        outs_retier, stats = _workload(server, prompts, gen_steps, max_seq)
+        fault_bytes_retier = stats.request_fault_bytes
+        hit_retier = stats.prefetch_hit_rate
+
+    # -- pass 3: re-tiered artifact + trace-trained predictor ----------------
+    predictor = TransitionPredictor.from_trace(trace)
+    with cold_start(app.model, retier_dir, new_result, mode="after2",
+                    warm_shapes=((1, prompt_len),), residency="stats",
+                    prefetch=True, predictor=predictor) as server:
+        outs_pred, stats = _workload(server, prompts, gen_steps, max_seq)
+        fault_bytes_pred = stats.request_fault_bytes
+        faults_pred = stats.misses
+        hit_pred = stats.prefetch_hit_rate
+        predicted = server.prefetcher.stats.predicted
+
+    # correctness gate: re-tiering may only move bytes, never tokens
+    for outs in (outs_retier, outs_pred):
+        for got, ref in zip(outs, outs_profile):
+            np.testing.assert_array_equal(got, ref)
+    # the acceptance contract: fewer request-path cold-fault bytes, and a
+    # hit rate where the profiling pass (prefetch off) had none
+    assert fault_bytes_pred < fault_bytes_before, (
+        f"re-tier did not reduce cold-fault bytes: "
+        f"{fault_bytes_before} -> {fault_bytes_pred}"
+    )
+    assert hit_pred > hit_before, (
+        f"predictive prefetch hit rate did not increase: "
+        f"{hit_before} -> {hit_pred}"
+    )
+
+    return {
+        "arch": arch,
+        "n_requests": n_requests,
+        "gen_steps": gen_steps,
+        "fault_bytes_profile": fault_bytes_before,
+        "fault_bytes_retier": fault_bytes_retier,
+        "fault_bytes_pred": fault_bytes_pred,
+        "fault_bytes_reduction": 1.0 - fault_bytes_pred / max(1, fault_bytes_before),
+        "faults_profile": faults_before,
+        "faults_pred": faults_pred,
+        "hit_rate_profile": hit_before,
+        "hit_rate_retier": hit_retier,
+        "hit_rate_pred": hit_pred,
+        "predicted_loads": predicted,
+        "promoted_resident": len(report.promoted_resident),
+        "demoted_resident": len(report.demoted_resident),
+        "promoted_bytes": report.promoted_bytes,
+        "outputs_identical": True,
+    }
+
+
+def main(base_dir: str, *, smoke: bool = False, archs=None) -> list[str]:
+    archs = archs or (("mixtral-8x22b",) if smoke else ("mixtral-8x22b", "yi-34b"))
+    kw = dict(gen_steps=8, n_requests=2) if smoke else {}
+    rows = []
+    for arch in archs:
+        r = run(base_dir, arch, **kw)
+        rows.append(csv_row(
+            f"rq7_retier/{r['arch']}",
+            0.0,
+            f"fault_bytes {r['fault_bytes_profile']}->{r['fault_bytes_pred']} "
+            f"(-{r['fault_bytes_reduction'] * 100:.0f}%)"
+            f"|hit_rate {r['hit_rate_profile']:.2f}->{r['hit_rate_pred']:.2f} "
+            f"(plain prefetch {r['hit_rate_retier']:.2f})"
+            f"|promoted={r['promoted_resident']} demoted={r['demoted_resident']}"
+            f"|predicted_loads={r['predicted_loads']}"
+            f"|outputs=identical",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one arch, 2 requests x 8 steps")
+    ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
+    ap.add_argument("--json-out", default="",
+                    help="also write the CSV rows as a JSON list here")
+    args = ap.parse_args()
+    scratch = args.out or tempfile.mkdtemp(prefix="faaslight_rq7_")
+    print("name,us_per_call,derived")
+    rows = main(scratch, smoke=args.smoke)
+    for row in rows:
+        print(row)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"section": "rq7", "rows": rows}, f, indent=2)
+    sys.exit(0)

@@ -1,7 +1,7 @@
 """Checkpointing: atomic/async/keep-N manager over a bf16-safe raw-binary
 array bundle format with partial reads (tier-aware cold start)."""
 
-from repro.checkpoint.manager import CheckpointManager, RestoreResult
+from repro.checkpoint.manager import CheckpointManager, RestoreResult, commit_dir
 from repro.checkpoint.tensorstore_lite import (
     bundle_nbytes,
     read_bundle,
@@ -12,6 +12,7 @@ from repro.checkpoint.tensorstore_lite import (
 __all__ = [
     "CheckpointManager",
     "RestoreResult",
+    "commit_dir",
     "write_bundle",
     "read_bundle",
     "read_index",

@@ -46,6 +46,21 @@ def _host_snapshot(tree: Any) -> dict[str, np.ndarray]:
     return {p: np.asarray(a) for (p, _), a in zip(flat, arrs)}
 
 
+def commit_dir(tmp: str, final: str) -> None:
+    """Publish a fully-written directory via rename — the repo-wide commit
+    rule (DESIGN.md §6): a reader never sees a half-written ``final``.
+    Replacing an existing ``final`` removes it first, so a crash between
+    the rmtree and the rename leaves ``final`` *absent* (detectably
+    missing, never torn); callers that need the previous version to
+    survive that window keep their own commit record (the checkpoint
+    manager's manifest) or treat absence as "re-run the rewrite" (the
+    profile-guided artifact rewrite, ``core/retier.py`` / DESIGN.md §11.2,
+    whose source artifact is never touched)."""
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+
 @dataclass
 class RestoreResult:
     step: int
@@ -120,9 +135,7 @@ class CheckpointManager:
             tsl.write_bundle(os.path.join(tmp, name), arrays)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump({"step": step, "time": time.time(), **meta}, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)  # commit point 1: directory visible
+        commit_dir(tmp, final)  # commit point 1: directory visible
         man = self._read_manifest()
         steps = sorted(set(man["steps"]) | {step})
         self._write_manifest({"latest": max(steps), "steps": steps})  # commit 2

@@ -1,6 +1,8 @@
 """FaaSLight core: Program Analyzer (entry recognition, param-reachability
 call graph, tier partitioning) + Code Generator (optional store, on-demand
-loader, artifact builder). See DESIGN.md §4."""
+loader, artifact builder) + the profile-guided re-tiering loop (access
+telemetry, trace-driven replanner, predictive prefetch). See DESIGN.md §4
+and §11."""
 
 from repro.core.analyzer import AnalysisResult, analyze, build_artifact, write_monolithic
 from repro.core.entrypoints import (
@@ -12,6 +14,7 @@ from repro.core.entrypoints import (
 )
 from repro.core.file_elim import eliminate_collections, eliminate_files
 from repro.core.on_demand import (
+    AccessTrace,
     LoadEvent,
     LoaderStats,
     ResidencyManager,
@@ -19,9 +22,16 @@ from repro.core.on_demand import (
     placeholder_tree,
 )
 from repro.core.optional_store import OptionalStore, OptionalStoreWriter, write_store
-from repro.core.prefetch import Prefetcher, PrefetchStats
+from repro.core.prefetch import Prefetcher, PrefetchStats, TransitionPredictor
 from repro.core.param_graph import ReachabilityReport, build_reachability, entry_param_liveness
 from repro.core.partition import TierDecision, TierPlan, Unit, build_tier_plan
+from repro.core.retier import (
+    RetierReport,
+    check_tier0_superset,
+    replan_from_trace,
+    required_tier0,
+    retier_artifact,
+)
 
 __all__ = [
     "AnalysisResult",
@@ -35,6 +45,7 @@ __all__ = [
     "recognize_entries",
     "eliminate_collections",
     "eliminate_files",
+    "AccessTrace",
     "LoadEvent",
     "LoaderStats",
     "ResidencyManager",
@@ -42,6 +53,12 @@ __all__ = [
     "placeholder_tree",
     "Prefetcher",
     "PrefetchStats",
+    "TransitionPredictor",
+    "RetierReport",
+    "replan_from_trace",
+    "required_tier0",
+    "check_tier0_superset",
+    "retier_artifact",
     "OptionalStore",
     "OptionalStoreWriter",
     "write_store",

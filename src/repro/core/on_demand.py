@@ -25,6 +25,12 @@ back to placeholder zeros before the new bytes land — resident bytes never
 exceed the budget while any victim is evictable. Eviction never touches a
 LOADING unit (an in-flight read can't be yanked) and never touches a
 pinned unit (``ensure(pin=True)`` / ``release()`` bracket a request step).
+
+Telemetry (DESIGN.md §11): ``start_trace()`` attaches an ``AccessTrace``
+that records every request-path ``ensure()`` batch — per-unit fault and
+touch counts, request-phase tags, co-access pairs, and batch→batch
+transitions. The trace is the input to the profile-guided replanner
+(``core/retier.py``) and the predictive prefetcher (``core/prefetch.py``).
 """
 
 from __future__ import annotations
@@ -57,6 +63,139 @@ class LoadEvent:
     upload_s: float
     t: float = 0.0          # monotonic completion time
     source: str = "fault"   # "fault" | "prefetch" | "preload"
+    phase: str = ""         # request phase at load time ("prefill" | "decode" | "")
+
+
+class AccessTrace:
+    """Demand-access telemetry for profile-guided re-tiering (DESIGN.md §11).
+
+    One trace aggregates every *request-path* access batch (an
+    ``ensure(source="fault")`` call) into the four signals the replanner
+    and the predictive prefetcher consume:
+
+      * ``touches[key]``  — demand touches, warm or cold (a preloaded
+        resident that is never touched is a demotion candidate);
+      * ``faults[key]``   — demand touches that found the unit not yet
+        RESIDENT (the cold-start misses re-tiering should promote away);
+      * ``phases[key]``   — per-phase fault counts (``prefill``/``decode``
+        tags set by the engine via ``TieredParams.set_phase``);
+      * ``pairs`` / ``transitions`` — co-access pairs within one batch and
+        batch→next-batch unit transitions, the predictor's raw material.
+
+    Pair/transition recording is skipped for batches larger than
+    ``max_assoc_batch`` keys (a bulk ``ensure_all`` would otherwise record
+    a quadratic blob of meaningless associations). Serialization is
+    deterministic: ``to_json`` sorts every key so record → JSON → replan
+    is reproducible byte-for-byte (tests/test_retier.py).
+    """
+
+    VERSION = 1
+
+    def __init__(self, *, max_assoc_batch: int = 64):
+        self.max_assoc_batch = max_assoc_batch
+        self.batches = 0
+        self.touches: dict[str, int] = {}
+        self.faults: dict[str, int] = {}
+        self.phases: dict[str, dict[str, int]] = {}
+        self.pairs: dict[tuple, int] = {}           # (a, b) with a < b
+        self.transitions: dict[str, dict[str, int]] = {}
+        self._last_batch: list[str] = []
+
+    def record(self, keys: Iterable[str], cold: Iterable[str], phase: str = "") -> None:
+        """Record one demand batch. ``keys`` is everything the request
+        touched; ``cold`` the subset that was not RESIDENT. Caller holds
+        the owning loader's lock (one writer at a time)."""
+        keys, cold = list(keys), list(cold)
+        if not keys:
+            return
+        self.batches += 1
+        for k in keys:
+            self.touches[k] = self.touches.get(k, 0) + 1
+        for k in cold:
+            self.faults[k] = self.faults.get(k, 0) + 1
+            by_phase = self.phases.setdefault(k, {})
+            by_phase[phase] = by_phase.get(phase, 0) + 1
+        if len(keys) <= self.max_assoc_batch:
+            for i, a in enumerate(keys):
+                for b in keys[i + 1:]:
+                    if a != b:
+                        pair = (a, b) if a < b else (b, a)
+                        self.pairs[pair] = self.pairs.get(pair, 0) + 1
+            # _last_batch is [] or an under-cap batch by construction
+            cur = set(keys)
+            for a in self._last_batch:
+                nxt = self.transitions.setdefault(a, {})
+                for b in cur:
+                    if b != a:
+                        nxt[b] = nxt.get(b, 0) + 1
+            self._last_batch = keys
+        else:
+            self._last_batch = []
+
+    # -- serialization (deterministic; the --profile-out format) --------------
+    def to_dict(self) -> dict:
+        return {
+            "version": self.VERSION,
+            "batches": self.batches,
+            "touches": {k: self.touches[k] for k in sorted(self.touches)},
+            "faults": {k: self.faults[k] for k in sorted(self.faults)},
+            "phases": {
+                k: {p: v[p] for p in sorted(v)}
+                for k, v in sorted(self.phases.items())
+            },
+            "pairs": [[a, b, self.pairs[(a, b)]] for a, b in sorted(self.pairs)],
+            "transitions": {
+                k: {n: v[n] for n in sorted(v)}
+                for k, v in sorted(self.transitions.items())
+            },
+        }
+
+    def to_json(self) -> str:
+        import json
+
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AccessTrace":
+        if d.get("version") != cls.VERSION:
+            raise ValueError(f"unsupported AccessTrace version {d.get('version')!r}")
+        t = cls()
+        t.batches = int(d.get("batches", 0))
+        t.touches = {k: int(v) for k, v in d.get("touches", {}).items()}
+        t.faults = {k: int(v) for k, v in d.get("faults", {}).items()}
+        t.phases = {
+            k: {p: int(n) for p, n in v.items()} for k, v in d.get("phases", {}).items()
+        }
+        t.pairs = {(a, b): int(n) for a, b, n in d.get("pairs", [])}
+        t.transitions = {
+            k: {n: int(c) for n, c in v.items()}
+            for k, v in d.get("transitions", {}).items()
+        }
+        return t
+
+    @classmethod
+    def from_json(cls, s: str) -> "AccessTrace":
+        import json
+
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        """Atomic temp+rename write (the same commit rule every artifact
+        writer in this repo follows)."""
+        import json
+        import os
+
+        tmp = path + ".partial"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, sort_keys=True)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "AccessTrace":
+        import json
+
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
 
 
 @dataclass
@@ -74,6 +213,13 @@ class LoaderStats:
     @property
     def total_miss_bytes(self) -> int:
         return sum(e.nbytes for e in self.events if e.source != "prefetch")
+
+    @property
+    def request_fault_bytes(self) -> int:
+        """Bytes moved synchronously ON the request path (source="fault"
+        only — excludes cold-start preload and background prefetch). The
+        quantity one profile→re-tier cycle should shrink (RQ7)."""
+        return sum(e.nbytes for e in self.events if e.source == "fault")
 
     @property
     def total_loaded_bytes(self) -> int:
@@ -265,12 +411,27 @@ class TieredParams:
         self.plan = plan
         self.store = store
         self.stats = LoaderStats()
+        self.trace: Optional[AccessTrace] = None  # attach via start_trace()
+        self._phase = ""  # request phase tag for trace/LoadEvent (DESIGN.md §11)
         self._lock = threading.RLock()
         self.residency = ResidencyManager(self._lock, budget_bytes=device_budget_bytes)
         self._all_units: dict[str, Unit] = {}
         for d in plan.decisions.values():
             for u in d.units:
                 self._all_units[u.key] = u
+
+    # -- telemetry (DESIGN.md §11) --------------------------------------------
+    def start_trace(self, trace: Optional[AccessTrace] = None) -> AccessTrace:
+        """Attach an ``AccessTrace``; every subsequent request-path
+        ``ensure()`` batch is recorded into it. Returns the trace."""
+        with self._lock:
+            self.trace = trace if trace is not None else AccessTrace()
+            return self.trace
+
+    def set_phase(self, phase: str) -> None:
+        """Tag subsequent loads/trace batches with a request phase
+        ("prefill" | "decode" | ""). Set by the engine around each step."""
+        self._phase = phase
 
     # -- residency ----------------------------------------------------------
     def is_resident(self, key: str) -> bool:
@@ -317,6 +478,7 @@ class TieredParams:
         res = self.residency
         to_load: list[str] = []
         wait_for: list[tuple[str, str]] = []  # (key, in-flight loader source)
+        cold: list[str] = []  # not RESIDENT at demand time (trace faults)
         with self._lock:
             for k in keys:
                 st = res.state_of(k)
@@ -326,12 +488,16 @@ class TieredParams:
                     else:
                         self.stats.hits += 1
                 elif st == LOADING:
+                    cold.append(k)
                     wait_for.append((k, res.loader_of(k)))
                 else:
+                    cold.append(k)
                     if res.begin_load(k, source):
                         to_load.append(k)
             if pin:
                 res.pin(keys)
+            if self.trace is not None and source == "fault":
+                self.trace.record(keys, cold, self._phase)
         if not to_load and not wait_for:
             return 0
 
@@ -368,7 +534,8 @@ class TieredParams:
                         self.stats.misses += 1
                     self.stats.events.append(
                         LoadEvent(key, arr.nbytes, t1 - t0, t2 - t1,
-                                  t=time.monotonic(), source=source)
+                                  t=time.monotonic(), source=source,
+                                  phase=self._phase)
                     )
                 moved += arr.nbytes
 
@@ -420,7 +587,8 @@ class TieredParams:
                 self.stats.misses += 1
             self.stats.events.append(
                 LoadEvent(key, arr.nbytes, t1 - t0, t2 - t1,
-                          t=time.monotonic(), source=source)
+                          t=time.monotonic(), source=source,
+                          phase=self._phase)
             )
         return arr.nbytes
 
@@ -491,7 +659,8 @@ class TieredParams:
             self.residency.commit_load(key, nbytes, "prefetch")
             self.stats.events.append(
                 LoadEvent(key, nbytes, fetch_s, upload_s,
-                          t=time.monotonic(), source="prefetch")
+                          t=time.monotonic(), source="prefetch",
+                          phase=self._phase)
             )
         return nbytes
 

@@ -26,6 +26,12 @@ touching the store; a demand ``ensure()`` that wants a claimed key waits on
 the residency condition instead of reading twice, and eviction never
 selects a LOADING unit. On shutdown every unfinished claim is aborted back
 to COLD so no waiter hangs.
+
+Predictive mode (DESIGN.md §11.3): with a ``TransitionPredictor`` attached
+(built from a profiling run's ``AccessTrace``), ``observe(keys)`` expands
+each step's *actual* demand accesses into their learned successors and
+hints them immediately — one step ahead of the engine's own logits/routing
+hints, which can only name units the current step already points at.
 """
 
 from __future__ import annotations
@@ -64,6 +70,53 @@ def merge_hints(*hint_lists: Iterable[str]) -> list[str]:
     return list(out)
 
 
+class TransitionPredictor:
+    """Learned unit→next-unit table from a profiling run (DESIGN.md §11.3).
+
+    Built from ``AccessTrace.transitions`` (batch→next-batch co-occurrence
+    counts): for each unit the top-``k`` successors ranked by observed
+    count (ties broken by key for determinism). ``follow(keys)``
+    round-robin-merges the per-key successor lists — the same fairness
+    rule the scheduler applies to per-slot hints — so one unit's long
+    tail cannot starve another's best prediction.
+    """
+
+    def __init__(self, transitions: dict, *, top_k: int = 8):
+        self.top_k = max(1, top_k)
+        self._table: dict[str, list[str]] = {
+            key: [
+                nxt
+                for nxt, _ in sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))[
+                    : self.top_k
+                ]
+            ]
+            for key, counts in transitions.items()
+            if counts
+        }
+
+    @classmethod
+    def from_trace(cls, trace, *, top_k: int = 8) -> "TransitionPredictor":
+        """``trace`` is an ``core.on_demand.AccessTrace`` (or anything with
+        a ``transitions`` dict)."""
+        return cls(trace.transitions, top_k=top_k)
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def successors(self, key: str) -> list[str]:
+        return list(self._table.get(key, ()))
+
+    def follow(self, keys: Iterable[str]) -> list[str]:
+        """Ranked, deduped successor predictions for a set of observed
+        units; the observed units themselves are never predicted. Merge
+        order follows the caller's key order (deduped), not a hash-
+        randomized set, so identical runs prefetch in identical order."""
+        ordered = list(dict.fromkeys(keys))
+        seen = set(ordered)
+        merged = merge_hints(*(self._table.get(k, ()) for k in ordered))
+        return [k for k in merged if k not in seen]
+
+
 @dataclass
 class PrefetchStats:
     hints: int = 0             # keys offered via hint()
@@ -73,6 +126,8 @@ class PrefetchStats:
     skipped_resident: int = 0  # hints dropped because already resident/queued
     batches: int = 0
     errors: int = 0
+    observed: int = 0          # demand-accessed keys fed to observe()
+    predicted: int = 0         # predictor-expanded hints accepted for loading
 
     def to_dict(self) -> dict:
         return {
@@ -83,6 +138,8 @@ class PrefetchStats:
             "skipped_resident": self.skipped_resident,
             "batches": self.batches,
             "errors": self.errors,
+            "observed": self.observed,
+            "predicted": self.predicted,
         }
 
 
@@ -103,11 +160,13 @@ class Prefetcher:
         batch_units: int = 8,
         queue_depth: int = 2,
         name: str = "prefetch",
+        predictor: Optional[TransitionPredictor] = None,
     ):
         if tiered.store is None:
             raise ValueError("prefetcher needs a TieredParams with an optional store")
         self.tiered = tiered
         self.batch_units = max(1, batch_units)
+        self.predictor = predictor
         self.stats = PrefetchStats()
         # hint set keeps insertion order (FIFO priority) while deduping
         self._hints: OrderedDict[str, None] = OrderedDict()
@@ -148,6 +207,26 @@ class Prefetcher:
             self.tiered.touch(touch)
         if accepted:
             self._wake.set()
+        return accepted
+
+    def observe(self, keys: Iterable[str]) -> int:
+        """Feed the units a request step actually demand-accessed. With a
+        ``TransitionPredictor`` attached, their learned successors join the
+        hint set immediately — *ahead of* the engine/scheduler's own
+        next-step hints, which only name units the current logits/routing
+        already point at (DESIGN.md §11.3). Without a predictor this is a
+        no-op. Returns the predicted keys accepted for loading."""
+        if self.predictor is None or self._stop.is_set():
+            return 0
+        keys = list(keys)
+        if not keys:
+            return 0
+        self.stats.observed += len(keys)
+        predicted = self.predictor.follow(keys)
+        if not predicted:
+            return 0
+        accepted = self.hint(predicted)
+        self.stats.predicted += accepted
         return accepted
 
     @property

@@ -1,0 +1,301 @@
+"""⑥ Profile-guided re-tiering — closing the static-analysis loop
+(DESIGN.md §11).
+
+FaaSLight's central caveat is that static reachability can misclassify
+indispensable code: a unit the analyzer deferred to tier-1 but every
+request touches pays its fault latency on the first request after every
+cold start, forever. The fix the field converged on (arXiv:2504.19283) is
+*profiling*: serve real traffic once with telemetry on, then re-tier from
+the observed access trace. ``replan_from_trace`` consumes an
+``AccessTrace`` (core/on_demand.py) and rewrites the tier plan:
+
+  * **promote** — tier-1 units the trace shows were demand-faulted join
+    the cold-start hot set (``TierDecision.resident_units``); a whole-leaf
+    tier-1 decision whose single unit faulted is promoted to tier-0
+    outright (its bytes move from the optional store into the eager
+    bundle). An optional ``max_promote_bytes`` budget caps the added
+    cold-start bytes, hottest-first.
+  * **demote** — preloaded resident units the profiled traffic never
+    touched are dropped from the hot set (their bytes stop riding every
+    cold start); a tier-0 *leaf* is demotable only when it is unreachable
+    from every served entry.
+
+**The safety invariant** (``check_tier0_superset``): the replanned tier-0
+set must remain a superset of the entry-reachable leaves the original
+plan held in tier-0. Dense reachable leaves have *no runtime fault
+detector* — unlike vocab rows (exact pre-fault) and routed experts
+(usage-mask retry), a demoted dense leaf would silently compute on
+placeholder zeros. The demotion rule therefore never consults the trace
+for tier-0 leaves (an adversarial trace cannot demote a reachable leaf),
+and the invariant is re-verified on the final plan before it is returned
+(tests/test_retier.py exercises both directions).
+
+``retier_artifact`` materializes a replanned artifact next to the old one
+by moving bytes between the tier-0 bundle and the optional store, and
+publishes it with the checkpoint layer's rename-commit
+(``checkpoint.manager.commit_dir``) so a crash mid-rewrite never leaves a
+torn half-artifact where a server might cold-start from it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint import tensorstore_lite as tsl
+from repro.checkpoint.manager import commit_dir
+from repro.core.on_demand import AccessTrace
+from repro.core.optional_store import OptionalStore, OptionalStoreWriter
+from repro.core.param_graph import ReachabilityReport
+from repro.core.partition import TierDecision, TierPlan, Unit
+
+
+@dataclass
+class RetierReport:
+    """What one profile→re-tier cycle changed, for logs and artifact.json."""
+
+    promoted_resident: list = field(default_factory=list)  # units joining the hot set
+    demoted_resident: list = field(default_factory=list)   # hot-set units dropped
+    promoted_leaves: list = field(default_factory=list)    # whole leaves tier-1 → tier-0
+    demoted_leaves: list = field(default_factory=list)     # whole leaves tier-0 → tier-1
+    promoted_bytes: int = 0   # cold-start bytes added (promotions)
+    demoted_bytes: int = 0    # cold-start bytes shed (demotions)
+    budget_skipped: int = 0   # promotion candidates dropped by max_promote_bytes
+
+    def summary(self) -> dict:
+        return {
+            "promoted_resident": len(self.promoted_resident),
+            "demoted_resident": len(self.demoted_resident),
+            "promoted_leaves": len(self.promoted_leaves),
+            "demoted_leaves": len(self.demoted_leaves),
+            "promoted_bytes": self.promoted_bytes,
+            "demoted_bytes": self.demoted_bytes,
+            "budget_skipped": self.budget_skipped,
+        }
+
+
+def required_tier0(plan: TierPlan, reach: ReachabilityReport) -> set:
+    """The leaf paths re-tiering must never demote: entry-reachable leaves
+    the original plan already proved indispensable (tier-0). This set is a
+    function of the *plan and the static analysis only* — no trace input —
+    which is what makes the §11.2 invariant adversarial-trace-proof."""
+    return {
+        p
+        for p, d in plan.decisions.items()
+        if d.tier == 0 and reach.reaching(p)
+    }
+
+
+def check_tier0_superset(plan: TierPlan, required: set) -> None:
+    """Raise unless every required leaf is tier-0 in ``plan``."""
+    missing = sorted(p for p in required if plan.decisions[p].tier != 0)
+    if missing:
+        raise ValueError(
+            f"re-tier invariant violated: entry-reachable leaves left tier-0: "
+            f"{missing[:5]}{'...' if len(missing) > 5 else ''}"
+        )
+
+
+def replan_from_trace(
+    plan: TierPlan,
+    trace: AccessTrace,
+    reach: ReachabilityReport,
+    *,
+    promote_min_faults: int = 1,
+    max_promote_bytes: Optional[int] = None,
+    promote_leaves: bool = True,
+    demote_untouched_residents: bool = True,
+) -> tuple[TierPlan, RetierReport]:
+    """Rewrite the tier plan from one profiling run's access trace.
+
+    Deterministic: candidates are ranked by (fault count desc, key), so
+    the same trace always yields the same plan (tests/test_retier.py).
+    An empty trace (``batches == 0``) is a no-op for demotion — a
+    misconfigured profiling run must not wipe the offline-stats hot set.
+    """
+    required = required_tier0(plan, reach)
+    report = RetierReport()
+
+    # -- rank promotion candidates globally (hottest first) -------------------
+    candidates: list[tuple[int, Unit, str]] = []  # (faults, unit, path)
+    for path, dec in plan.decisions.items():
+        if dec.tier != 1:
+            continue
+        resident = set(dec.resident_units)
+        for u in dec.units:
+            n = trace.faults.get(u.key, 0)
+            if u.key not in resident and n >= max(1, promote_min_faults):
+                candidates.append((n, u, path))
+    candidates.sort(key=lambda c: (-c[0], c[1].key))
+
+    promote: dict[str, set] = {}  # path -> unit keys to add to the hot set
+    spent = 0
+    for n, u, path in candidates:
+        if max_promote_bytes is not None and spent + u.nbytes > max_promote_bytes:
+            report.budget_skipped += 1
+            continue
+        spent += u.nbytes
+        promote.setdefault(path, set()).add(u.key)
+
+    decisions: dict[str, TierDecision] = {}
+    for path, dec in plan.decisions.items():
+        if dec.tier == 0:
+            # tier-0 demotion is *static-only*: an adversarial trace must
+            # not be able to pull an entry-reachable dense leaf out from
+            # under the compiled entries (no runtime fault detector exists
+            # for dense access — see the module docstring).
+            if path not in required and reach.reaching(path) == set():
+                decisions[path] = TierDecision(
+                    path, 1, "leaf",
+                    "re-tier: unreachable from served entries", dec.nbytes,
+                    units=(Unit(path, path, nbytes=dec.nbytes),),
+                )
+                report.demoted_leaves.append(path)
+                report.demoted_bytes += dec.nbytes
+            else:
+                decisions[path] = dec
+            continue
+
+        added = promote.get(path, set())
+        # whole-leaf promotion: the leaf's one unit was demand-faulted, so
+        # it belongs in the eager bundle, not behind a first-request fault
+        if (
+            promote_leaves
+            and dec.granularity == "leaf"
+            and len(dec.units) == 1
+            and dec.units[0].key in added
+        ):
+            n = trace.faults.get(dec.units[0].key, 0)
+            decisions[path] = TierDecision(
+                path, 0, "leaf", f"re-tier: faulted {n}x in profile", dec.nbytes,
+            )
+            report.promoted_leaves.append(path)
+            report.promoted_bytes += dec.nbytes
+            continue
+
+        resident = list(dec.resident_units)
+        if demote_untouched_residents and trace.batches > 0:
+            kept, dropped = [], []
+            for k in resident:
+                (kept if trace.touches.get(k, 0) > 0 else dropped).append(k)
+            resident = kept
+            report.demoted_resident.extend(dropped)
+            by_key = {u.key: u for u in dec.units}
+            report.demoted_bytes += sum(by_key[k].nbytes for k in dropped if k in by_key)
+        if added:
+            ordered = sorted(added, key=lambda k: (-trace.faults.get(k, 0), k))
+            resident = resident + [k for k in ordered if k not in resident]
+            report.promoted_resident.extend(ordered)
+            by_key = {u.key: u for u in dec.units}
+            report.promoted_bytes += sum(by_key[k].nbytes for k in ordered if k in by_key)
+        decisions[path] = dataclasses.replace(dec, resident_units=tuple(resident))
+
+    new_plan = TierPlan(
+        decisions=decisions, profile=plan.profile, entry_names=list(plan.entry_names)
+    )
+    check_tier0_superset(new_plan, required)  # the §11.2 invariant, re-proved
+    return new_plan, report
+
+
+def retier_artifact(
+    artifact_dir: str,
+    plan: TierPlan,
+    *,
+    out_dir: Optional[str] = None,
+    report: Optional[RetierReport] = None,
+    compress_level: int = 6,
+) -> dict:
+    """Materialize a replanned two-tier artifact from an existing one.
+
+    No model weights needed: bytes are moved between the old tier-0 bundle
+    and the old optional store according to the new plan (a promoted leaf
+    leaves the store for the bundle; a demoted leaf goes the other way;
+    expert/row units stay put — only their hot-set membership changed,
+    which lives in artifact.json). The new artifact is built in a
+    ``.partial`` directory and published with the checkpoint layer's
+    rename-commit (``checkpoint.manager.commit_dir``); ``out_dir`` must
+    differ from ``artifact_dir`` because the rewrite streams from the old
+    files while writing the new ones. Returns the new artifact.json meta.
+    """
+    out_dir = out_dir if out_dir is not None else artifact_dir.rstrip("/") + "-retier"
+    if os.path.abspath(out_dir) == os.path.abspath(artifact_dir):
+        raise ValueError("retier_artifact reads artifact_dir while writing — "
+                         "out_dir must be a different directory")
+    # mmap: tier-0 is the bulk of the model and most of it is copied
+    # through unchanged — stream it instead of materializing O(model)
+    # host bytes (the source dir stays intact until the commit)
+    old_tier0 = tsl.read_bundle(os.path.join(artifact_dir, "tier0"), mmap=True)
+    store = OptionalStore(os.path.join(artifact_dir, "optional.blob"))
+    try:
+        tmp = out_dir.rstrip("/") + ".partial"
+        if os.path.exists(tmp):
+            import shutil
+
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        tier0: dict[str, np.ndarray] = {}
+        for path, dec in plan.decisions.items():
+            if dec.tier != 0:
+                continue
+            if path in old_tier0:
+                tier0[path] = old_tier0[path]
+            elif path in store.entries:  # promoted whole leaf
+                tier0[path] = store.fetch(path)
+            else:
+                raise KeyError(
+                    f"tier-0 leaf {path!r} found in neither the old bundle "
+                    f"nor the optional store — artifact/plan mismatch"
+                )
+        tsl.write_bundle(os.path.join(tmp, "tier0"), tier0)
+
+        with OptionalStoreWriter(
+            os.path.join(tmp, "optional.blob"), level=compress_level
+        ) as w:
+            for path, dec in plan.decisions.items():
+                if dec.tier != 1:
+                    continue
+                for unit in dec.units:
+                    if unit.key in store.entries:
+                        w.add(unit.key, store.fetch(unit.key))
+                    elif path in old_tier0:  # demoted whole leaf
+                        w.add(unit.key, np.asarray(old_tier0[path]))
+                    else:
+                        raise KeyError(
+                            f"tier-1 unit {unit.key!r} found in neither the "
+                            f"optional store nor the old tier-0 bundle"
+                        )
+
+        new_store = OptionalStore(os.path.join(tmp, "optional.blob"))
+        meta = {
+            "profile": plan.profile.name,
+            "entries": list(plan.entry_names),
+            "tier0_bytes": plan.tier0_bytes,
+            "tier1_raw_bytes": new_store.raw_bytes,
+            "tier1_compressed_bytes": new_store.compressed_bytes,
+            "retier": report.summary() if report is not None else {},
+            "decisions": {
+                p: {
+                    "tier": d.tier,
+                    "granularity": d.granularity,
+                    "reason": d.reason,
+                    "nbytes": d.nbytes,
+                    "units": [u.key for u in d.units],
+                    "resident_units": list(d.resident_units),
+                }
+                for p, d in plan.decisions.items()
+            },
+        }
+        new_store.close()
+        with open(os.path.join(tmp, "artifact.json"), "w") as f:
+            json.dump(meta, f)
+
+        commit_dir(tmp, out_dir)
+        return meta
+    finally:
+        store.close()

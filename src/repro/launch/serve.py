@@ -10,7 +10,15 @@ Two request modes:
   * traffic (``--concurrency N``): N continuous-batching slots served by
     the scheduler (DESIGN.md §9), with ``--requests`` prompts arriving
     open-loop at ``--arrival-rate`` req/s (0 = all at once), reporting
-    throughput and per-request p50/p99 latency.
+    throughput and per-request p50/p99 latency. Exits nonzero if any
+    request failed or never finished.
+
+Profile → re-tier → re-serve (DESIGN.md §11): ``--profile-out t.json``
+records the demand-access trace of this serving run (profile with
+``--no-prefetch`` so the trace sees every fault); a later run with
+``--retier-from t.json`` replans the tier split from the trace, rewrites
+the artifact next to the original (``<artifact>/<arch>-retier``), and
+arms the prefetcher with the trace's learned unit→next-unit predictor.
 """
 
 from __future__ import annotations
@@ -27,9 +35,13 @@ import numpy as np
 
 from repro.configs import get_config, get_reduced
 from repro.core import (
+    AccessTrace,
     DeploymentProfile,
+    TransitionPredictor,
     analyze,
     build_artifact,
+    replan_from_trace,
+    retier_artifact,
     write_monolithic,
 )
 from repro.data import DataConfig, SyntheticTokenPipeline
@@ -61,7 +73,25 @@ def main(argv=None) -> int:
                     help="traffic mode: number of requests to submit")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="traffic mode: open-loop Poisson arrivals, req/s (0 = all at once)")
+    ap.add_argument("--profile-out", default="",
+                    help="write this run's demand-access trace (AccessTrace JSON) "
+                         "here at exit; profile with --no-prefetch so the trace "
+                         "sees every fault (DESIGN.md §11; after2 only)")
+    ap.add_argument("--retier-from", default="",
+                    help="re-tier the artifact from a prior --profile-out trace "
+                         "before cold start (promote demand-faulted units, demote "
+                         "untouched residents) and drive the predictive "
+                         "prefetcher from its transition table (after2 only)")
     args = ap.parse_args(argv)
+    if (args.profile_out or args.retier_from) and args.mode != "after2":
+        ap.error("--profile-out/--retier-from need the two-tier runtime (--mode after2)")
+    if args.retier_from and (args.no_prefetch or args.policy == "strict"):
+        # without a prefetcher (explicit --no-prefetch, or the strict
+        # preset's prefetch-off default) the trained predictor would be
+        # silently dropped — the opposite of what the flag promises
+        ap.error("--retier-from drives the predictive prefetcher; drop "
+                 "--no-prefetch / use --policy stats|full (profiling runs "
+                 "want --no-prefetch, re-serve runs don't)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = cfg.replace(collect_moe_usage=cfg.moe is not None)
@@ -98,20 +128,36 @@ def main(argv=None) -> int:
     else:
         build_artifact(params, result, outdir)
 
+    predictor = None
+    if args.retier_from:
+        # one profile→re-tier cycle (DESIGN.md §11): replan from the trace,
+        # rewrite the artifact out-of-place, serve from the re-tiered copy
+        # with the trace-trained predictor armed
+        prof_trace = AccessTrace.load(args.retier_from)
+        result.plan, rep = replan_from_trace(result.plan, prof_trace, result.reach)
+        retier_dir = outdir.rstrip("/") + "-retier"
+        retier_artifact(outdir, result.plan, out_dir=retier_dir, report=rep)
+        outdir = retier_dir
+        predictor = TransitionPredictor.from_trace(prof_trace)
+        print(f"[serve] re-tiered from {args.retier_from} -> {retier_dir}:",
+              json.dumps(rep.summary()))
+
     warm_B = 1 if args.concurrency > 0 else args.batch
     # the context manager guarantees prefetcher/store teardown even when
     # the request path raises (a leaked reader/uploader thread would hang
     # the process on exit)
+    failed = 0
     with cold_start(model, outdir, result if args.mode == "after2" else None,
                     mode=args.mode, warm_shapes=((warm_B, args.prompt_len),),
                     residency=args.policy if args.mode == "after2" else None,
                     device_budget_bytes=args.device_budget_bytes or None,
-                    prefetch=False if args.no_prefetch else None) as server:
+                    prefetch=False if args.no_prefetch else None,
+                    trace=bool(args.profile_out), predictor=predictor) as server:
         print(f"[serve] cold start ({args.mode}):", json.dumps(server.report.to_dict(), default=float))
 
         engine = GenerationEngine(server, max_seq=args.prompt_len + args.gen_steps + 8)
         if args.concurrency > 0:
-            _serve_traffic(engine, args, cfg)
+            failed = _serve_traffic(engine, args, cfg)
         else:
             prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
             out, stats_r = engine.generate(prompts, args.gen_steps)
@@ -127,11 +173,25 @@ def main(argv=None) -> int:
             print(f"[serve] prefetch hit rate {ts.prefetch_hit_rate:.2f}; "
                   f"evictions {ts.evictions}; refaults {ts.refaults}; "
                   f"stall p99 {ts.stall_percentile(99)*1e3:.2f}ms")
-    return 0
+            if server.prefetcher is not None and server.prefetcher.predictor is not None:
+                ps = server.prefetcher.stats
+                print(f"[serve] predictor: observed {ps.observed} keys, "
+                      f"predicted {ps.predicted} ahead-of-schedule loads")
+        if args.profile_out and server.tiered is not None and server.tiered.trace is not None:
+            server.tiered.trace.save(args.profile_out)
+            t = server.tiered.trace
+            print(f"[serve] wrote access trace to {args.profile_out} "
+                  f"({t.batches} batches, {len(t.faults)} faulted units, "
+                  f"{len(t.transitions)} transition sources)")
+    if failed:
+        print(f"[serve] FAILED: {failed} request(s) failed or never finished")
+    return 1 if failed else 0
 
 
-def _serve_traffic(engine: GenerationEngine, args, cfg) -> None:
-    """Open-loop traffic through the continuous-batching scheduler."""
+def _serve_traffic(engine: GenerationEngine, args, cfg) -> int:
+    """Open-loop traffic through the continuous-batching scheduler.
+    Returns the number of failed/unfinished requests so the launcher can
+    exit nonzero (CI smoke must catch silent request failures)."""
     sched = ContinuousBatchingScheduler(engine, max_batch=args.concurrency)
     sched.warm_compile()  # first step should serve, not compile
     rng = np.random.default_rng(0)
@@ -177,6 +237,7 @@ def _serve_traffic(engine: GenerationEngine, args, cfg) -> None:
     for r in reqs:
         if r.error:
             print(f"[serve] request {r.rid} failed: {r.error}")
+    return sum(1 for r in reqs if r.error is not None or not r.done)
 
 
 if __name__ == "__main__":

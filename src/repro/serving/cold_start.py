@@ -39,9 +39,9 @@ import numpy as np
 
 from repro.checkpoint import tensorstore_lite as tsl
 from repro.core.analyzer import AnalysisResult
-from repro.core.on_demand import TieredParams
+from repro.core.on_demand import AccessTrace, TieredParams
 from repro.core.optional_store import OptionalStore
-from repro.core.prefetch import Prefetcher
+from repro.core.prefetch import Prefetcher, TransitionPredictor
 from repro.models.zoo import Model
 from repro.utils.tree import flatten_with_paths, tree_from_flat
 
@@ -166,8 +166,17 @@ def cold_start(
     device_budget_bytes: Optional[int] = None,  # overrides the preset budget
     prefetch: Optional[bool] = None,  # overrides the preset prefetch default
     prefetch_batch_units: int = 8,
+    trace: bool = False,  # attach an AccessTrace for profiling (DESIGN.md §11)
+    predictor: Optional[TransitionPredictor] = None,  # profile-trained prefetch
 ) -> ColdStartServer:
-    """Run one timed cold start. ``result`` is required for after2."""
+    """Run one timed cold start. ``result`` is required for after2.
+
+    ``trace=True`` attaches an ``AccessTrace`` to the tiered params so the
+    serving run records per-unit demand telemetry (saved by the launcher's
+    ``--profile-out``); ``predictor`` arms the prefetcher with a learned
+    unit→next-unit table from a prior profiling run (``--retier-from``).
+    Both are after2-only and ignored for the monolithic baselines.
+    """
     put = put or (lambda host: jax.device_put(host))
     if residency is not None and residency not in RESIDENCY_PRESETS:
         raise ValueError(f"unknown residency policy {residency!r}; want one of {sorted(RESIDENCY_PRESETS)}")
@@ -224,13 +233,19 @@ def cold_start(
             if want_prefetch is None:
                 want_prefetch = preset_prefetch
         tiered = TieredParams(tree, plan, store, device_budget_bytes=budget)
+        if trace:
+            tiered.start_trace(AccessTrace())
         # preload the hot set (the paper's offline-profiled module-init list)
         hot = [k for d in plan.decisions.values() for k in d.resident_units]
         moved = tiered.ensure(hot, source="preload") if hot else 0
         t2 = time.perf_counter()
         report.read_s, report.upload_s = t1 - t0, t2 - t1
         report.bytes_uploaded = report.bytes_read + moved
-        prefetcher = Prefetcher(tiered, batch_units=prefetch_batch_units) if want_prefetch else None
+        prefetcher = (
+            Prefetcher(tiered, batch_units=prefetch_batch_units, predictor=predictor)
+            if want_prefetch
+            else None
+        )
         server = ColdStartServer(model, tree, report, tiered=tiered, store=store,
                                  prefetcher=prefetcher)
     else:

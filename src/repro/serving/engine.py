@@ -106,7 +106,9 @@ class GenerationEngine:
         return idx
 
     def _expert_keys_from_usage(self, usage: dict[str, np.ndarray]) -> list[str]:
-        tiered = self.server.tiered
+        """Every expert unit the step's router selected — resident ones
+        included (the caller separates misses; demand-touching residents
+        keeps the §11 access trace honest about what the step used)."""
         keys: list[str] = []
         for upath, mask in usage.items():
             for table in self._expert_units_index.get(upath, ()):
@@ -116,18 +118,27 @@ class GenerationEngine:
                 else:  # unscanned: (E,)
                     for e in np.nonzero(mask)[0]:
                         keys.append(f"{table}#e{e}")
-        return [k for k in keys if not tiered.is_resident(k)]
+        return keys
 
     # -- vocab pre-fault -------------------------------------------------------
-    def _prefault_rows(self, tokens: np.ndarray, stats: RequestStats, pins: list) -> None:
+    def row_keys_for(self, tokens: np.ndarray) -> list[str]:
+        """Embed row-group unit keys the given token ids live in ([] when
+        the embed table is not row-tiered). Used for the exact pre-fault
+        and, by the scheduler, to tell the predictive prefetcher which
+        units a step actually accessed (DESIGN.md §11.3)."""
+        if not self._row_group:
+            return []
+        return [f"embed#rg{g}" for g in np.unique(np.asarray(tokens) // self._row_group)]
+
+    def _prefault_rows(self, tokens: np.ndarray, stats: RequestStats, pins: list) -> list[str]:
         """Ensure (and pin) the row-groups this step will embed. Keys are
         appended to ``pins`` *before* the ensure so the caller's finally
-        block releases them even if the load raises mid-batch."""
+        block releases them even if the load raises mid-batch. Returns the
+        accessed keys."""
         tiered = self.server.tiered
         if tiered is None or not self._row_group:
-            return
-        group = self._row_group
-        needed = [f"embed#rg{g}" for g in np.unique(np.asarray(tokens) // group)]
+            return []
+        needed = self.row_keys_for(tokens)
         n_cold = sum(1 for k in needed if not tiered.is_resident(k))
         pins.extend(needed)
         t0 = time.perf_counter()
@@ -135,24 +146,33 @@ class GenerationEngine:
         stats.fault_s += time.perf_counter() - t0
         stats.faulted_bytes += moved
         stats.faulted_units += n_cold  # incl. waits on in-flight prefetch
+        return needed
 
-    def _fault_experts(self, caches: Any, stats: RequestStats, pins: list) -> list[str]:
-        """Fault (and pin) any experts the last step routed to. Returns the
-        newly faulted keys ([] = the step ran fully warm, no retry needed);
+    def _fault_experts(
+        self, caches: Any, stats: RequestStats, pins: list
+    ) -> tuple[list[str], list[str]]:
+        """Ensure (and pin) every expert the last step routed to — resident
+        experts included: their demand touches keep the access trace honest
+        (an unprofiled preloaded expert would look demotable, DESIGN.md
+        §11.1) and their pins block mid-step eviction. Returns
+        ``(newly_faulted, used)``: retry is needed only while the first is
+        nonempty, while hints/predictor observations want the second (a
+        warm expert is still the strongest predictor of the next step);
         pins are registered before the load, as in ``_prefault_rows``."""
         tiered = self.server.tiered
         if tiered is None:
-            return []
-        miss = self._expert_keys_from_usage(_usage_masks(caches))
-        if not miss:
-            return []
-        pins.extend(miss)
+            return [], []
+        used = self._expert_keys_from_usage(_usage_masks(caches))
+        if not used:
+            return [], []
+        miss = [k for k in used if not tiered.is_resident(k)]
+        pins.extend(used)
         t0 = time.perf_counter()
-        moved = tiered.ensure(miss, pin=True)
+        moved = tiered.ensure(used, pin=True)
         stats.fault_s += time.perf_counter() - t0
         stats.faulted_bytes += moved
         stats.faulted_units += len(miss)
-        return miss
+        return miss, used
 
     # -- hint emission (DESIGN.md §8.2) ----------------------------------------
     def topk_row_hints(self, logits) -> list[str]:
@@ -167,12 +187,20 @@ class GenerationEngine:
         top = np.argpartition(-flat, k - 1, axis=-1)[:, :k]
         return [f"embed#rg{g}" for g in np.unique(top // self._row_group)]
 
-    def _hint_next_step(self, logits, expert_keys: list[str], stats: RequestStats) -> None:
+    def _hint_next_step(
+        self, logits, expert_keys: list[str], stats: RequestStats,
+        accessed: list[str] = (),
+    ) -> None:
         """Predictively warm the units the *next* step will likely touch:
-        row-groups of the top-k candidate tokens, plus this step's routed
-        experts (the strongest predictor of next-step routing)."""
+        the learned successors of what this step actually accessed (via
+        ``Prefetcher.observe`` when a profile-trained predictor is
+        attached — DESIGN.md §11.3), then row-groups of the top-k candidate
+        tokens, plus this step's routed experts (the strongest predictor of
+        next-step routing)."""
         if self.prefetcher is None:
             return
+        if accessed:
+            stats.hinted_units += self.prefetcher.observe(accessed)
         hints: list[str] = list(expert_keys) + self.topk_row_hints(logits)
         if hints:
             stats.hinted_units += self.prefetcher.hint(hints)
@@ -183,26 +211,30 @@ class GenerationEngine:
         pre-fault, expert retry to fixed point, with the step's units pinned
         until its outputs are materialized. Returns
         ``(logits, caches, expert_keys)`` — caches usage-stripped, ready for
-        grafting; ``expert_keys`` are the experts this step faulted (the
-        scheduler merges them into its cross-slot hint stream when ``hint``
-        is off)."""
+        grafting; ``expert_keys`` are the experts this step routed to,
+        resident ones included (the scheduler merges them into its
+        cross-slot hint/observe stream when ``hint`` is off)."""
         server = self.server
         tiered = server.tiered
         B, S = tokens.shape
         prefill = server.compiled_prefill(B, S)
         step_pins: list[str] = []
         expert_keys: list[str] = []
+        accessed: list[str] = []
+        if tiered is not None:
+            tiered.set_phase("prefill")
         try:
-            self._prefault_rows(np.asarray(tokens), stats, step_pins)
+            accessed += self._prefault_rows(np.asarray(tokens), stats, step_pins)
             fault0 = stats.fault_s
             t0 = time.perf_counter()
             batch = {"tokens": tokens}
             logits, caches = prefill(server.live_params(), batch)
             for _ in range(MAX_FAULT_RETRIES):
-                newly = self._fault_experts(caches, stats, step_pins)
+                newly, used = self._fault_experts(caches, stats, step_pins)
+                seen = set(expert_keys)
+                expert_keys.extend(k for k in used if k not in seen)
                 if not newly:
                     break
-                expert_keys.extend(newly)
                 stats.prefill_retries += 1
                 logits, caches = prefill(server.live_params(), batch)
             jax.block_until_ready(logits)
@@ -212,7 +244,8 @@ class GenerationEngine:
                 tiered.release(step_pins)
         # hint after release: evicted/still-cold predictions are loadable now
         if hint:
-            self._hint_next_step(logits, expert_keys, stats)
+            self._hint_next_step(logits, expert_keys, stats,
+                                 accessed=accessed + expert_keys)
         return logits, _strip_usage(caches), expert_keys
 
     def decode_once(
@@ -236,16 +269,20 @@ class GenerationEngine:
             prefault_tokens = np.asarray(dbatch["tokens"])
         step_pins: list[str] = []
         expert_keys: list[str] = []
+        accessed: list[str] = []
+        if tiered is not None:
+            tiered.set_phase("decode")
         try:
-            self._prefault_rows(np.asarray(prefault_tokens), stats, step_pins)
+            accessed += self._prefault_rows(np.asarray(prefault_tokens), stats, step_pins)
             fault0 = stats.fault_s
             t0 = time.perf_counter()
             logits, new_caches = decode_fn(server.live_params(), caches, dbatch)
             for _ in range(MAX_FAULT_RETRIES):
-                newly = self._fault_experts(new_caches, stats, step_pins)
+                newly, used = self._fault_experts(new_caches, stats, step_pins)
+                seen = set(expert_keys)
+                expert_keys.extend(k for k in used if k not in seen)
                 if not newly:
                     break
-                expert_keys.extend(newly)
                 stats.decode_retries += 1
                 logits, new_caches = decode_fn(server.live_params(), caches, dbatch)
             jax.block_until_ready(logits)
@@ -254,7 +291,8 @@ class GenerationEngine:
             if tiered is not None and step_pins:
                 tiered.release(step_pins)
         if hint:
-            self._hint_next_step(logits, expert_keys, stats)
+            self._hint_next_step(logits, expert_keys, stats,
+                                 accessed=accessed + expert_keys)
         return logits, _strip_usage(new_caches), expert_keys
 
     # -- request path -----------------------------------------------------------

@@ -236,6 +236,7 @@ class ContinuousBatchingScheduler:
 
         admitted = 0
         hints: list[list[str]] = []
+        observed: list[str] = []
         # group same-length prompts (everything picked is admitted this
         # round, so grouping cannot reorder anyone past anyone else)
         groups: dict[int, list[tuple[int, Request]]] = {}
@@ -284,7 +285,10 @@ class ContinuousBatchingScheduler:
                     self._retire(slot)
             if expert_keys:
                 hints.append(list(expert_keys))
-        self._emit_hints(hints)
+            observed += self.engine.row_keys_for(
+                np.concatenate([r.tokens for r in reqs])
+            ) + list(expert_keys)
+        self._emit_hints(hints, observed=observed)
         return admitted
 
     def _retire(self, slot: int) -> None:
@@ -296,10 +300,17 @@ class ContinuousBatchingScheduler:
         self.stats.completed += 1
         req.finish()
 
-    def _emit_hints(self, per_slot_hints: list[list[str]]) -> None:
+    def _emit_hints(self, per_slot_hints: list[list[str]],
+                    observed: list[str] = ()) -> None:
+        """Feed the prefetcher: first the units this step *actually*
+        accessed (``observe`` expands them through the profile-trained
+        predictor into ahead-of-schedule hints — DESIGN.md §11.3), then
+        the round-robin-merged per-slot next-step hints."""
         pf = self.engine.prefetcher
         if pf is None:
             return
+        if observed:
+            pf.observe(observed)
         merged = merge_hints(*per_slot_hints)
         if merged:
             pf.hint(merged)
@@ -350,6 +361,11 @@ class ContinuousBatchingScheduler:
         self.stats.decode_retries += step_stats.decode_retries
         self.stats.steps += 1
 
+        # units this step demand-accessed: the active slots' embed
+        # row-groups plus every routed expert (resident ones included —
+        # post-retier they key most of the transition table)
+        observed = self.engine.row_keys_for(self._last_tok[active]) + list(expert_keys)
+
         lg = np.asarray(logits)
         hints: list[list[str]] = []
         for i in active:
@@ -365,7 +381,7 @@ class ContinuousBatchingScheduler:
                 hints.append(self.engine.topk_row_hints(lg[i]))
         if expert_keys:
             hints.append(list(expert_keys))
-        self._emit_hints(hints)
+        self._emit_hints(hints, observed=observed)
         return True
 
     def run(self, *, max_steps: Optional[int] = None) -> None:

@@ -1,0 +1,379 @@
+"""Profile-guided re-tiering subsystem (DESIGN.md §11).
+
+Covers the acceptance contract of the telemetry → replan → rewrite loop:
+  * the access trace records faults/touches/phases/pairs/transitions and
+    round-trips through JSON deterministically (record → JSON → replan
+    yields byte-identical plans);
+  * the replanner promotes demand-faulted units into the hot set, demotes
+    never-touched residents, and respects the promotion byte budget;
+  * the tier-0 ⊇ entry-reachable invariant survives adversarial traces —
+    no trace content can demote a reachable tier-0 leaf;
+  * ``retier_artifact`` moves bytes between the tier-0 bundle and the
+    optional store exactly (content verified both directions) and commits
+    via rename;
+  * the ``TransitionPredictor`` ranks successors deterministically and
+    ``Prefetcher.observe`` turns observations into ahead-of-schedule loads.
+"""
+
+import json
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import tensorstore_lite as tsl
+from repro.core import (
+    AccessTrace,
+    DeploymentProfile,
+    OptionalStore,
+    Prefetcher,
+    TieredParams,
+    TransitionPredictor,
+    analyze,
+    build_artifact,
+    check_tier0_superset,
+    replan_from_trace,
+    required_tier0,
+    retier_artifact,
+)
+from repro.core.entrypoints import SERVING_PROFILE
+from repro.core.on_demand import LoadEvent
+from repro.core.optional_store import write_store
+from repro.core.param_graph import ReachabilityReport
+from repro.core.partition import TierDecision, TierPlan, Unit
+
+ROWS, COLS, N_UNITS = 16, 32, 8
+UNIT_BYTES = ROWS * COLS * 4
+
+
+def _mini(tmp_path, budget=None, name="mini", resident=()):
+    """A one-leaf tiered param tree with N_UNITS row-group units backed by
+    a real optional store (the loader state machine without a model)."""
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((N_UNITS * ROWS, COLS)).astype(np.float32)
+    units = tuple(
+        Unit(f"emb#rg{g}", "emb", rows=(g * ROWS, (g + 1) * ROWS), nbytes=UNIT_BYTES)
+        for g in range(N_UNITS)
+    )
+    dec = TierDecision("emb", 1, "rows", "test", data.nbytes, units=units,
+                       resident_units=tuple(resident))
+    plan = TierPlan({"emb": dec}, SERVING_PROFILE, [])
+    path = str(tmp_path / f"{name}.blob")
+    write_store(path, [(u.key, data[u.rows[0]: u.rows[1]]) for u in units])
+    tp = TieredParams(
+        {"emb": jnp.zeros(data.shape, jnp.float32)}, plan, OptionalStore(path),
+        device_budget_bytes=budget,
+    )
+    return tp, data, units, plan
+
+
+def _reach(paths_reaching: dict) -> ReachabilityReport:
+    return ReachabilityReport(
+        entry_names=["prefill", "decode_step"],
+        reachable={p: set(s) for p, s in paths_reaching.items()},
+    )
+
+
+# ---------------------------------------------------------------------------
+# trace recording + serialization
+# ---------------------------------------------------------------------------
+
+def test_trace_records_faults_touches_phases(tmp_path):
+    tp, _, units, _ = _mini(tmp_path)
+    trace = tp.start_trace()
+    k = [u.key for u in units]
+
+    tp.set_phase("prefill")
+    tp.ensure([k[0], k[1]])          # both cold
+    tp.set_phase("decode")
+    tp.ensure([k[1], k[2]])          # k1 warm touch, k2 cold
+
+    assert trace.batches == 2
+    assert trace.faults == {k[0]: 1, k[1]: 1, k[2]: 1}
+    assert trace.touches == {k[0]: 1, k[1]: 2, k[2]: 1}
+    assert trace.phases[k[0]] == {"prefill": 1}
+    assert trace.phases[k[2]] == {"decode": 1}
+    # co-access pairs within each batch, transitions across batches
+    assert trace.pairs == {(k[0], k[1]): 1, (k[1], k[2]): 1}
+    assert trace.transitions[k[0]] == {k[1]: 1, k[2]: 1}
+    # preload/prefetch sources never pollute the demand trace
+    tp.ensure([k[3]], source="preload")
+    assert k[3] not in trace.faults
+    # phase tags ride the load events too
+    phases = {e.key: e.phase for e in tp.stats.events if e.source == "fault"}
+    assert phases[k[0]] == "prefill" and phases[k[2]] == "decode"
+
+
+def test_trace_assoc_batch_cap(tmp_path):
+    trace = AccessTrace(max_assoc_batch=2)
+    trace.record(["a", "b", "c"], ["a"], "prefill")  # over cap: no pairs
+    trace.record(["d"], ["d"], "decode")
+    assert trace.pairs == {}
+    assert trace.transitions == {}  # prior batch was over-cap, link dropped
+    assert trace.faults == {"a": 1, "d": 1}  # counts still exact
+
+
+def test_trace_json_roundtrip_deterministic(tmp_path):
+    tp, _, units, _ = _mini(tmp_path)
+    trace = tp.start_trace()
+    rng = np.random.default_rng(7)
+    keys = [u.key for u in units]
+    for i in range(12):
+        pick = list(rng.choice(keys, size=rng.integers(1, 4), replace=False))
+        tp.set_phase("prefill" if i % 3 == 0 else "decode")
+        tp.ensure(pick)
+
+    s1 = trace.to_json()
+    rt = AccessTrace.from_json(s1)
+    assert rt.to_json() == s1
+    # save/load is the same document
+    p = str(tmp_path / "trace.json")
+    trace.save(p)
+    assert AccessTrace.load(p).to_json() == s1
+    with open(p) as f:
+        assert json.load(f)["version"] == AccessTrace.VERSION
+
+
+# ---------------------------------------------------------------------------
+# replanner: promotion, demotion, determinism
+# ---------------------------------------------------------------------------
+
+def test_replan_promotes_faulted_demotes_untouched(tmp_path):
+    tp, _, units, plan = _mini(tmp_path)
+    # hand-build residents: rg0 and rg1 preloaded
+    keys = [u.key for u in units]
+    plan.decisions["emb"] = TierDecision(
+        "emb", 1, "rows", "test", plan.decisions["emb"].nbytes,
+        units=units, resident_units=(keys[0], keys[1]),
+    )
+    trace = AccessTrace()
+    trace.record([keys[0], keys[4]], [keys[4]], "prefill")  # rg0 touched, rg4 faults
+    trace.record([keys[5]], [keys[5]], "decode")            # rg5 faults
+    reach = _reach({"emb": {"prefill"}})
+
+    new_plan, rep = replan_from_trace(plan, trace, reach)
+    res = new_plan.decisions["emb"].resident_units
+    assert keys[0] in res          # touched resident kept
+    assert keys[1] not in res      # never touched: demoted from the hot set
+    assert keys[4] in res and keys[5] in res  # faulted: promoted
+    assert rep.demoted_resident == [keys[1]]
+    assert set(rep.promoted_resident) == {keys[4], keys[5]}
+    # tier-1 units themselves are untouched (only hot-set membership moved)
+    assert new_plan.decisions["emb"].units == units
+
+    # empty trace: demotion disabled (a misconfigured profile run must not
+    # wipe the offline-stats hot set)
+    new_plan2, _ = replan_from_trace(plan, AccessTrace(), reach)
+    assert new_plan2.decisions["emb"].resident_units == (keys[0], keys[1])
+
+
+def test_replan_promotion_budget_hottest_first(tmp_path):
+    tp, _, units, plan = _mini(tmp_path)
+    keys = [u.key for u in units]
+    trace = AccessTrace()
+    for _ in range(3):
+        trace.record([keys[2]], [keys[2]], "decode")  # hottest
+    trace.record([keys[5]], [keys[5]], "decode")
+    trace.record([keys[6]], [keys[6]], "decode")
+    reach = _reach({"emb": {"prefill"}})
+
+    new_plan, rep = replan_from_trace(
+        plan, trace, reach, max_promote_bytes=UNIT_BYTES
+    )
+    assert new_plan.decisions["emb"].resident_units == (keys[2],)
+    assert rep.budget_skipped == 2
+    assert rep.promoted_bytes == UNIT_BYTES
+
+
+def test_replan_deterministic_record_json_replan(tmp_path):
+    tp, _, units, plan = _mini(tmp_path)
+    trace = tp.start_trace()
+    rng = np.random.default_rng(23)
+    keys = [u.key for u in units]
+    for _ in range(10):
+        tp.ensure(list(rng.choice(keys, size=rng.integers(1, 4), replace=False)))
+    reach = _reach({"emb": {"prefill"}})
+
+    p1, _ = replan_from_trace(plan, trace, reach)
+    p2, _ = replan_from_trace(plan, trace, reach)
+    p3, _ = replan_from_trace(plan, AccessTrace.from_json(trace.to_json()), reach)
+    assert p1.decisions == p2.decisions == p3.decisions
+
+
+# ---------------------------------------------------------------------------
+# the tier-0 ⊇ entry-reachable invariant, adversarially
+# ---------------------------------------------------------------------------
+
+def test_tier0_superset_invariant_adversarial_traces():
+    cfg_arch = "yi-34b"
+    from repro.configs import get_reduced
+    from repro.models.zoo import build_model
+
+    model = build_model(get_reduced(cfg_arch))
+    profile = DeploymentProfile(hot_vocab_fraction=0.1, min_tier1_bytes=1024,
+                                vocab_row_group=32)
+    result = analyze(model, profile, trace_B=1, trace_S=8)
+    plan, reach = result.plan, result.reach
+    required = required_tier0(plan, reach)
+    assert required  # a real serving plan pins real leaves
+
+    all_keys = [u.key for u in plan.all_tier1_units()]
+    tier0_paths = [p for p, d in plan.decisions.items() if d.tier == 0]
+    rng = np.random.default_rng(3)
+
+    adversarial = []
+    # 1. empty trace
+    adversarial.append(AccessTrace())
+    # 2. fabricated keys with huge counts
+    t = AccessTrace()
+    t.record([f"ghost#{i}" for i in range(5)], [f"ghost#{i}" for i in range(5)], "x")
+    t.faults = {k: 10**9 for k in t.faults}
+    adversarial.append(t)
+    # 3. a trace claiming tier-0 leaves faulted (impossible in reality, but
+    #    the replanner must not act on it)
+    t = AccessTrace()
+    t.record(tier0_paths[:8], tier0_paths[:8], "decode")
+    adversarial.append(t)
+    # 4. random junk over real unit keys
+    for seed in range(3):
+        t = AccessTrace()
+        r = np.random.default_rng(seed)
+        for _ in range(20):
+            pick = list(r.choice(all_keys, size=r.integers(1, 5), replace=False))
+            t.record(pick, pick, r.choice(["prefill", "decode", ""]))
+        adversarial.append(t)
+
+    for trace in adversarial:
+        new_plan, _ = replan_from_trace(plan, trace, reach)
+        check_tier0_superset(new_plan, required)  # and replan self-checked
+        for p in required:
+            assert new_plan.decisions[p].tier == 0
+
+    # the checker itself trips on a hand-broken plan
+    broken = dict(plan.decisions)
+    victim = sorted(required)[0]
+    d = broken[victim]
+    broken[victim] = TierDecision(victim, 1, "leaf", "broken", d.nbytes,
+                                  units=(Unit(victim, victim, nbytes=d.nbytes),))
+    with pytest.raises(ValueError, match="invariant"):
+        check_tier0_superset(TierPlan(broken, plan.profile, plan.entry_names), required)
+
+
+# ---------------------------------------------------------------------------
+# artifact rewrite: bytes move exactly, commit is atomic-by-rename
+# ---------------------------------------------------------------------------
+
+def test_retier_artifact_moves_bytes_exactly(tmp_path):
+    rng = np.random.default_rng(1)
+    params = {
+        "a": rng.standard_normal((8, 8)).astype(np.float32),      # tier-0 dense
+        "emb": rng.standard_normal((64, 4)).astype(np.float32),   # tier-1 rows
+        "mod": rng.standard_normal((16, 4)).astype(np.float32),   # tier-1 leaf
+    }
+    row_units = tuple(
+        Unit(f"emb#rg{g}", "emb", rows=(g * 16, (g + 1) * 16), nbytes=16 * 4 * 4)
+        for g in range(4)
+    )
+    decisions = {
+        "a": TierDecision("a", 0, "leaf", "dense", params["a"].nbytes),
+        "emb": TierDecision("emb", 1, "rows", "rows", params["emb"].nbytes,
+                            units=row_units, resident_units=(row_units[0].key,)),
+        "mod": TierDecision("mod", 1, "leaf", "modal", params["mod"].nbytes,
+                            units=(Unit("mod", "mod", nbytes=params["mod"].nbytes),)),
+    }
+    plan = TierPlan(decisions, SERVING_PROFILE, ["prefill"])
+    reach = _reach({"a": {"prefill"}, "emb": {"prefill"}, "mod": set()})
+    result = types.SimpleNamespace(plan=plan, reach=reach, profile=SERVING_PROFILE)
+
+    outdir = str(tmp_path / "artifact")
+    build_artifact(params, result, outdir)
+
+    # profile: "mod" and two row groups fault; the preloaded rg0 never touched
+    trace = AccessTrace()
+    trace.record(["mod", "emb#rg2"], ["mod", "emb#rg2"], "prefill")
+    trace.record(["emb#rg3"], ["emb#rg3"], "decode")
+
+    new_plan, rep = replan_from_trace(plan, trace, reach)
+    assert "mod" in rep.promoted_leaves
+    assert new_plan.decisions["mod"].tier == 0
+    assert new_plan.decisions["emb"].resident_units == ("emb#rg2", "emb#rg3")
+
+    retier_dir = str(tmp_path / "artifact-retier")
+    meta = retier_artifact(outdir, new_plan, out_dir=retier_dir, report=rep)
+
+    # promoted leaf's bytes moved into the eager bundle, content-exact
+    tier0 = tsl.read_bundle(os.path.join(retier_dir, "tier0"), mmap=False)
+    np.testing.assert_array_equal(tier0["mod"], params["mod"])
+    np.testing.assert_array_equal(tier0["a"], params["a"])
+    # the store now holds exactly the remaining tier-1 units, content-exact
+    store = OptionalStore(os.path.join(retier_dir, "optional.blob"))
+    assert sorted(store.keys()) == [u.key for u in row_units]
+    for u in row_units:
+        np.testing.assert_array_equal(
+            store.fetch(u.key), params["emb"][u.rows[0]: u.rows[1]]
+        )
+    store.close()
+    # artifact.json records the new decisions + the retier stamp
+    with open(os.path.join(retier_dir, "artifact.json")) as f:
+        art = json.load(f)
+    assert art["decisions"]["mod"]["tier"] == 0
+    assert art["retier"]["promoted_leaves"] == 1
+    assert meta["decisions"]["emb"]["resident_units"] == ["emb#rg2", "emb#rg3"]
+    # no partial directory left behind
+    assert not os.path.exists(retier_dir + ".partial")
+
+    # in-place rewrite is refused (reads the files it would replace)
+    with pytest.raises(ValueError, match="out_dir"):
+        retier_artifact(outdir, new_plan, out_dir=outdir)
+
+
+# ---------------------------------------------------------------------------
+# predictor + observe: ahead-of-schedule loads
+# ---------------------------------------------------------------------------
+
+def test_predictor_ranks_successors_deterministically():
+    transitions = {
+        "a": {"b": 3, "c": 3, "d": 1},
+        "x": {"y": 2},
+    }
+    pred = TransitionPredictor(transitions, top_k=2)
+    assert pred.successors("a") == ["b", "c"]  # count desc, key asc on ties
+    assert pred.successors("missing") == []
+    follow = pred.follow(["a", "x"])
+    assert set(follow) == {"b", "c", "y"}
+    assert "a" not in follow and "x" not in follow  # observed never predicted
+
+
+def test_observe_prefetches_learned_successors(tmp_path):
+    tp, data, units, _ = _mini(tmp_path)
+    keys = [u.key for u in units]
+    pred = TransitionPredictor({keys[0]: {keys[4]: 2, keys[5]: 1}})
+    pf = Prefetcher(tp, batch_units=4, predictor=pred)
+    try:
+        accepted = pf.observe([keys[0]])
+        assert accepted == 2
+        assert pf.drain(10.0)
+    finally:
+        pf.stop()
+    assert tp.is_resident(keys[4]) and tp.is_resident(keys[5])
+    assert pf.stats.predicted == 2
+    assert pf.stats.observed == 1
+    lo, hi = units[4].rows
+    np.testing.assert_array_equal(np.asarray(tp.leaf("emb"))[lo:hi], data[lo:hi])
+    # a demand touch of the predicted unit is a prefetch hit — fully hidden
+    assert tp.ensure([keys[4]]) == 0
+    assert tp.stats.prefetch_hits == 1
+
+
+def test_observe_without_predictor_is_noop(tmp_path):
+    tp, _, units, _ = _mini(tmp_path)
+    pf = Prefetcher(tp, batch_units=4)
+    try:
+        assert pf.observe([units[0].key]) == 0
+        assert pf.stats.observed == 0
+    finally:
+        pf.stop()
+    assert not tp.is_resident(units[0].key)
