@@ -1,0 +1,192 @@
+"""RQ8 (beyond-paper, DESIGN.md §12): does ONLINE re-tiering — the
+restart-free daemon — reduce request-path fault bytes and miss-stall time
+after a mid-run workload shift, without changing a single output token?
+
+RQ7 answers the profile→re-tier question with a restart between the
+profiling pass and the re-tiered pass; that restart is itself the
+cold-start event the paper fights. Here the workload shifts *inside one
+serving run* and the only adaptation allowed is the ``RetierDaemon``
+ticking between steps.
+
+Workload: two prompt populations drawn from disjoint vocab halves (A =
+low rows, B = high rows — disjoint embed row-group working sets), served
+as alternating phases **A₁ B₁ A₂ B₂** over one server under the ``stats``
+residency budget (50% of tier-1 — the eviction-pressure regime where the
+shifted-away phase's units get evicted and refault on return). Two
+passes over the SAME request sequence, each a single cold start:
+
+  * **static** — prefetch ON (engine hints only), no daemon: every
+    refault after a shift lands on the request path;
+  * **online** — same, plus the daemon (trace → decayed merge → replan →
+    apply) ticking every few steps: returning-phase units ride the
+    prefetch queue as hot-set preloads and the predictor is retrained
+    in-run from the merged trace's transitions.
+
+The **post-shift** window (the second A B cycle, after the daemon has
+seen both populations once) is where adaptation can pay: request-path
+fault bytes and miss-stall seconds are compared there. Greedy outputs
+are asserted identical across passes before any number is reported, and
+the fault-byte reduction is asserted, not just printed — all with ZERO
+restarts (one ``cold_start`` per pass; the online pass adapts in place).
+
+Fault bytes is the scale-free headline (≈30% lower post-shift on the
+reduced mixtral); miss-stall *wall seconds* are reported but not
+asserted — on the CPU-only miniature the background reader/uploader
+contend with the request thread for the same cores, so a demand touch
+that overlaps an in-flight preload can wait longer than a cold read
+even though its bytes left the request path (see LoaderStats.stalls).
+
+Standalone: ``python -m benchmarks.bench_rq8_online [--smoke] [--json-out F]``
+(wired into benchmarks/run.py as the ``rq8`` section and the CI smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, setup_app, timed_cold_start
+from repro.serving import GenerationEngine
+
+
+def _phase_prompts(app, *, n_per_phase: int, prompt_len: int):
+    """Phase-A and phase-B prompt sets from disjoint vocab halves (their
+    embed row-groups are disjoint → a real working-set shift)."""
+    V = app.cfg.vocab_size
+    a = [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(300 + i),
+                                      (prompt_len,), 0, V // 2))
+        for i in range(n_per_phase)
+    ]
+    b = [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(400 + i),
+                                      (prompt_len,), V // 2, V))
+        for i in range(n_per_phase)
+    ]
+    return a, b
+
+
+def _serve_phases(server, phases, gen_steps: int, max_seq: int):
+    """Serve the phase sequence on one server (no restart anywhere).
+    Returns (all outputs in order, per-phase fault-byte/stall rows)."""
+    eng = GenerationEngine(server, max_seq=max_seq)
+    outs, rows = [], []
+    for prompts in phases:
+        ts = server.tiered.stats
+        fb0, n0 = ts.request_fault_bytes, len(ts.stalls)
+        for p in prompts:
+            out, _ = eng.generate(jnp.asarray(p[None, :]), gen_steps)
+            outs.append(np.asarray(out[0]))
+        rows.append({
+            "fault_bytes": ts.request_fault_bytes - fb0,
+            "stall_s": float(sum(ts.stalls[n0:])),
+        })
+    return outs, rows
+
+
+def run(
+    base_dir: str,
+    arch: str = "mixtral-8x22b",
+    *,
+    prompt_len: int = 8,
+    gen_steps: int = 8,
+    n_per_phase: int = 3,
+    retier_interval: int = 6,
+    retier_decay: float = 0.5,
+) -> dict:
+    app = setup_app(arch, base_dir)
+    max_seq = prompt_len + gen_steps + 2
+    a, b = _phase_prompts(app, n_per_phase=n_per_phase, prompt_len=prompt_len)
+    phases = [a, b, a, b]  # shift, shift back, shift again — mid-run, live
+
+    # -- pass 1: static (prefetch on, no daemon) ------------------------------
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                          residency="stats", prefetch=True) as server:
+        outs_static, rows_static = _serve_phases(server, phases, gen_steps, max_seq)
+
+    # -- pass 2: online (same + RetierDaemon ticking between steps) -----------
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                          residency="stats", prefetch=True,
+                          retier_online=True, retier_interval=retier_interval,
+                          retier_decay=retier_decay) as server:
+        outs_online, rows_online = _serve_phases(server, phases, gen_steps, max_seq)
+        daemon = server.retier_daemon.stats.to_dict()
+
+    # correctness gate: live adaptation may only move bytes, never tokens
+    for got, ref in zip(outs_online, outs_static):
+        np.testing.assert_array_equal(got, ref)
+
+    # post-shift = the second A B cycle: the daemon has now profiled both
+    # populations, so returning-phase units preload instead of refaulting
+    post_static = sum(r["fault_bytes"] for r in rows_static[2:])
+    post_online = sum(r["fault_bytes"] for r in rows_online[2:])
+    stall_static = sum(r["stall_s"] for r in rows_static[2:])
+    stall_online = sum(r["stall_s"] for r in rows_online[2:])
+    assert daemon["applies"] > 0, "daemon never applied a plan"
+    assert post_online < post_static, (
+        f"online re-tiering did not reduce post-shift request-path fault "
+        f"bytes: {post_static} -> {post_online}"
+    )
+
+    return {
+        "arch": arch,
+        "n_requests": len(phases) * n_per_phase,
+        "gen_steps": gen_steps,
+        "fault_bytes_post_shift_static": post_static,
+        "fault_bytes_post_shift_online": post_online,
+        "fault_bytes_reduction": 1.0 - post_online / max(1, post_static),
+        "stall_s_post_shift_static": stall_static,
+        "stall_s_post_shift_online": stall_online,
+        "phase_fault_bytes_static": [r["fault_bytes"] for r in rows_static],
+        "phase_fault_bytes_online": [r["fault_bytes"] for r in rows_online],
+        "daemon": daemon,
+        "restarts": 0,
+        "outputs_identical": True,
+    }
+
+
+def main(base_dir: str, *, smoke: bool = False, archs=None) -> list[str]:
+    archs = archs or (("mixtral-8x22b",) if smoke else ("mixtral-8x22b", "yi-34b"))
+    kw = dict(gen_steps=6, n_per_phase=2) if smoke else {}
+    rows = []
+    for arch in archs:
+        r = run(base_dir, arch, **kw)
+        d = r["daemon"]
+        rows.append(csv_row(
+            f"rq8_online/{r['arch']}",
+            0.0,
+            f"post_shift_fault_bytes {r['fault_bytes_post_shift_static']}->"
+            f"{r['fault_bytes_post_shift_online']} "
+            f"(-{r['fault_bytes_reduction'] * 100:.0f}%)"
+            f"|stall_s {r['stall_s_post_shift_static']:.3f}->"
+            f"{r['stall_s_post_shift_online']:.3f}"
+            f"|ticks={d['ticks']} applies={d['applies']} "
+            f"promoted={d['promoted_units']} demoted={d['demoted_units']}"
+            f"|restarts=0|outputs=identical",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one arch, 2 prompts x 6 steps per phase")
+    ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
+    ap.add_argument("--json-out", default="",
+                    help="also write the CSV rows as a JSON list here")
+    args = ap.parse_args()
+    scratch = args.out or tempfile.mkdtemp(prefix="faaslight_rq8_")
+    print("name,us_per_call,derived")
+    rows = main(scratch, smoke=args.smoke)
+    for row in rows:
+        print(row)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"section": "rq8", "rows": rows}, f, indent=2)
+    sys.exit(0)

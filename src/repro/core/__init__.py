@@ -1,8 +1,8 @@
 """FaaSLight core: Program Analyzer (entry recognition, param-reachability
 call graph, tier partitioning) + Code Generator (optional store, on-demand
 loader, artifact builder) + the profile-guided re-tiering loop (access
-telemetry, trace-driven replanner, predictive prefetch). See DESIGN.md §4
-and §11."""
+telemetry, trace-driven replanner, predictive prefetch) and its online
+form (the restart-free RetierDaemon). See DESIGN.md §4, §11 and §12."""
 
 from repro.core.analyzer import AnalysisResult, analyze, build_artifact, write_monolithic
 from repro.core.entrypoints import (
@@ -32,6 +32,7 @@ from repro.core.retier import (
     required_tier0,
     retier_artifact,
 )
+from repro.core.retier_daemon import RetierDaemon, RetierDaemonStats
 
 __all__ = [
     "AnalysisResult",
@@ -55,6 +56,8 @@ __all__ = [
     "PrefetchStats",
     "TransitionPredictor",
     "RetierReport",
+    "RetierDaemon",
+    "RetierDaemonStats",
     "replan_from_trace",
     "required_tier0",
     "check_tier0_superset",

@@ -87,11 +87,31 @@ class AccessTrace:
     a quadratic blob of meaningless associations). Serialization is
     deterministic: ``to_json`` sorts every key so record → JSON → replan
     is reproducible byte-for-byte (tests/test_retier.py).
+
+    **Request attribution** (DESIGN.md §12.3): in traffic mode one demand
+    batch unions every active slot's accesses, so ``pairs``/``transitions``
+    conflate per-request patterns with cross-request coincidence. The
+    scheduler additionally calls ``record_request(rid, keys)`` with each
+    request's *own* accesses per step; those land in ``request_pairs`` /
+    ``request_transitions`` — the coincidence-free association signal.
+    ``end_request(rid)`` drops the per-request chain state at retirement
+    so a long-lived trace never links across unrelated requests.
+
+    **Lifecycle** (DESIGN.md §12.2): one trace = one observation window.
+    ``merge(newer, decay=d)`` folds windows across cadence ticks (and
+    across replicas): this window's counts are scaled by ``d`` before the
+    newer window's are added, so the hot set tracks shifting workloads
+    (``d=1`` → plain lifetime sum, ``d=0`` → newest window only). Entries
+    decaying below ``prune_below`` are dropped. The schema carries a
+    ``version`` field next to artifact.json's; merging or loading across
+    schema versions raises (v1 documents, which predate the request-
+    attribution fields, still load).
     """
 
-    VERSION = 1
+    VERSION = 2
 
     def __init__(self, *, max_assoc_batch: int = 64):
+        self.version = self.VERSION
         self.max_assoc_batch = max_assoc_batch
         self.batches = 0
         self.touches: dict[str, int] = {}
@@ -99,7 +119,10 @@ class AccessTrace:
         self.phases: dict[str, dict[str, int]] = {}
         self.pairs: dict[tuple, int] = {}           # (a, b) with a < b
         self.transitions: dict[str, dict[str, int]] = {}
+        self.request_pairs: dict[tuple, int] = {}   # same-request co-access
+        self.request_transitions: dict[str, dict[str, int]] = {}
         self._last_batch: list[str] = []
+        self._last_by_request: dict[int, list[str]] = {}
 
     def record(self, keys: Iterable[str], cold: Iterable[str], phase: str = "") -> None:
         """Record one demand batch. ``keys`` is everything the request
@@ -124,18 +147,104 @@ class AccessTrace:
             # _last_batch is [] or an under-cap batch by construction
             cur = set(keys)
             for a in self._last_batch:
+                succ = [b for b in cur if b != a]
+                if not succ:
+                    continue  # never leave an empty successor dict behind
                 nxt = self.transitions.setdefault(a, {})
-                for b in cur:
-                    if b != a:
-                        nxt[b] = nxt.get(b, 0) + 1
+                for b in succ:
+                    nxt[b] = nxt.get(b, 0) + 1
             self._last_batch = keys
         else:
             self._last_batch = []
 
+    # -- request attribution (DESIGN.md §12.3) ---------------------------------
+    def record_request(self, rid: int, keys: Iterable[str]) -> None:
+        """Record the units ONE request accessed this step. Unlike
+        ``record`` (which sees the scheduler's unioned batch), pairs and
+        step→step transitions recorded here are same-request by
+        construction — the replanner/predictor can separate per-request
+        patterns from cross-request coincidence. Caller holds the owning
+        loader's lock."""
+        keys = list(dict.fromkeys(keys))
+        if not keys or len(keys) > self.max_assoc_batch:
+            self._last_by_request.pop(rid, None)
+            return
+        for i, a in enumerate(keys):
+            for b in keys[i + 1:]:
+                pair = (a, b) if a < b else (b, a)
+                self.request_pairs[pair] = self.request_pairs.get(pair, 0) + 1
+        cur = set(keys)
+        for a in self._last_by_request.get(rid, ()):
+            succ = [b for b in cur if b != a]
+            if not succ:
+                continue
+            nxt = self.request_transitions.setdefault(a, {})
+            for b in succ:
+                nxt[b] = nxt.get(b, 0) + 1
+        self._last_by_request[rid] = keys
+
+    def end_request(self, rid: int) -> None:
+        """Retire one request's chain state: its last step never links to
+        whatever unrelated request next reuses the slot."""
+        self._last_by_request.pop(rid, None)
+
+    # -- window merging (DESIGN.md §12.2) ---------------------------------------
+    def merge(self, newer: "AccessTrace", *, decay: float = 1.0,
+              prune_below: float = 0.5) -> "AccessTrace":
+        """Fold a newer observation window onto this one: every count here
+        is scaled by ``decay`` (0 ≤ decay ≤ 1), then the newer window's
+        counts are added; entries below ``prune_below`` after scaling are
+        dropped (a unit nobody touches for a few windows genuinely leaves
+        the profile instead of lingering at 1e-9). Returns a NEW trace;
+        neither input is mutated, and the merged trace carries no
+        in-flight chain state (``_last_batch``/``_last_by_request``).
+        Deterministic: same inputs → byte-identical ``to_json``. Raises on
+        schema-version mismatch."""
+        if not 0.0 <= decay <= 1.0:
+            raise ValueError(f"decay must be in [0, 1], got {decay!r}")
+        if self.version != newer.version:
+            raise ValueError(
+                f"cannot merge AccessTrace schema v{self.version} with v{newer.version}"
+            )
+
+        def norm(v):
+            # canonical numbers: integral floats store as ints, so a
+            # decay=1 merge of int windows round-trips byte-identically
+            return int(v) if isinstance(v, float) and v.is_integer() else v
+
+        def counts(old: dict, new: dict) -> dict:
+            out: dict = {}
+            for k, v in old.items():
+                sv = v if decay == 1 else v * decay
+                if sv >= prune_below:
+                    out[k] = norm(sv)
+            for k, v in new.items():
+                out[k] = norm(out.get(k, 0) + v)
+            return {k: v for k, v in out.items() if v >= prune_below}
+
+        def nested(old: dict, new: dict) -> dict:
+            sub = {k: counts(old.get(k, {}), new.get(k, {}))
+                   for k in set(old) | set(new)}
+            return {k: v for k, v in sub.items() if v}
+
+        merged = AccessTrace(
+            max_assoc_batch=max(self.max_assoc_batch, newer.max_assoc_batch))
+        merged.batches = norm(
+            (self.batches if decay == 1 else self.batches * decay) + newer.batches)
+        merged.touches = counts(self.touches, newer.touches)
+        merged.faults = counts(self.faults, newer.faults)
+        merged.phases = nested(self.phases, newer.phases)
+        merged.pairs = counts(self.pairs, newer.pairs)
+        merged.transitions = nested(self.transitions, newer.transitions)
+        merged.request_pairs = counts(self.request_pairs, newer.request_pairs)
+        merged.request_transitions = nested(
+            self.request_transitions, newer.request_transitions)
+        return merged
+
     # -- serialization (deterministic; the --profile-out format) --------------
     def to_dict(self) -> dict:
         return {
-            "version": self.VERSION,
+            "version": self.version,
             "batches": self.batches,
             "touches": {k: self.touches[k] for k in sorted(self.touches)},
             "faults": {k: self.faults[k] for k in sorted(self.faults)},
@@ -148,6 +257,13 @@ class AccessTrace:
                 k: {n: v[n] for n in sorted(v)}
                 for k, v in sorted(self.transitions.items())
             },
+            "request_pairs": [
+                [a, b, self.request_pairs[(a, b)]] for a, b in sorted(self.request_pairs)
+            ],
+            "request_transitions": {
+                k: {n: v[n] for n in sorted(v)}
+                for k, v in sorted(self.request_transitions.items())
+            },
         }
 
     def to_json(self) -> str:
@@ -157,19 +273,22 @@ class AccessTrace:
 
     @classmethod
     def from_dict(cls, d: dict) -> "AccessTrace":
-        if d.get("version") != cls.VERSION:
+        # v1 documents (pre request-attribution) still load — the new
+        # fields default empty; anything else is a schema we don't know
+        if d.get("version") not in (1, cls.VERSION):
             raise ValueError(f"unsupported AccessTrace version {d.get('version')!r}")
         t = cls()
-        t.batches = int(d.get("batches", 0))
-        t.touches = {k: int(v) for k, v in d.get("touches", {}).items()}
-        t.faults = {k: int(v) for k, v in d.get("faults", {}).items()}
-        t.phases = {
-            k: {p: int(n) for p, n in v.items()} for k, v in d.get("phases", {}).items()
-        }
-        t.pairs = {(a, b): int(n) for a, b, n in d.get("pairs", [])}
-        t.transitions = {
-            k: {n: int(c) for n, c in v.items()}
-            for k, v in d.get("transitions", {}).items()
+        # counts stay as-parsed (int, or float from a decayed merge) so a
+        # save → load → save round-trip is byte-identical
+        t.batches = d.get("batches", 0)
+        t.touches = dict(d.get("touches", {}))
+        t.faults = dict(d.get("faults", {}))
+        t.phases = {k: dict(v) for k, v in d.get("phases", {}).items()}
+        t.pairs = {(a, b): n for a, b, n in d.get("pairs", [])}
+        t.transitions = {k: dict(v) for k, v in d.get("transitions", {}).items()}
+        t.request_pairs = {(a, b): n for a, b, n in d.get("request_pairs", [])}
+        t.request_transitions = {
+            k: dict(v) for k, v in d.get("request_transitions", {}).items()
         }
         return t
 
@@ -427,6 +546,36 @@ class TieredParams:
         with self._lock:
             self.trace = trace if trace is not None else AccessTrace()
             return self.trace
+
+    def rotate_trace(self, fresh: Optional[AccessTrace] = None) -> Optional[AccessTrace]:
+        """Atomically swap in a fresh trace and return the finished window
+        (None if tracing was never started). The re-tiering daemon's
+        cadence primitive (DESIGN.md §12): the returned window is no
+        longer written to and can be read/merged without the loader lock."""
+        with self._lock:
+            old = self.trace
+            if old is not None:
+                self.trace = fresh if fresh is not None else AccessTrace(
+                    max_assoc_batch=old.max_assoc_batch)
+            return old
+
+    def trace_snapshot(self) -> Optional[AccessTrace]:
+        """A consistent copy of the live trace (None if tracing is off) —
+        readable while request threads keep recording into the original."""
+        with self._lock:
+            return AccessTrace.from_dict(self.trace.to_dict()) if self.trace else None
+
+    def record_request(self, rid: int, keys: Iterable[str]) -> None:
+        """Attribute one request's step accesses in the live trace
+        (scheduler-aware profiling, DESIGN.md §12.3). No-op without a trace."""
+        with self._lock:
+            if self.trace is not None:
+                self.trace.record_request(rid, keys)
+
+    def end_request(self, rid: int) -> None:
+        with self._lock:
+            if self.trace is not None:
+                self.trace.end_request(rid)
 
     def set_phase(self, phase: str) -> None:
         """Tag subsequent loads/trace batches with a request phase

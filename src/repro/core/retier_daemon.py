@@ -1,0 +1,305 @@
+"""⑦ Online re-tiering — live hot-set adaptation without restart
+(DESIGN.md §12).
+
+The §11 profile→re-tier cycle has a structural irony: applying the
+re-tiered plan needs a restart, which is exactly the cold-start event the
+paper optimizes away. The ``RetierDaemon`` closes that gap by applying
+plan changes to the *running* server:
+
+    serve ──▶ live AccessTrace ──rotate on cadence──▶ decayed merge ──▶
+    replan_from_trace ──▶ apply in place:
+        promote  = preload through the Prefetcher (or a between-batches
+                   synchronous preload when no prefetcher is attached)
+        demote   = budget-respecting eviction (never pinned / mid-step /
+                   in-flight units — the §8.1 eviction rules unchanged)
+    ... and retrain the TransitionPredictor from the merged trace;
+    the artifact rewrite becomes an OPTIONAL periodic compaction.
+
+The daemon is *passive*: it owns no thread. The serving loop calls
+``maybe_tick()`` between batches (scheduler ``step()`` boundary, engine
+``generate()`` step boundary) — never inside a step, so a tick can never
+race the pinned working set of an in-flight step. Any thread may drive
+``tick()``; all daemon state is behind one lock, and every mutation of
+the loader goes through ``TieredParams``' own locked API.
+
+Safety rules (DESIGN.md §12.1):
+
+  * the tier-0 ⊇ entry-reachable invariant (§11.2) is re-checked with
+    ``check_tier0_superset`` on EVERY plan application, against the
+    required set computed once from the static analysis;
+  * leaf tier promotion is disabled live (``promote_leaves=False``): a
+    tier-1 → tier-0 flip changes the artifact layout, not the running
+    tree — hot whole-leaf units are preloaded like any other promotion
+    and move tiers at the next compaction;
+  * applications only touch hot-set membership of units the live loader
+    actually owns (``TieredParams`` units backed by the optional store);
+  * demotion uses ``TieredParams.evict``, which skips pinned, LOADING,
+    and already-cold units — a mid-step working set is untouchable.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.on_demand import AccessTrace, TieredParams
+from repro.core.prefetch import Prefetcher, TransitionPredictor
+from repro.core.retier import (
+    RetierReport,
+    check_tier0_superset,
+    replan_from_trace,
+    required_tier0,
+    retier_artifact,
+)
+
+
+@dataclass
+class RetierDaemonStats:
+    """One daemon's lifetime accounting (printed by the launcher, asserted
+    by tests/test_retier_daemon.py and benchmarks/bench_rq8_online.py)."""
+
+    ticks: int = 0              # cadence firings (incl. skipped ones)
+    skipped_empty: int = 0      # ticks with fewer than min_batches new batches
+    errors: int = 0             # ticks that raised and were absorbed
+    applies: int = 0            # ticks that applied a replanned hot set
+    invariant_checks: int = 0   # tier-0 superset re-verifications (== applies)
+    promoted_units: int = 0     # hot-set joins queued for preload
+    demoted_units: int = 0      # hot-set drops submitted for eviction
+    evicted_units: int = 0      # demotions that actually freed bytes
+    evicted_bytes: int = 0
+    preload_bytes: int = 0      # synchronous (no-prefetcher) preload traffic
+    predictor_refreshes: int = 0
+    compactions: int = 0        # periodic artifact rewrites
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class RetierDaemon:
+    """Applies profile-guided re-tiering to a live ``TieredParams``.
+
+    ``maybe_tick()`` fires after ``interval_steps`` serving steps or
+    ``interval_s`` wall-clock seconds, whichever comes first. Each tick
+    rotates the live trace (``TieredParams.rotate_trace``), folds the
+    finished window into the decayed history (``AccessTrace.merge``,
+    DESIGN.md §12.2), replans against the merged trace, and applies the
+    plan in place under the §12.1 safety rules. With ``compact_every=N``
+    every Nth application also rewrites the artifact out-of-place
+    (``retier_artifact``) so the *next* cold start boots the adapted hot
+    set — compaction is bookkeeping, not a serving event.
+    """
+
+    def __init__(
+        self,
+        tiered: TieredParams,
+        reach,  # core.param_graph.ReachabilityReport
+        *,
+        prefetcher: Optional[Prefetcher] = None,
+        interval_steps: int = 32,
+        interval_s: Optional[float] = None,
+        decay: float = 0.5,
+        min_batches: int = 1,
+        promote_min_faults: int = 1,
+        max_promote_bytes: Optional[int] = None,
+        refresh_predictor: bool = True,
+        predictor_top_k: int = 8,
+        compact_every: int = 0,
+        artifact_dir: Optional[str] = None,
+        compact_out_dir: Optional[str] = None,
+    ):
+        if interval_steps < 1:
+            raise ValueError(f"interval_steps must be >= 1, got {interval_steps}")
+        if not 0.0 <= decay <= 1.0:
+            # fail HERE, not two ticks into serving when merge() first runs
+            raise ValueError(f"decay must be in [0, 1], got {decay!r}")
+        if compact_every and not artifact_dir:
+            raise ValueError("compact_every needs artifact_dir to rewrite from")
+        self.tiered = tiered
+        self.reach = reach
+        self.prefetcher = prefetcher
+        self.interval_steps = interval_steps
+        self.interval_s = interval_s
+        self.decay = decay
+        self.min_batches = max(1, min_batches)
+        self.promote_min_faults = promote_min_faults
+        self.max_promote_bytes = max_promote_bytes
+        self.refresh_predictor = refresh_predictor
+        self.predictor_top_k = predictor_top_k
+        self.compact_every = compact_every
+        self.artifact_dir = artifact_dir
+        self.compact_out_dir = compact_out_dir
+        self.stats = RetierDaemonStats()
+        self.last_report: Optional[RetierReport] = None
+        self.last_error: str = ""
+        self._lock = threading.Lock()
+        self._merged: Optional[AccessTrace] = None
+        self._steps_since = 0
+        self._last_tick_t = time.monotonic()
+        # the invariant's required set is a function of the ORIGINAL plan
+        # and the static analysis only (§11.2) — computed once, so no
+        # sequence of applications can erode what must stay tier-0
+        self._required = required_tier0(tiered.plan, reach)
+        if tiered.trace is None:
+            tiered.start_trace(AccessTrace())
+
+    # -- cadence ----------------------------------------------------------------
+    def maybe_tick(self, steps: int = 1) -> Optional[RetierReport]:
+        """Count serving steps; tick when the step or wall-clock interval
+        elapses. Called between batches — NEVER inside a step (the §12.1
+        contract; enforced by call-site placement in engine/scheduler).
+
+        Never raises: re-tiering is bookkeeping, not a serving event — a
+        failing tick (compaction I/O, a store read during a sync preload)
+        is absorbed into ``stats.errors``/``last_error`` and serving
+        continues. An invariant failure aborts before any mutation; a
+        mid-apply I/O failure leaves only committed evictions/preloads,
+        which the loader treats as ordinary (refault or warm hit)."""
+        with self._lock:
+            self._steps_since += steps
+            due = self._steps_since >= self.interval_steps or (
+                self.interval_s is not None
+                and time.monotonic() - self._last_tick_t >= self.interval_s
+            )
+            if not due:
+                return None
+            return self._tick_absorbed()
+
+    def tick(self) -> Optional[RetierReport]:
+        """Force one re-tier cycle now (tests, shutdown flushes). Same
+        never-raises contract as ``maybe_tick``."""
+        with self._lock:
+            return self._tick_absorbed()
+
+    def _tick_absorbed(self) -> Optional[RetierReport]:
+        try:
+            return self._tick_locked()
+        except Exception as e:  # degrade, don't kill the serving loop
+            self.stats.errors += 1
+            self.last_error = repr(e)
+            return None
+
+    @property
+    def merged_trace(self) -> Optional[AccessTrace]:
+        """The decayed cross-window history the last replan saw."""
+        with self._lock:
+            return self._merged
+
+    def trace_snapshot(self) -> AccessTrace:
+        """History + the still-open live window, merged the same way the
+        next tick would — what ``--profile-out`` saves when the daemon is
+        on (the raw live window alone would miss everything already
+        folded into the history)."""
+        live = self.tiered.trace_snapshot()
+        with self._lock:
+            if self._merged is None:
+                return live if live is not None else AccessTrace()
+            if live is None or not live.batches:
+                return self._merged
+            return self._merged.merge(live, decay=self.decay)
+
+    # -- one cycle ---------------------------------------------------------------
+    def _tick_locked(self) -> Optional[RetierReport]:
+        self.stats.ticks += 1
+        self._steps_since = 0
+        self._last_tick_t = time.monotonic()
+        window = self.tiered.rotate_trace()
+        if window is None:
+            self.stats.skipped_empty += 1
+            return None
+        if window.batches < self.min_batches:
+            # too little signal to replan on, but don't throw it away:
+            # fold it in undecayed so slow traffic still accumulates
+            self.stats.skipped_empty += 1
+            if window.batches:
+                self._merged = (
+                    window if self._merged is None
+                    else self._merged.merge(window, decay=1.0)
+                )
+            return None
+        self._merged = (
+            window if self._merged is None
+            else self._merged.merge(window, decay=self.decay)
+        )
+        new_plan, report = replan_from_trace(
+            self.tiered.plan,
+            self._merged,
+            self.reach,
+            promote_min_faults=self.promote_min_faults,
+            max_promote_bytes=self.max_promote_bytes,
+            promote_leaves=False,  # §12.1: tier flips wait for compaction
+        )
+        self._apply(new_plan, report)
+        self.last_report = report
+        return report
+
+    def _apply(self, new_plan, report: RetierReport) -> None:
+        """Apply a replanned hot set to the running loader, in place."""
+        # §12.1 rule 1: re-prove the invariant on EVERY application
+        check_tier0_superset(new_plan, self._required)
+        self.stats.invariant_checks += 1
+
+        tiered = self.tiered
+        owned = tiered._all_units
+        promote: list[str] = []
+        demote: list[str] = []
+        for path, nd in new_plan.decisions.items():
+            od = tiered.plan.decisions.get(path)
+            if od is None or od.tier != 1 or nd.tier != 1:
+                continue  # tier flips are compaction-only (§12.1 rule 2)
+            old_res, new_res = set(od.resident_units), set(nd.resident_units)
+            # replan orders promotions hottest-first; preserve that order
+            promote.extend(
+                k for k in nd.resident_units if k not in old_res and k in owned
+            )
+            demote.extend(
+                k for k in od.resident_units if k not in new_res and k in owned
+            )
+
+        # demote FIRST: freed budget makes room for the incoming preloads
+        if demote:
+            evictions0 = tiered.stats.evictions
+            freed = tiered.evict(demote)  # skips pinned/LOADING/cold (§8.1)
+            self.stats.demoted_units += len(demote)
+            self.stats.evicted_units += tiered.stats.evictions - evictions0
+            self.stats.evicted_bytes += freed
+        if promote:
+            self.stats.promoted_units += len(promote)
+            if self.prefetcher is not None:
+                # promotions ride the prefetch queue: claimed COLD→LOADING,
+                # loaded off the serving thread, hit-accounted like any hint
+                self.prefetcher.hint(promote)
+            else:
+                # no prefetcher (strict deployments): preload synchronously
+                # HERE, between batches — bytes move, but never inside a
+                # step and never on a request's fault path
+                self.stats.preload_bytes += tiered.ensure(promote, source="preload")
+
+        tiered.plan = new_plan
+        self.stats.applies += 1
+
+        if self.refresh_predictor and self.prefetcher is not None and self._merged:
+            # per-request transitions are coincidence-free (§12.3); fall
+            # back to batch transitions when no scheduler attribution exists
+            table = self._merged.request_transitions or self._merged.transitions
+            if table:
+                self.prefetcher.predictor = TransitionPredictor(
+                    table, top_k=self.predictor_top_k)
+                self.stats.predictor_refreshes += 1
+
+        if self.compact_every and self.stats.applies % self.compact_every == 0:
+            self.compact()
+
+    def compact(self) -> dict:
+        """Rewrite the artifact from the CURRENT live plan so the next cold
+        start boots the adapted hot set. Out-of-place + rename-committed
+        (``retier_artifact``); the running server never re-reads it."""
+        if not self.artifact_dir:
+            raise ValueError("no artifact_dir configured for compaction")
+        out = self.compact_out_dir or self.artifact_dir.rstrip("/") + "-compact"
+        meta = retier_artifact(
+            self.artifact_dir, self.tiered.plan, out_dir=out, report=self.last_report
+        )
+        self.stats.compactions += 1
+        return meta

@@ -19,6 +19,15 @@ records the demand-access trace of this serving run (profile with
 ``--retier-from t.json`` replans the tier split from the trace, rewrites
 the artifact next to the original (``<artifact>/<arch>-retier``), and
 arms the prefetcher with the trace's learned unit→next-unit predictor.
+
+Online re-tiering (DESIGN.md §12): ``--retier-online`` replaces that
+restart cycle with a live daemon — the serving loop ticks it every
+``--retier-interval`` steps; each tick merges the newest trace window
+into a ``--retier-decay``-weighted history, replans, and applies the
+hot set to the running server (promote = prefetch preload, demote =
+eviction). ``--retier-compact-every N`` additionally rewrites the
+artifact every N applications so future cold starts boot the adapted
+hot set.
 """
 
 from __future__ import annotations
@@ -82,9 +91,31 @@ def main(argv=None) -> int:
                          "before cold start (promote demand-faulted units, demote "
                          "untouched residents) and drive the predictive "
                          "prefetcher from its transition table (after2 only)")
+    ap.add_argument("--retier-online", action="store_true",
+                    help="attach the online re-tiering daemon (DESIGN.md §12): "
+                         "watch the live access trace and adapt the hot set in "
+                         "place — promote = prefetch preload, demote = eviction "
+                         "— with ZERO restarts (after2 only)")
+    ap.add_argument("--retier-interval", type=int, default=16,
+                    help="online re-tier cadence in serving steps (default 16)")
+    ap.add_argument("--retier-decay", type=float, default=0.5,
+                    help="per-tick decay of the merged trace history in [0, 1]: "
+                         "1 = lifetime counts, 0 = newest window only")
+    ap.add_argument("--retier-compact-every", type=int, default=0,
+                    help="online mode: rewrite the artifact (out-of-place, "
+                         "rename-committed) every N plan applications so the "
+                         "NEXT cold start boots the adapted hot set (0 = never)")
     args = ap.parse_args(argv)
-    if (args.profile_out or args.retier_from) and args.mode != "after2":
-        ap.error("--profile-out/--retier-from need the two-tier runtime (--mode after2)")
+    if (args.profile_out or args.retier_from or args.retier_online) and args.mode != "after2":
+        ap.error("--profile-out/--retier-from/--retier-online need the "
+                 "two-tier runtime (--mode after2)")
+    if not 0.0 <= args.retier_decay <= 1.0:
+        ap.error("--retier-decay must be in [0, 1]")
+    if args.retier_interval < 1:
+        # fail as a usage error here, not as a traceback after the whole
+        # cold start has already run (RetierDaemon validates too, but by
+        # then the tier-0 read + hot-set preload were paid for)
+        ap.error("--retier-interval must be >= 1")
     if args.retier_from and (args.no_prefetch or args.policy == "strict"):
         # without a prefetcher (explicit --no-prefetch, or the strict
         # preset's prefetch-off default) the trained predictor would be
@@ -152,7 +183,11 @@ def main(argv=None) -> int:
                     residency=args.policy if args.mode == "after2" else None,
                     device_budget_bytes=args.device_budget_bytes or None,
                     prefetch=False if args.no_prefetch else None,
-                    trace=bool(args.profile_out), predictor=predictor) as server:
+                    trace=bool(args.profile_out), predictor=predictor,
+                    retier_online=args.retier_online,
+                    retier_interval=args.retier_interval,
+                    retier_decay=args.retier_decay,
+                    retier_compact_every=args.retier_compact_every) as server:
         print(f"[serve] cold start ({args.mode}):", json.dumps(server.report.to_dict(), default=float))
 
         engine = GenerationEngine(server, max_seq=args.prompt_len + args.gen_steps + 8)
@@ -177,9 +212,19 @@ def main(argv=None) -> int:
                 ps = server.prefetcher.stats
                 print(f"[serve] predictor: observed {ps.observed} keys, "
                       f"predicted {ps.predicted} ahead-of-schedule loads")
+        if server.retier_daemon is not None:
+            ds = server.retier_daemon.stats
+            print(f"[serve] online retier: {ds.ticks} ticks, {ds.applies} applies "
+                  f"(+{ds.promoted_units}/-{ds.demoted_units} units, "
+                  f"{ds.evicted_bytes:,}B evicted, "
+                  f"{ds.predictor_refreshes} predictor refreshes, "
+                  f"{ds.compactions} compactions); zero restarts")
         if args.profile_out and server.tiered is not None and server.tiered.trace is not None:
-            server.tiered.trace.save(args.profile_out)
-            t = server.tiered.trace
+            # with the daemon on, the live trace is only the newest window —
+            # save the decayed merge of everything the run observed instead
+            t = (server.retier_daemon.trace_snapshot()
+                 if server.retier_daemon is not None else server.tiered.trace)
+            t.save(args.profile_out)
             print(f"[serve] wrote access trace to {args.profile_out} "
                   f"({t.batches} batches, {len(t.faults)} faulted units, "
                   f"{len(t.transitions)} transition sources)")

@@ -42,6 +42,7 @@ from repro.core.analyzer import AnalysisResult
 from repro.core.on_demand import AccessTrace, TieredParams
 from repro.core.optional_store import OptionalStore
 from repro.core.prefetch import Prefetcher, TransitionPredictor
+from repro.core.retier_daemon import RetierDaemon
 from repro.models.zoo import Model
 from repro.utils.tree import flatten_with_paths, tree_from_flat
 
@@ -96,6 +97,7 @@ class ColdStartServer:
         tiered: Optional[TieredParams] = None,
         store: Optional[OptionalStore] = None,
         prefetcher: Optional[Prefetcher] = None,
+        retier_daemon: Optional[RetierDaemon] = None,
     ):
         self.model = model
         self.params = params
@@ -103,6 +105,7 @@ class ColdStartServer:
         self.tiered = tiered
         self.store = store
         self.prefetcher = prefetcher
+        self.retier_daemon = retier_daemon
         self._compiled: dict[tuple, Callable] = {}
 
     def close(self) -> None:
@@ -168,6 +171,11 @@ def cold_start(
     prefetch_batch_units: int = 8,
     trace: bool = False,  # attach an AccessTrace for profiling (DESIGN.md §11)
     predictor: Optional[TransitionPredictor] = None,  # profile-trained prefetch
+    retier_online: bool = False,  # live hot-set adaptation (DESIGN.md §12)
+    retier_interval: int = 32,    # daemon cadence, serving steps per tick
+    retier_interval_s: Optional[float] = None,  # or wall-clock seconds
+    retier_decay: float = 0.5,    # trace-window merge decay per tick
+    retier_compact_every: int = 0,  # artifact rewrite every N applies (0 = never)
 ) -> ColdStartServer:
     """Run one timed cold start. ``result`` is required for after2.
 
@@ -175,7 +183,10 @@ def cold_start(
     serving run records per-unit demand telemetry (saved by the launcher's
     ``--profile-out``); ``predictor`` arms the prefetcher with a learned
     unit→next-unit table from a prior profiling run (``--retier-from``).
-    Both are after2-only and ignored for the monolithic baselines.
+    ``retier_online=True`` attaches a ``RetierDaemon`` (which implies a
+    live trace) so the hot set adapts in place without a restart — the
+    engine/scheduler tick it between batches. All are after2-only and
+    ignored for the monolithic baselines.
     """
     put = put or (lambda host: jax.device_put(host))
     if residency is not None and residency not in RESIDENCY_PRESETS:
@@ -233,7 +244,7 @@ def cold_start(
             if want_prefetch is None:
                 want_prefetch = preset_prefetch
         tiered = TieredParams(tree, plan, store, device_budget_bytes=budget)
-        if trace:
+        if trace or retier_online:  # the daemon needs a live trace to watch
             tiered.start_trace(AccessTrace())
         # preload the hot set (the paper's offline-profiled module-init list)
         hot = [k for d in plan.decisions.values() for k in d.resident_units]
@@ -246,8 +257,16 @@ def cold_start(
             if want_prefetch
             else None
         )
+        daemon = None
+        if retier_online:
+            daemon = RetierDaemon(
+                tiered, result.reach, prefetcher=prefetcher,
+                interval_steps=retier_interval, interval_s=retier_interval_s,
+                decay=retier_decay, compact_every=retier_compact_every,
+                artifact_dir=artifact_dir,
+            )
         server = ColdStartServer(model, tree, report, tiered=tiered, store=store,
-                                 prefetcher=prefetcher)
+                                 prefetcher=prefetcher, retier_daemon=daemon)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -78,8 +78,19 @@ class GenerationEngine:
         self.max_seq = max_seq
         self.hint_topk = hint_topk
         self.prefetcher = getattr(server, "prefetcher", None)
+        self.retier_daemon = getattr(server, "retier_daemon", None)
         self._expert_units_index = self._build_expert_index()
         self._row_group = self._embed_row_group()
+
+    def tick_retier(self, steps: int = 1) -> None:
+        """Advance the online re-tiering daemon (DESIGN.md §12). Call sites
+        sit BETWEEN steps — after a step's pins are released, before the
+        next step's fault-in — never inside one. ``generate()`` ticks per
+        decode step; the scheduler ticks at its own step() boundary (this
+        method is NOT called from prefill_step/decode_once, which the
+        scheduler runs inside its step)."""
+        if self.retier_daemon is not None:
+            self.retier_daemon.maybe_tick(steps)
 
     def _embed_row_group(self) -> int:
         tiered = self.server.tiered
@@ -321,6 +332,7 @@ class GenerationEngine:
         decode = server.compiled_decode(B)
 
         logits, caches, _ = self.prefill_step(tokens, stats)
+        self.tick_retier()  # between steps, never inside one (§12.1)
 
         # move prefill caches into a max-length decode cache
         big = model.init_cache(B, S_max, multimodal=False)
@@ -336,6 +348,7 @@ class GenerationEngine:
             logits, caches, _ = self.decode_once(decode, caches, dbatch, stats)
             out.append(np.asarray(jnp.argmax(logits, -1), np.int32))
             stats.steps += 1
+            self.tick_retier()
         if tiered is not None:
             stats.prefetch_hits = (
                 tiered.stats.prefetch_hits + tiered.stats.prefetch_waits - hits_before

@@ -203,6 +203,12 @@ class ContinuousBatchingScheduler:
         return self.queue.submit(tokens, n_steps)
 
     @property
+    def _tracing(self) -> bool:
+        """True when a live AccessTrace would record request attribution."""
+        tiered = self.server.tiered
+        return tiered is not None and tiered.trace is not None
+
+    @property
     def active(self) -> list[int]:
         return [i for i, r in enumerate(self._slots) if r is not None]
 
@@ -237,6 +243,7 @@ class ContinuousBatchingScheduler:
         admitted = 0
         hints: list[list[str]] = []
         observed: list[str] = []
+        by_request: dict[int, list[str]] = {}
         # group same-length prompts (everything picked is admitted this
         # round, so grouping cannot reorder anyone past anyone else)
         groups: dict[int, list[tuple[int, Request]]] = {}
@@ -264,6 +271,15 @@ class ContinuousBatchingScheduler:
                 continue
             self._caches = self._graft(self._caches, caches, jnp.asarray(slots, jnp.int32))
             lg = np.asarray(logits)
+            # per-request attribution (§12.3): each prompt's own row-groups;
+            # expert keys are exact only when the prefill wasn't shared.
+            # Skipped entirely when no trace is attached — the common
+            # tracing-off path pays nothing for it.
+            if self._tracing:
+                for r in reqs:
+                    by_request[r.rid] = self.engine.row_keys_for(r.tokens) + (
+                        list(expert_keys) if len(reqs) == 1 else []
+                    )
             for i, (slot, req) in enumerate(grp):
                 # group costs are shared: every member waited out the batch
                 req.stats.prefill_s += shared.prefill_s
@@ -288,7 +304,7 @@ class ContinuousBatchingScheduler:
             observed += self.engine.row_keys_for(
                 np.concatenate([r.tokens for r in reqs])
             ) + list(expert_keys)
-        self._emit_hints(hints, observed=observed)
+        self._emit_hints(hints, observed=observed, by_request=by_request)
         return admitted
 
     def _retire(self, slot: int) -> None:
@@ -301,11 +317,29 @@ class ContinuousBatchingScheduler:
         req.finish()
 
     def _emit_hints(self, per_slot_hints: list[list[str]],
-                    observed: list[str] = ()) -> None:
-        """Feed the prefetcher: first the units this step *actually*
+                    observed: list[str] = (),
+                    by_request: Optional[dict] = None) -> None:
+        """Feed the prefetcher — first the units this step *actually*
         accessed (``observe`` expands them through the profile-trained
         predictor into ahead-of-schedule hints — DESIGN.md §11.3), then
-        the round-robin-merged per-slot next-step hints."""
+        the round-robin-merged per-slot next-step hints — and tag the
+        live trace with per-request attribution (``by_request``: rid →
+        the keys THAT request accessed this step). The unioned demand
+        batch already landed in the trace via ``ensure()``; the tags add
+        the coincidence-free association signal the replanner and the
+        daemon's predictor refresh prefer (DESIGN.md §12.3). Requests
+        that finished this step are recorded FIRST (their final step's
+        transitions matter too), then their chain state is dropped so a
+        freed slot's next occupant never links to them."""
+        if by_request:
+            tiered = self.server.tiered
+            if tiered is not None:
+                live = {r.rid for r in self._slots if r is not None}
+                for rid, keys in by_request.items():
+                    if keys:
+                        tiered.record_request(rid, keys)
+                    if rid not in live:
+                        tiered.end_request(rid)
         pf = self.engine.prefetcher
         if pf is None:
             return
@@ -324,6 +358,9 @@ class ContinuousBatchingScheduler:
         active = self.active
         self.stats.max_active = max(self.stats.max_active, len(active))
         if not active:
+            # still a step boundary: the re-tier daemon may tick on
+            # wall-clock cadence even while the queue is drained (§12)
+            self.engine.tick_retier(steps=0)
             return admitted > 0
 
         mask = np.zeros(self.max_batch, bool)
@@ -347,11 +384,16 @@ class ContinuousBatchingScheduler:
             # forever — fail those requests, return their slots, keep
             # serving the queue
             self.stats.failed += len(active)
+            tiered = self.server.tiered
             for i in active:
                 req = self._slots[i]
                 self._slots[i] = None
                 self._last_tok[i] = 0
                 self._pos[i] = 0
+                if tiered is not None:
+                    # failed requests never reach _emit_hints — drop their
+                    # trace chain state here or it leaks forever (§12.3)
+                    tiered.end_request(req.rid)
                 req.finish(error=f"decode step failed: {e!r}")
             return True
         self.stats.decode_s += step_stats.decode_s
@@ -365,6 +407,16 @@ class ContinuousBatchingScheduler:
         # row-groups plus every routed expert (resident ones included —
         # post-retier they key most of the transition table)
         observed = self.engine.row_keys_for(self._last_tok[active]) + list(expert_keys)
+        # per-request attribution (§12.3), captured before the token
+        # updates below overwrite _last_tok: each slot's own row-groups;
+        # union-detected experts are exact only with a single active slot.
+        # Skipped when no trace is attached (nothing would record it).
+        by_request = {
+            self._slots[i].rid: self.engine.row_keys_for(self._last_tok[i:i + 1]) + (
+                list(expert_keys) if len(active) == 1 else []
+            )
+            for i in active
+        } if self._tracing else {}
 
         lg = np.asarray(logits)
         hints: list[list[str]] = []
@@ -381,7 +433,10 @@ class ContinuousBatchingScheduler:
                 hints.append(self.engine.topk_row_hints(lg[i]))
         if expert_keys:
             hints.append(list(expert_keys))
-        self._emit_hints(hints, observed=observed)
+        self._emit_hints(hints, observed=observed, by_request=by_request)
+        # the step is fully over (pins released, outputs materialized):
+        # the ONLY place the serving loop advances the re-tier daemon
+        self.engine.tick_retier()
         return True
 
     def run(self, *, max_steps: Optional[int] = None) -> None:

@@ -82,18 +82,35 @@ def test_decode_matches_prefill(arch, rng):
 
 
 def test_mlstm_chunkwise_vs_recurrent():
+    # Deflake contract (ROADMAP watch item): fixed dedicated seed — this
+    # test's inputs must never drift when other tests split the module KEY
+    # — and a tolerance DERIVED from dtype eps instead of a magic constant.
+    #
+    # Both paths accumulate the same (C, n) state over S steps in float32;
+    # the chunkwise path only re-associates those sums, so the paths
+    # differ by a random walk over O(S) roundings of O(1)-magnitude
+    # terms: ~sqrt(S)*eps relative drift typical, ~S*eps in the tail.
+    # Measured over 20 seeds the worst (err - rtol*|h_ref|) was ≈30*S*eps,
+    # so the 64* factor gives a >2x margin on both knobs.
     B, S, H, hd = 2, 256, 4, 32
-    ks = jax.random.split(KEY, 5)
+    ks = jax.random.split(jax.random.PRNGKey(20260729), 5)
     q = jax.random.normal(ks[0], (B, S, H, hd))
     k = jax.random.normal(ks[1], (B, S, H, hd)) / np.sqrt(hd)
     v = jax.random.normal(ks[2], (B, S, H, hd))
     li = jax.random.normal(ks[3], (B, S, H)) * 2
     lf = -jax.nn.softplus(-jax.random.normal(ks[4], (B, S, H)) * 2)
     h_ref, (C_r, n_r, m_r) = mlstm_scan(q, k, v, li, lf)
+    eps = float(np.finfo(np.asarray(h_ref).dtype).eps)
+    atol = 64 * S * eps            # ≈2.0e-3 for float32, S=256
+    rtol = 64 * np.sqrt(S) * eps   # ≈1.2e-4
     for chunk in (32, 64, 128):
         h_c, (C_c, n_c, m_c) = mlstm_chunkwise(q, k, v, li, lf, chunk)
-        np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_ref), atol=5e-4, rtol=1e-3)
-        np.testing.assert_allclose(np.asarray(m_c), np.asarray(m_r), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_ref),
+                                   atol=atol, rtol=rtol)
+        # the m stabilizer is an exact max-plus scan (PR 2) — no float
+        # accumulation at all, so allow only a couple of ulps of slack
+        np.testing.assert_allclose(np.asarray(m_c), np.asarray(m_r),
+                                   atol=4 * eps, rtol=0)
 
 
 def test_chunked_xent_matches_full():
@@ -117,4 +134,13 @@ def test_pallas_path_matches_jnp_path(rng):
         spec, _ = m0.train_batch_spec(2, 16)
         batch = rand_batch(rng, spec, cfg.vocab_size)
         l0, l1 = m0.loss_fn(params, batch), m1.loss_fn(params, batch)
-        assert abs(float(l0) - float(l1)) < 1e-3, arch
+        # Deflake: the two paths are different implementations, so their
+        # accumulation orders differ; the drift scales with the LOSS
+        # magnitude, and XLA:CPU's reduction partitioning varies with the
+        # thread pool sized at process start (bit-identical within one
+        # process, occasionally ~2x larger across runs under load).
+        # Observed ≤4.5e-4 abs at loss ≈6.3; a relative bound with ~7x
+        # margin replaces the old 1e-3 absolute constant that sat only
+        # 2.3x above the typical drift.
+        assert abs(float(l0) - float(l1)) < 5e-4 * max(1.0, abs(float(l0))), (
+            arch, float(l0), float(l1))

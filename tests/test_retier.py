@@ -368,6 +368,48 @@ def test_observe_prefetches_learned_successors(tmp_path):
     assert tp.stats.prefetch_hits == 1
 
 
+def test_request_tagging_separates_patterns_from_coincidence(tmp_path):
+    """Scheduler-aware profiling (DESIGN.md §12.3): the scheduler's unioned
+    demand batches conflate requests, so batch-level ``transitions`` link
+    units that merely shared a step; per-request tags (``record_request``,
+    emitted by ``scheduler._emit_hints`` with slot/request ids) keep each
+    request's own chain — and the predictor trained on them never learns
+    the cross-request coincidence."""
+    trace = AccessTrace()
+    # two interleaved requests: r1 walks a→b→c, r2 walks x→y→z; every
+    # scheduler step demand-ensures the UNION of the active slots' units
+    for step_r1, step_r2 in ((["a"], ["x"]), (["b"], ["y"]), (["c"], ["z"])):
+        union = step_r1 + step_r2
+        trace.record(union, union, "decode")
+        trace.record_request(1, step_r1)
+        trace.record_request(2, step_r2)
+    trace.end_request(1)
+    trace.end_request(2)
+
+    # batch-level transitions contain the coincidence (a→y) ...
+    assert "y" in trace.transitions["a"] and "b" in trace.transitions["a"]
+    assert ("a", "x") in trace.pairs  # co-resident in one step ≠ co-accessed by one request
+    # ... the request-tagged fields contain only true per-request chains
+    assert trace.request_transitions["a"] == {"b": 1}
+    assert trace.request_transitions["x"] == {"y": 1}
+    assert "y" not in trace.request_transitions["a"]
+    assert trace.request_pairs == {}  # each request touched one unit per step
+
+    # a predictor built from request transitions follows the request's own
+    # chain instead of fanning out across coincident slots
+    pred_req = TransitionPredictor(trace.request_transitions)
+    pred_batch = TransitionPredictor(trace.transitions)
+    assert pred_req.follow(["a"]) == ["b"]
+    assert set(pred_batch.follow(["a"])) == {"b", "y"}
+
+    # retiring a request drops its chain: the slot's next occupant never
+    # links to the finished request's last step
+    trace.record_request(1, ["a"])
+    trace.end_request(1)
+    trace.record_request(1, ["q"])  # rid reuse after retirement
+    assert "q" not in trace.request_transitions.get("a", {})
+
+
 def test_observe_without_predictor_is_noop(tmp_path):
     tp, _, units, _ = _mini(tmp_path)
     pf = Prefetcher(tp, batch_units=4)

@@ -1,0 +1,383 @@
+"""Online re-tiering daemon (DESIGN.md §12).
+
+Covers the daemon's acceptance contract:
+  * live apply — demand-faulted units join the hot set and preload
+    (synchronously without a prefetcher, through the prefetch queue with
+    one), decayed-out residents are demoted and evicted, and the plan on
+    the running ``TieredParams`` is replaced in place;
+  * cadence — step-count and wall-clock triggers, empty-window skips;
+  * decay — a phase the traffic shifted away from is forgotten window by
+    window and its hot-set entries demoted;
+  * safety under concurrency (threaded stress) — the daemon applying
+    promote/demote plans while request threads hammer
+    ``ensure(pin=True)`` never evicts a pinned unit, never corrupts a
+    pinned unit's bytes, and leaves budget/bookkeeping exact;
+  * end-to-end — scheduler-served greedy outputs are IDENTICAL with the
+    daemon on vs off, the scheduler's per-request trace tagging feeds it,
+    and periodic compaction publishes the adapted artifact out-of-place.
+"""
+
+import threading
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import (
+    AccessTrace,
+    DeploymentProfile,
+    OptionalStore,
+    Prefetcher,
+    RetierDaemon,
+    TieredParams,
+    analyze,
+    build_artifact,
+)
+from repro.core.entrypoints import SERVING_PROFILE
+from repro.core.optional_store import write_store
+from repro.core.param_graph import ReachabilityReport
+from repro.core.partition import TierDecision, TierPlan, Unit
+from repro.models.zoo import build_model
+from repro.serving import ContinuousBatchingScheduler, GenerationEngine, cold_start
+
+ROWS, COLS, N_UNITS = 16, 32, 8
+UNIT_BYTES = ROWS * COLS * 4
+
+
+def _mini(tmp_path, budget=None, name="mini", resident=()):
+    """One row-tiered leaf over a real optional store + the static reach
+    report the daemon's invariant check needs (no model)."""
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((N_UNITS * ROWS, COLS)).astype(np.float32)
+    units = tuple(
+        Unit(f"emb#rg{g}", "emb", rows=(g * ROWS, (g + 1) * ROWS), nbytes=UNIT_BYTES)
+        for g in range(N_UNITS)
+    )
+    dec = TierDecision("emb", 1, "rows", "test", data.nbytes, units=units,
+                       resident_units=tuple(resident))
+    plan = TierPlan({"emb": dec}, SERVING_PROFILE, [])
+    path = str(tmp_path / f"{name}.blob")
+    write_store(path, [(u.key, data[u.rows[0]: u.rows[1]]) for u in units])
+    tp = TieredParams(
+        {"emb": jnp.zeros(data.shape, jnp.float32)}, plan, OptionalStore(path),
+        device_budget_bytes=budget,
+    )
+    reach = ReachabilityReport(entry_names=["prefill", "decode_step"],
+                               reachable={"emb": {"prefill"}})
+    return tp, data, units, reach
+
+
+def _rows_of(tp, unit):
+    lo, hi = unit.rows
+    return np.asarray(tp.leaf("emb"))[lo:hi]
+
+
+# ---------------------------------------------------------------------------
+# live apply: promote / demote / plan swap
+# ---------------------------------------------------------------------------
+
+def test_daemon_applies_promotions_and_demotions_live(tmp_path):
+    tp, data, units, reach = _mini(tmp_path)
+    keys = [u.key for u in units]
+    # hand-install a hot set: rg0 and rg1 "preloaded at cold start"
+    tp.plan.decisions["emb"] = TierDecision(
+        "emb", 1, "rows", "test", tp.plan.decisions["emb"].nbytes,
+        units=units, resident_units=(keys[0], keys[1]),
+    )
+    tp.ensure([keys[0], keys[1]], source="preload")
+    daemon = RetierDaemon(tp, reach, interval_steps=1)
+    assert tp.trace is not None  # the daemon attached its live trace
+
+    tp.ensure([keys[0]])           # touch one preload, never the other
+    tp.ensure([keys[4], keys[5]])  # two demand faults
+
+    rep = daemon.maybe_tick()
+    assert rep is not None
+    res = tp.plan.decisions["emb"].resident_units  # plan swapped in place
+    assert keys[4] in res and keys[5] in res       # faulted → promoted
+    assert keys[0] in res and keys[1] not in res   # untouched → demoted
+    # the demotion was a real eviction back to placeholder zeros...
+    assert not tp.is_resident(keys[1])
+    np.testing.assert_array_equal(_rows_of(tp, units[1]), np.zeros((ROWS, COLS), np.float32))
+    # ...while the promoted units are resident with exact bytes (the sync
+    # no-prefetcher preload path — here they were already warm from the fault)
+    for g in (4, 5):
+        assert tp.is_resident(keys[g])
+        np.testing.assert_array_equal(_rows_of(tp, units[g]), data[g * ROWS:(g + 1) * ROWS])
+    s = daemon.stats
+    assert s.ticks == s.applies == s.invariant_checks == 1
+    assert s.promoted_units == 2 and s.demoted_units == 1
+    assert s.evicted_units == 1 and s.evicted_bytes == UNIT_BYTES
+
+
+def test_daemon_preloads_through_prefetcher_and_refreshes_predictor(tmp_path):
+    tp, data, units, reach = _mini(tmp_path)
+    keys = [u.key for u in units]
+    pf = Prefetcher(tp, batch_units=4)
+    daemon = RetierDaemon(tp, reach, prefetcher=pf, interval_steps=1)
+    try:
+        # a request chain faults rg2 then rg3, which then get evicted
+        tp.ensure([keys[2]])
+        tp.ensure([keys[3]])
+        tp.evict([keys[2], keys[3]])
+        assert not tp.is_resident(keys[2]) and not tp.is_resident(keys[3])
+
+        rep = daemon.tick()
+        assert rep is not None and set(rep.promoted_resident) == {keys[2], keys[3]}
+        # promotions rode the prefetch queue, not the request path
+        assert pf.drain(10.0)
+        for g in (2, 3):
+            assert tp.is_resident(keys[g])
+            np.testing.assert_array_equal(_rows_of(tp, units[g]), data[g * ROWS:(g + 1) * ROWS])
+        reloads = [e for e in tp.stats.events if e.key in (keys[2], keys[3])
+                   and e.source == "prefetch"]
+        assert len(reloads) == 2
+        # the predictor was retrained from the merged trace's transitions
+        assert daemon.stats.predictor_refreshes == 1
+        assert pf.predictor is not None
+        assert keys[3] in pf.predictor.successors(keys[2])
+    finally:
+        pf.stop()
+
+
+def test_daemon_decay_forgets_shifted_away_phase(tmp_path):
+    """Workload shift: units hot in an old window decay out of the merged
+    trace and get demoted + evicted — the hot set tracks the traffic."""
+    tp, data, units, reach = _mini(tmp_path)
+    keys = [u.key for u in units]
+    daemon = RetierDaemon(tp, reach, interval_steps=1, decay=0.5)
+
+    tp.ensure([keys[2]])  # phase A
+    assert daemon.tick() is not None
+    assert keys[2] in tp.plan.decisions["emb"].resident_units
+
+    for _ in range(3):    # phase B windows: rg2 never touched again
+        tp.ensure([keys[6]])
+        daemon.tick()
+    # 1 → 0.5 → pruned: rg2 left the merged profile, so it was demoted
+    assert keys[2] not in tp.plan.decisions["emb"].resident_units
+    assert not tp.is_resident(keys[2])
+    assert keys[6] in tp.plan.decisions["emb"].resident_units
+    assert daemon.stats.demoted_units >= 1
+
+
+# ---------------------------------------------------------------------------
+# cadence
+# ---------------------------------------------------------------------------
+
+def test_daemon_cadence_step_and_wallclock_triggers(tmp_path):
+    tp, _, units, reach = _mini(tmp_path)
+    daemon = RetierDaemon(tp, reach, interval_steps=3)
+    tp.ensure([units[0].key])
+    assert daemon.maybe_tick() is None      # 1
+    assert daemon.maybe_tick() is None      # 2
+    assert daemon.maybe_tick() is not None  # 3: due
+    assert daemon.stats.ticks == 1
+
+    # empty windows are skipped (counted, nothing applied)
+    assert daemon.maybe_tick(steps=3) is None
+    assert daemon.stats.skipped_empty == 1
+    assert daemon.stats.applies == 1
+
+    # wall-clock trigger fires even with zero new steps
+    wall = RetierDaemon(tp, reach, interval_steps=10**9, interval_s=0.05)
+    tp.ensure([units[1].key])
+    assert wall.maybe_tick(steps=0) is None
+    time.sleep(0.08)
+    assert wall.maybe_tick(steps=0) is not None
+
+    with pytest.raises(ValueError, match="interval_steps"):
+        RetierDaemon(tp, reach, interval_steps=0)
+    with pytest.raises(ValueError, match="artifact_dir"):
+        RetierDaemon(tp, reach, compact_every=2)
+    # bad decay fails at construction, not two ticks into serving
+    with pytest.raises(ValueError, match="decay"):
+        RetierDaemon(tp, reach, decay=1.5)
+
+
+def test_daemon_tick_failure_absorbed_serving_survives(tmp_path):
+    """Re-tiering is bookkeeping: a tick that raises (here: compaction
+    into an unwritable path) must not propagate into the serving loop —
+    it is counted, and later ticks keep working."""
+    tp, _, units, reach = _mini(tmp_path)
+    daemon = RetierDaemon(tp, reach, interval_steps=1, compact_every=1,
+                          artifact_dir=str(tmp_path / "no-such-artifact"))
+    tp.ensure([units[0].key])
+    assert daemon.maybe_tick() is None  # compaction raised, absorbed
+    assert daemon.stats.errors == 1 and daemon.last_error
+    # the plan application itself landed before the compaction failure...
+    assert units[0].key in tp.plan.decisions["emb"].resident_units
+    # ...and the daemon keeps serving future windows
+    tp.ensure([units[1].key])
+    daemon.compact_every = 0  # next tick has nothing left to fail on
+    assert daemon.maybe_tick() is not None
+    assert daemon.stats.errors == 1
+
+
+def test_emit_hints_attributes_final_step_then_drops_chain(tmp_path):
+    """A request's LAST step is recorded before its chain state is
+    dropped: the transition into the terminal step's units is profiling
+    signal, but the freed slot's next occupant must not link to it."""
+    tp, _, units, _ = _mini(tmp_path)
+    tp.start_trace()
+    req = types.SimpleNamespace(rid=7)
+    fake = types.SimpleNamespace(
+        server=types.SimpleNamespace(tiered=tp),
+        engine=types.SimpleNamespace(prefetcher=None),
+        _slots=[req],
+    )
+    k = [u.key for u in units]
+    ContinuousBatchingScheduler._emit_hints(fake, [], by_request={7: [k[0]]})
+    fake._slots = [None]  # the request retired during this step
+    ContinuousBatchingScheduler._emit_hints(fake, [], by_request={7: [k[1]]})
+    # the final step WAS attributed (k0 → k1 is a real per-request chain)
+    assert tp.trace.request_transitions[k[0]] == {k[1]: 1}
+    # and the chain state is gone: the slot's next occupant can't link in
+    assert tp.trace._last_by_request == {}
+
+
+# ---------------------------------------------------------------------------
+# the satellite stress: concurrent apply vs pinned request traffic
+# ---------------------------------------------------------------------------
+
+def test_daemon_stress_never_evicts_pinned_budget_holds(tmp_path):
+    """Request threads run the scheduler's step pattern — ``ensure(pin=True)``
+    … verify bytes … ``release()`` — under a tight budget while the daemon
+    concurrently rotates traces, replans, preloads promotions, and evicts
+    demotions. A pinned unit must never be evicted or zeroed mid-step, and
+    the budget/bookkeeping must be exact once the dust settles."""
+    budget = 4 * UNIT_BYTES
+    tp, data, units, reach = _mini(tmp_path, budget=budget)
+    keys = [u.key for u in units]
+    daemon = RetierDaemon(tp, reach, interval_steps=1, decay=0.5)
+    errors: list = []
+    stop = threading.Event()
+
+    def requester(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(40):
+                step = [str(k) for k in rng.choice(keys, size=2, replace=False)]
+                tp.ensure(step, pin=True)
+                try:
+                    # the mid-step invariant: pinned units stay RESIDENT
+                    # with exact bytes no matter what the daemon applies
+                    for k in step:
+                        assert tp.is_resident(k), f"pinned {k} not resident"
+                        u = units[keys.index(k)]
+                        np.testing.assert_array_equal(
+                            _rows_of(tp, u), data[u.rows[0]: u.rows[1]])
+                finally:
+                    tp.release(step)
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    def daemon_loop():
+        try:
+            while not stop.is_set():
+                daemon.tick()
+                time.sleep(0.002)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=requester, args=(i,)) for i in range(4)]
+    dt = threading.Thread(target=daemon_loop)
+    dt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    dt.join()
+
+    assert not errors, errors
+    assert daemon.stats.applies > 0          # the daemon really ran
+    assert daemon.stats.invariant_checks == daemon.stats.applies
+    res = tp.residency
+    # all pins released and the daemon's sync preloads respect eviction
+    # rules → the budget holds at rest, and bookkeeping is exact
+    assert res.resident_bytes <= budget
+    resident = res.resident_keys
+    assert res.resident_bytes == len(resident) * UNIT_BYTES
+    for u in units:
+        expect = (data[u.rows[0]: u.rows[1]] if u.key in resident
+                  else np.zeros((ROWS, COLS), np.float32))
+        np.testing.assert_array_equal(_rows_of(tp, u), expect)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: scheduler + daemon, outputs identical, compaction published
+# ---------------------------------------------------------------------------
+
+ARCH = "mixtral-8x22b"
+PROMPT_LEN = 6
+MAX_SEQ = 16
+
+
+@pytest.fixture(scope="module")
+def app(tmp_path_factory):
+    cfg = get_reduced(ARCH).replace(collect_moe_usage=True)
+    model = build_model(cfg)
+    profile = DeploymentProfile(resident_experts=1, hot_vocab_fraction=0.25,
+                                min_tier1_bytes=1024, vocab_row_group=128)
+    res = analyze(model, profile, trace_B=1, trace_S=16)
+    params = model.init(jax.random.PRNGKey(0))
+    outdir = str(tmp_path_factory.mktemp("retierd"))
+    build_artifact(params, res, outdir)
+    return cfg, model, res, outdir
+
+
+def test_scheduler_outputs_identical_daemon_on_vs_off(app, tmp_path):
+    """The acceptance gate: live re-tiering may move bytes, never tokens —
+    under eviction pressure, with the daemon compacting the artifact as it
+    goes and the scheduler feeding it per-request trace tags."""
+    cfg, model, res, outdir = app
+    prompts = [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(70 + i), (PROMPT_LEN,), 0, cfg.vocab_size))
+        for i in range(5)
+    ]
+    steps = [4, 3, 5, 4, 3]
+    budget = res.plan.tier1_bytes // 2
+
+    def serve(**cold_kw):
+        with cold_start(model, outdir, res, mode="after2",
+                        warm_shapes=((1, PROMPT_LEN),),
+                        device_budget_bytes=budget, **cold_kw) as server:
+            sched = ContinuousBatchingScheduler(
+                GenerationEngine(server, max_seq=MAX_SEQ), max_batch=3)
+            reqs = [sched.submit(p, n) for p, n in zip(prompts, steps)]
+            sched.run()
+            assert all(r.done and r.error is None for r in reqs)
+            return [r.output for r in reqs], server
+
+    outs_off, _ = serve(prefetch=True)
+    outs_on, server = serve(prefetch=True, retier_online=True,
+                            retier_interval=2, retier_compact_every=1)
+    for got, ref in zip(outs_on, outs_off):
+        np.testing.assert_array_equal(got, ref)
+
+    daemon = server.retier_daemon
+    assert daemon is not None and daemon.stats.applies > 0
+    assert daemon.stats.invariant_checks == daemon.stats.applies
+    # scheduler-aware profiling reached the daemon's merged history
+    merged = daemon.merged_trace
+    assert merged is not None and merged.request_transitions
+    # periodic compaction published the adapted artifact next to the
+    # original, rename-committed (no .partial left behind)
+    import json as _json
+    import os
+    compact = outdir.rstrip("/") + "-compact"
+    assert os.path.isdir(compact)
+    assert not os.path.exists(compact + ".partial")
+    with open(os.path.join(compact, "artifact.json")) as f:
+        art = _json.load(f)
+    live = daemon.tiered.plan
+    for path, d in art["decisions"].items():
+        assert d["tier"] == live.decisions[path].tier
+    # a compaction-published hot set boots the next cold start directly
+    some = [p for p, d in art["decisions"].items() if d["resident_units"]]
+    assert some, "compacted artifact lost the adapted hot set"

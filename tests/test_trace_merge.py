@@ -1,0 +1,160 @@
+"""AccessTrace lifecycle: window merging with decay + the versioned JSON
+schema (DESIGN.md §12.2).
+
+Property-style (seeded-random, deterministic) coverage of the merge
+contract the online re-tiering daemon depends on:
+  * decay=1 ⇒ plain field-wise sum of the two windows;
+  * decay=0 ⇒ exactly the newest window (history fully forgotten);
+  * merge is deterministic and non-mutating;
+  * counts decaying below the prune threshold genuinely leave the trace;
+  * schema-version mismatch raises; v1 documents still load; unknown
+    versions don't; merged (fractional-count) traces round-trip through
+    the versioned JSON byte-identically.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import AccessTrace
+
+KEYS = [f"u{i}" for i in range(12)]
+
+
+def _random_trace(seed: int, *, n_batches: int = 15, with_requests: bool = False) -> AccessTrace:
+    rng = np.random.default_rng(seed)
+    t = AccessTrace()
+    for i in range(n_batches):
+        keys = list(rng.choice(KEYS, size=int(rng.integers(1, 5)), replace=False))
+        cold = [k for k in keys if rng.random() < 0.5]
+        t.record(keys, cold, phase=str(rng.choice(["prefill", "decode", ""])))
+        if with_requests:
+            rid = int(rng.integers(0, 3))
+            t.record_request(rid, keys[: max(1, len(keys) // 2)])
+    return t
+
+
+def _sum_counts(a: dict, b: dict) -> dict:
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = out.get(k, 0) + v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decay semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_merge_decay_one_is_plain_sum(seed):
+    old = _random_trace(seed, with_requests=True)
+    new = _random_trace(seed + 100, with_requests=True)
+    m = old.merge(new, decay=1.0)
+    assert m.batches == old.batches + new.batches
+    assert m.touches == _sum_counts(old.touches, new.touches)
+    assert m.faults == _sum_counts(old.faults, new.faults)
+    assert m.pairs == _sum_counts(old.pairs, new.pairs)
+    assert m.request_pairs == _sum_counts(old.request_pairs, new.request_pairs)
+    for k in set(old.transitions) | set(new.transitions):
+        assert m.transitions[k] == _sum_counts(
+            old.transitions.get(k, {}), new.transitions.get(k, {}))
+    for k in set(old.phases) | set(new.phases):
+        assert m.phases[k] == _sum_counts(old.phases.get(k, {}), new.phases.get(k, {}))
+    # plain int sums stay ints — the canonical-number rule keeps a decay=1
+    # pipeline byte-compatible with unmerged traces
+    assert all(isinstance(v, int) for v in m.touches.values())
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_merge_decay_zero_is_newest_window_only(seed):
+    old = _random_trace(seed, with_requests=True)
+    new = _random_trace(seed + 200, with_requests=True)
+    m = old.merge(new, decay=0.0)
+    # the merged document IS the newest window's document
+    assert m.to_dict() == new.to_dict()
+    assert m.to_json() == new.to_json()
+
+
+def test_merge_fractional_decay_scales_then_adds():
+    old = AccessTrace()
+    old.record(["a", "b"], ["a"], "prefill")
+    old.record(["a"], [], "decode")  # a touched twice total
+    new = AccessTrace()
+    new.record(["a", "c"], ["c"], "decode")
+    m = old.merge(new, decay=0.5)
+    assert m.touches == {"a": 2.0, "b": 0.5, "c": 1}  # 2*0.5+1, 1*0.5, 0+1
+    assert m.faults == {"a": 0.5, "c": 1}
+    assert m.batches == 2  # 2*0.5 + 1, normalized back to int
+
+
+def test_merge_prunes_decayed_entries():
+    """A unit nobody touches again decays out of the profile entirely —
+    the demotion path depends on absence, not on a lingering 1e-9."""
+    old = AccessTrace()
+    old.record(["stale"], ["stale"], "prefill")
+    empty = AccessTrace()
+    m = old
+    for _ in range(3):  # 1 → 0.5 → pruned (default prune_below=0.5)
+        m = m.merge(empty, decay=0.5)
+    assert "stale" not in m.touches and "stale" not in m.faults
+    # replan semantics: an absent key counts as untouched
+    assert m.touches.get("stale", 0) == 0
+
+
+def test_merge_invalid_decay_rejected():
+    t = AccessTrace()
+    for bad in (-0.1, 1.1):
+        with pytest.raises(ValueError, match="decay"):
+            t.merge(AccessTrace(), decay=bad)
+
+
+# ---------------------------------------------------------------------------
+# determinism + non-mutation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("decay", [0.0, 0.25, 0.5, 1.0])
+def test_merge_deterministic_and_non_mutating(decay):
+    old1, old2 = _random_trace(7, with_requests=True), _random_trace(7, with_requests=True)
+    new1, new2 = _random_trace(8, with_requests=True), _random_trace(8, with_requests=True)
+    before_old, before_new = old1.to_json(), new1.to_json()
+    m1 = old1.merge(new1, decay=decay)
+    m2 = old2.merge(new2, decay=decay)
+    assert m1.to_json() == m2.to_json()  # same inputs → byte-identical
+    assert old1.to_json() == before_old  # inputs untouched
+    assert new1.to_json() == before_new
+    # merged trace carries no in-flight chain state
+    assert m1._last_batch == [] and m1._last_by_request == {}
+
+
+# ---------------------------------------------------------------------------
+# versioned JSON
+# ---------------------------------------------------------------------------
+
+def test_versioned_json_roundtrip_of_merged_trace(tmp_path):
+    """Fractional counts from a decayed merge survive save → load → save
+    byte-identically, version field included."""
+    m = _random_trace(3, with_requests=True).merge(
+        _random_trace(4, with_requests=True), decay=0.5)
+    s = m.to_json()
+    assert AccessTrace.from_json(s).to_json() == s
+    p = str(tmp_path / "merged.json")
+    m.save(p)
+    assert AccessTrace.load(p).to_json() == s
+    with open(p) as f:
+        doc = json.load(f)
+    assert doc["version"] == AccessTrace.VERSION
+    assert "request_transitions" in doc and "request_pairs" in doc
+
+
+def test_version_mismatch_raises_everywhere():
+    a, b = AccessTrace(), AccessTrace()
+    b.version = 99
+    with pytest.raises(ValueError, match="schema"):
+        a.merge(b)
+    with pytest.raises(ValueError, match="version"):
+        AccessTrace.from_dict({"version": 99})
+    # v1 documents (pre request-attribution) still load, new fields empty
+    t = AccessTrace.from_dict({"version": 1, "batches": 2,
+                               "touches": {"a": 2}, "faults": {"a": 1}})
+    assert t.touches == {"a": 2} and t.request_transitions == {}
