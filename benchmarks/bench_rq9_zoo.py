@@ -1,0 +1,208 @@
+"""RQ9 (beyond-paper, DESIGN.md §13): can N models share ONE host device
+budget — the FaaSLight density story — without changing a single output
+token, and what does aggregate latency pay per extra co-tenant?
+
+FaaSLight's economics come from packing many functions per host; the
+cold-start taxonomy literature identifies per-host density as the primary
+driver of cold-start frequency. Until the ``HostArbiter`` every model
+policed a *private* device budget — N co-resident models could jointly
+exceed the host without anyone noticing. Here N small models are served
+concurrently under one arbiter-owned budget (50% of their summed tier-1
+bytes — real cross-tenant eviction pressure) and we measure the
+aggregate-latency-vs-models-per-host curve:
+
+  * **solo baselines** — each model served alone, unlimited budget: the
+    reference outputs and per-model reference latency;
+  * **zoo passes** — for n = 1..N, the first n models cold-start against
+    one shared ``HostArbiter`` (presets resolve to *shares*: every tenant
+    gets an equal slice-weight) and serve their request sets on
+    concurrent threads while the arbiter steals budget back and forth.
+
+Correctness gates, asserted before any number is reported:
+  * every model's tokens under the shared budget are IDENTICAL to its
+    solo run (cross-tenant eviction is a latency event, never a failure);
+  * the arbiter's audit passes (exact per-tenant byte bookkeeping) and
+    at-rest resident bytes fit the host budget once all pins drop.
+
+Standalone: ``python -m benchmarks.bench_rq9_zoo [--smoke] [--json-out F]``
+(wired into benchmarks/run.py as the ``rq9`` section and the CI smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, setup_app, timed_cold_start
+from repro.core import HostArbiter, OptionalStore
+from repro.serving import GenerationEngine
+
+# three small families: MoE, dense, dense-GQA — disjoint artifacts, one host
+ZOO_ARCHS = ("mixtral-8x22b", "yi-34b", "phi3-medium-14b")
+
+
+def _prompts(app, *, n: int, prompt_len: int):
+    return [
+        np.asarray(jax.random.randint(jax.random.PRNGKey(900 + 17 * i),
+                                      (prompt_len,), 0, app.cfg.vocab_size))
+        for i in range(n)
+    ]
+
+
+def _serve(server, prompts, gen_steps: int, max_seq: int):
+    eng = GenerationEngine(server, max_seq=max_seq)
+    outs = []
+    for p in prompts:
+        out, _ = eng.generate(jnp.asarray(p[None, :]), gen_steps)
+        outs.append(np.asarray(out[0]))
+    return outs
+
+
+def run(
+    base_dir: str,
+    archs=ZOO_ARCHS,
+    *,
+    prompt_len: int = 8,
+    gen_steps: int = 6,
+    n_requests: int = 2,
+    budget_frac: float = 0.5,
+    sizes=None,  # which zoo sizes to run (default 1..len(archs))
+) -> dict:
+    apps = [setup_app(a, base_dir) for a in archs]
+    max_seq = prompt_len + gen_steps + 2
+    prompts = {a.arch: _prompts(a, n=n_requests, prompt_len=prompt_len) for a in apps}
+
+    # -- solo baselines: each model alone, unlimited budget -------------------
+    solo_outs, solo_s = {}, {}
+    for app in apps:
+        t0 = time.perf_counter()
+        with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                              compile_warm=False, prefetch=False) as server:
+            solo_outs[app.arch] = _serve(server, prompts[app.arch], gen_steps, max_seq)
+        solo_s[app.arch] = time.perf_counter() - t0
+
+    # -- zoo passes: first n models under ONE arbiter-owned budget ------------
+    sizes = list(sizes) if sizes else list(range(1, len(apps) + 1))
+    curve = []
+    for n in sizes:
+        group = apps[:n]
+        tier1 = {a.arch: a.result.plan.tier1_bytes for a in group}
+        # floors keep every tenant able to hold its two largest units even
+        # when a hot neighbour squeezes it (the starvation guarantee)
+        floors = {}
+        for a in group:
+            store = OptionalStore(os.path.join(a.outdir, "optional.blob"))
+            floors[a.arch] = 2 * max(
+                (e.rsize for e in store.entries.values()), default=0)
+            store.close()
+        budget = max(int(budget_frac * sum(tier1.values())), sum(floors.values()))
+        arb = HostArbiter(budget_bytes=budget)
+        servers = []
+        try:
+            for a in group:
+                servers.append(timed_cold_start(
+                    a, "after2", warm_shape=(1, prompt_len), compile_warm=False,
+                    residency="stats", prefetch=False,
+                    host_arbiter=arb, tenant_name=a.arch,
+                    tenant_floor_bytes=floors[a.arch],
+                ).__enter__())
+            zoo_outs: dict = {}
+            errors: list = []
+
+            def _worker(app, server):
+                try:
+                    zoo_outs[app.arch] = _serve(
+                        server, prompts[app.arch], gen_steps, max_seq)
+                except Exception as e:  # surfaced below; a silent thread
+                    errors.append((app.arch, repr(e)))  # death would "pass"
+
+            threads = [
+                threading.Thread(target=_worker, args=(a, s), daemon=True)
+                for a, s in zip(group, servers)
+            ]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall_s = time.perf_counter() - t0
+            assert not errors, f"serving threads failed: {errors}"
+
+            # gate 1: per-model output parity with the solo baselines
+            for a in group:
+                for got, ref in zip(zoo_outs[a.arch], solo_outs[a.arch]):
+                    np.testing.assert_array_equal(got, ref)
+            # gate 2: exact bookkeeping + at-rest budget (pins all dropped)
+            audit = arb.audit()
+            assert audit["pinned_bytes"] == 0, audit
+            assert audit["resident_bytes"] <= budget, audit
+            stats = arb.stats.to_dict()
+        finally:
+            for s in servers:
+                s.__exit__(None, None, None)
+        curve.append({
+            "models": n,
+            "budget_bytes": budget,
+            "wall_s": wall_s,
+            "solo_sum_s": sum(solo_s[a.arch] for a in group),
+            "resident_bytes_at_rest": audit["resident_bytes"],
+            "evictions": stats["evictions"],
+            "cross_evictions": stats["cross_evictions"],
+            "overshoots": stats["overshoots"],
+        })
+
+    return {
+        "archs": [a.arch for a in apps],
+        "n_requests": n_requests,
+        "gen_steps": gen_steps,
+        "budget_frac": budget_frac,
+        "curve": curve,
+        "outputs_identical": True,
+    }
+
+
+def main(base_dir: str, *, smoke: bool = False, archs=None) -> list[str]:
+    archs = archs or ZOO_ARCHS
+    kw = dict(gen_steps=4, sizes=[len(archs)]) if smoke else {}
+    r = run(base_dir, archs, **kw)
+    rows = []
+    for pt in r["curve"]:
+        rows.append(csv_row(
+            f"rq9_zoo/{pt['models']}-models",
+            pt["wall_s"] * 1e6,
+            f"budget={pt['budget_bytes']}B"
+            f"|wall_s={pt['wall_s']:.3f} solo_sum_s={pt['solo_sum_s']:.3f}"
+            f"|evictions={pt['evictions']} cross={pt['cross_evictions']} "
+            f"overshoots={pt['overshoots']}"
+            f"|resident_at_rest={pt['resident_bytes_at_rest']}B"
+            f"|outputs=identical",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one 3-model pass, 2 prompts x 4 steps each")
+    ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
+    ap.add_argument("--json-out", default="",
+                    help="also write the CSV rows as a JSON list here")
+    args = ap.parse_args()
+    scratch = args.out or tempfile.mkdtemp(prefix="faaslight_rq9_")
+    print("name,us_per_call,derived")
+    rows = main(scratch, smoke=args.smoke)
+    for row in rows:
+        print(row)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"section": "rq9", "rows": rows}, f, indent=2)
+    sys.exit(0)

@@ -1,7 +1,13 @@
 """Checkpointing: atomic/async/keep-N manager over a bf16-safe raw-binary
 array bundle format with partial reads (tier-aware cold start)."""
 
-from repro.checkpoint.manager import CheckpointManager, RestoreResult, commit_dir
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    RestoreResult,
+    clean_partials,
+    commit_dir,
+    orphaned_partials,
+)
 from repro.checkpoint.tensorstore_lite import (
     bundle_nbytes,
     read_bundle,
@@ -13,6 +19,8 @@ __all__ = [
     "CheckpointManager",
     "RestoreResult",
     "commit_dir",
+    "orphaned_partials",
+    "clean_partials",
     "write_bundle",
     "read_bundle",
     "read_index",

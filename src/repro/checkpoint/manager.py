@@ -61,6 +61,35 @@ def commit_dir(tmp: str, final: str) -> None:
     os.replace(tmp, final)
 
 
+def orphaned_partials(root: str) -> list[str]:
+    """Staging directories a crash left behind: every ``*.partial`` dir
+    under ``root`` (non-recursive). A ``.partial`` that still exists was
+    never renamed into place, so deleting it can never touch a committed
+    artifact — that is the whole point of the staging-suffix convention
+    (checkpoint step dirs, the daemon's ``-compact`` rewrite, trace
+    saves all use it)."""
+    try:
+        names = sorted(os.listdir(root))
+    except FileNotFoundError:
+        return []
+    return [
+        os.path.join(root, n)
+        for n in names
+        if n.endswith(".partial") and os.path.isdir(os.path.join(root, n))
+    ]
+
+
+def clean_partials(root: str) -> list[str]:
+    """Remove every orphaned staging dir under ``root``; returns the paths
+    removed. Safe to run concurrently with a writer only at startup —
+    callers invoke it before any writer exists (crash recovery)."""
+    removed = []
+    for p in orphaned_partials(root):
+        shutil.rmtree(p, ignore_errors=True)
+        removed.append(p)
+    return removed
+
+
 @dataclass
 class RestoreResult:
     step: int

@@ -5,6 +5,7 @@ telemetry, trace-driven replanner, predictive prefetch) and its online
 form (the restart-free RetierDaemon). See DESIGN.md §4, §11 and §12."""
 
 from repro.core.analyzer import AnalysisResult, analyze, build_artifact, write_monolithic
+from repro.core.arbiter import HostArbiter, HostArbiterStats
 from repro.core.entrypoints import (
     SERVING_MULTIMODAL_PROFILE,
     SERVING_PROFILE,
@@ -46,6 +47,8 @@ __all__ = [
     "recognize_entries",
     "eliminate_collections",
     "eliminate_files",
+    "HostArbiter",
+    "HostArbiterStats",
     "AccessTrace",
     "LoadEvent",
     "LoaderStats",

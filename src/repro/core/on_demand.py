@@ -377,6 +377,13 @@ class ResidencyManager:
         self._state: dict[str, str] = {}
         self._nbytes: dict[str, int] = {}
         self._pins: dict[str, int] = {}
+        # logical access clock: advanced once per public access (one ensure
+        # batch = one tick), stamped onto keys at commit/touch. Keys
+        # committed by the same batch share a stamp; ``select_victims``
+        # breaks those ties by key so eviction order never depends on dict
+        # insertion order (reproducible rq2/rq8 byte counts).
+        self._clock = 0
+        self._stamp: dict[str, int] = {}
         # ordered set of RESIDENT keys, old→new; dict order IS the recency
         self._lru: OrderedDict[str, None] = OrderedDict()
         self._loaders: dict[str, str] = {}   # LOADING key -> claimant source
@@ -406,6 +413,18 @@ class ResidencyManager:
         """Source that owns an in-flight LOADING key ("" if none)."""
         return self._loaders.get(key, "")
 
+    def charged_bytes(self) -> int:
+        """Recomputed sum of per-key charges over the RESIDENT set — the
+        audit cross-check against the running ``resident_bytes`` counter
+        (caller holds the lock)."""
+        return sum(self._nbytes.get(k, 0) for k in self._lru)
+
+    def advance_clock(self) -> int:
+        """One tick per public access batch (caller holds the lock). Every
+        commit/touch within the batch shares the new stamp."""
+        self._clock += 1
+        return self._clock
+
     # -- transitions (caller MUST hold the lock) ------------------------------
     def begin_load(self, key: str, source: str) -> bool:
         """COLD → LOADING. False if already loading/resident (caller skips
@@ -425,6 +444,7 @@ class ResidencyManager:
         self._loaders.pop(key, None)
         self._lru[key] = None
         self._lru.move_to_end(key)
+        self._stamp[key] = self._clock
         if source == "prefetch":
             self._unclaimed_prefetch.add(key)
         self.resident_bytes += nbytes
@@ -445,6 +465,7 @@ class ResidencyManager:
         consume the credit a later demand touch should claim."""
         if key in self._lru:
             self._lru.move_to_end(key)
+            self._stamp[key] = self._clock
         if claim_prefetch and key in self._unclaimed_prefetch:
             self._unclaimed_prefetch.discard(key)
             return "prefetch"
@@ -464,9 +485,12 @@ class ResidencyManager:
 
     def select_victims(self, need_bytes: int) -> list[str]:
         """Oldest-first unpinned RESIDENT keys freeing ≥ need_bytes (best
-        effort — may free less if the evictable pool is too small)."""
+        effort — may free less if the evictable pool is too small). Keys
+        with equal access stamps (committed by one batched ensure) tie-break
+        by key, so eviction order is deterministic regardless of the dict
+        insertion order the batch happened to produce."""
         victims, freed = [], 0
-        for k in self._lru:  # iteration order = old → new
+        for k in sorted(self._lru, key=lambda k: (self._stamp.get(k, 0), k)):
             if freed >= need_bytes:
                 break
             if self._pins.get(k, 0) > 0:
@@ -481,6 +505,7 @@ class ResidencyManager:
         nb = self._nbytes.pop(key, 0)
         self._state[key] = COLD
         self._lru.pop(key, None)
+        self._stamp.pop(key, None)
         self._sources.pop(key, None)
         self._unclaimed_prefetch.discard(key)
         self._evicted_once.add(key)
@@ -534,6 +559,13 @@ class TieredParams:
         self._phase = ""  # request phase tag for trace/LoadEvent (DESIGN.md §11)
         self._lock = threading.RLock()
         self.residency = ResidencyManager(self._lock, budget_bytes=device_budget_bytes)
+        # host-level governance (core/arbiter.py, DESIGN.md §13): when a
+        # HostArbiter registers this instance it sets these, disables the
+        # private budget, and the install paths below route make-room
+        # through it — called with NO lock held (arbiter lock orders
+        # before every tenant lock).
+        self.arbiter = None
+        self.tenant_name = ""
         self._all_units: dict[str, Unit] = {}
         for d in plan.decisions.values():
             for u in d.units:
@@ -590,6 +622,7 @@ class TieredParams:
         """Force-mark without moving bytes (testing/bootstrap escape hatch)."""
         with self._lock:
             if self.residency.begin_load(key, "mark"):
+                self.residency.advance_clock()
                 self.residency.commit_load(key, self._unit_nbytes(key), "mark")
 
     @property
@@ -629,6 +662,7 @@ class TieredParams:
         wait_for: list[tuple[str, str]] = []  # (key, in-flight loader source)
         cold: list[str] = []  # not RESIDENT at demand time (trace faults)
         with self._lock:
+            res.advance_clock()  # one stamp per ensure batch
             for k in keys:
                 st = res.state_of(k)
                 if st == RESIDENT:
@@ -672,6 +706,10 @@ class TieredParams:
                         for k in ordered[i:]:
                             res.abort_load(k)
                     raise
+                if self.arbiter is not None:
+                    # cross-tenant make-room BEFORE taking our own lock
+                    # (arbiter lock orders first; it may lock other tenants)
+                    self.arbiter.make_room(self, arr.nbytes)
                 with self._lock:
                     self._evict_to_fit(arr.nbytes)
                     self._install(self._all_units[key], arr)
@@ -727,6 +765,8 @@ class TieredParams:
             with self._lock:
                 res.abort_load(key)
             raise
+        if self.arbiter is not None:
+            self.arbiter.make_room(self, arr.nbytes)
         with self._lock:
             self._evict_to_fit(arr.nbytes)
             self._install(self._all_units[key], arr)
@@ -749,6 +789,7 @@ class TieredParams:
         """Refresh LRU recency without demand-access accounting (used by
         predictive hints on already-resident units)."""
         with self._lock:
+            self.residency.advance_clock()
             for k in keys:
                 self.residency.touch(k, claim_prefetch=False)
 
@@ -760,6 +801,10 @@ class TieredParams:
         with self._lock:
             self.residency.release(keys)
             self._evict_to_budget()
+        if self.arbiter is not None:
+            # host-level reclaim happens outside our lock (lock ordering:
+            # the arbiter may need to lock other tenants)
+            self.arbiter.rebalance()
 
     def _evict_to_budget(self) -> None:
         """Evict LRU unpinned units until resident bytes fit the budget.
@@ -798,9 +843,12 @@ class TieredParams:
             return 0
         nbytes = arr.nbytes
         host = jnp.asarray(arr, dtype=self._flat[unit.path].dtype)
+        if self.arbiter is not None:
+            self.arbiter.make_room(self, nbytes)
         with self._lock:
             if self.residency.state_of(key) != LOADING:
                 return 0
+            self.residency.advance_clock()
             self._evict_to_fit(nbytes)
             t0 = time.perf_counter()
             self._install(unit, host)
@@ -847,6 +895,21 @@ class TieredParams:
                 if self.residency.is_resident(k) and self.residency.pins_of(k) == 0:
                     freed += self._evict_one(k)
         return freed
+
+    def eviction_candidates(self) -> list:
+        """Locked snapshot of this instance's evictable pool for the host
+        arbiter's global victim pass (DESIGN.md §13.1): ``(key, nbytes,
+        stamp)`` for every RESIDENT, unpinned unit, oldest stamp first.
+        LOADING and pinned keys are structurally absent; the arbiter's
+        subsequent ``evict()`` re-validates under the lock anyway (the
+        snapshot may race a pin)."""
+        with self._lock:
+            res = self.residency
+            return [
+                (k, res._nbytes.get(k, 0), res._stamp.get(k, 0))
+                for k in res._lru
+                if res.pins_of(k) == 0
+            ]
 
     # -- installation --------------------------------------------------------
     def _install(self, unit: Unit, arr: np.ndarray) -> None:

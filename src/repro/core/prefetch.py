@@ -124,6 +124,7 @@ class PrefetchStats:
     loaded_units: int = 0
     loaded_bytes: int = 0
     skipped_resident: int = 0  # hints dropped because already resident/queued
+    skipped_headroom: int = 0  # hints dropped by the host arbiter's gate
     batches: int = 0
     errors: int = 0
     observed: int = 0          # demand-accessed keys fed to observe()
@@ -136,6 +137,7 @@ class PrefetchStats:
             "loaded_units": self.loaded_units,
             "loaded_bytes": self.loaded_bytes,
             "skipped_resident": self.skipped_resident,
+            "skipped_headroom": self.skipped_headroom,
             "batches": self.batches,
             "errors": self.errors,
             "observed": self.observed,
@@ -185,13 +187,17 @@ class Prefetcher:
     def hint(self, keys: Iterable[str]) -> int:
         """Offer access hints. Non-blocking; cold keys join the FIFO hint
         set, already-resident keys get an LRU-recency touch (a predicted
-        reuse should not be the next eviction victim). Returns keys
-        accepted for loading."""
+        reuse should not be the next eviction victim). Under a
+        ``HostArbiter`` (DESIGN.md §13.1) cold hints are additionally
+        gated on headroom: a speculative load that would force co-tenant
+        evictions is dropped rather than queued — demand ``ensure()``
+        stays ungated. Returns keys accepted for loading."""
         if self._stop.is_set():
             return 0
         accepted = 0
         touch: list[str] = []
         res = self.tiered.residency
+        arb = self.tiered.arbiter
         with self._hint_lock:
             for k in keys:
                 self.stats.hints += 1
@@ -199,6 +205,11 @@ class Prefetcher:
                     self.stats.skipped_resident += 1
                     if res.is_resident(k):
                         touch.append(k)
+                    continue
+                if arb is not None and not arb.prefetch_headroom(
+                    self.tiered, self.tiered._unit_nbytes(k)
+                ):
+                    self.stats.skipped_headroom += 1
                     continue
                 self._hints[k] = None
                 accepted += 1

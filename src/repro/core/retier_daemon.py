@@ -232,6 +232,13 @@ class RetierDaemon:
         )
         self._apply(new_plan, report)
         self.last_report = report
+        arb = getattr(self.tiered, "arbiter", None)
+        if arb is not None:
+            # host-governance feedback (DESIGN.md §13.2): hand the arbiter
+            # this tenant's decayed heat for victim scoring, and fold the
+            # tick's observed refault/overshoot deltas into share tuning
+            arb.note_trace(self.tiered, self._merged)
+            arb.observe_tick(self.tiered)
         return report
 
     def _apply(self, new_plan, report: RetierReport) -> None:

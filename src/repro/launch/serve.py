@@ -46,6 +46,7 @@ from repro.configs import get_config, get_reduced
 from repro.core import (
     AccessTrace,
     DeploymentProfile,
+    HostArbiter,
     TransitionPredictor,
     analyze,
     build_artifact,
@@ -74,6 +75,12 @@ def main(argv=None) -> int:
                     help="residency budget preset (DESIGN.md §4.2); also shapes the profile")
     ap.add_argument("--device-budget-bytes", type=int, default=0,
                     help="override the preset's tier-1 device budget (0 = preset default)")
+    ap.add_argument("--host-budget-bytes", type=int, default=0,
+                    help="govern residency through a HostArbiter with this "
+                         "host-wide device budget (DESIGN.md §13) instead of a "
+                         "private per-model budget — the single-tenant form of "
+                         "the multi-model pool benchmarks/bench_rq9_zoo.py "
+                         "exercises (after2 only; 0 = off)")
     ap.add_argument("--no-prefetch", action="store_true",
                     help="disable the async prefetcher even where the preset enables it")
     ap.add_argument("--concurrency", type=int, default=0,
@@ -109,6 +116,11 @@ def main(argv=None) -> int:
     if (args.profile_out or args.retier_from or args.retier_online) and args.mode != "after2":
         ap.error("--profile-out/--retier-from/--retier-online need the "
                  "two-tier runtime (--mode after2)")
+    if args.host_budget_bytes and args.mode != "after2":
+        ap.error("--host-budget-bytes governs the tier-1 residency layer "
+                 "(--mode after2 only)")
+    if args.host_budget_bytes < 0:
+        ap.error("--host-budget-bytes must be >= 0")
     if not 0.0 <= args.retier_decay <= 1.0:
         ap.error("--retier-decay must be in [0, 1]")
     if args.retier_interval < 1:
@@ -178,10 +190,12 @@ def main(argv=None) -> int:
     # the request path raises (a leaked reader/uploader thread would hang
     # the process on exit)
     failed = 0
+    arbiter = HostArbiter(args.host_budget_bytes) if args.host_budget_bytes else None
     with cold_start(model, outdir, result if args.mode == "after2" else None,
                     mode=args.mode, warm_shapes=((warm_B, args.prompt_len),),
                     residency=args.policy if args.mode == "after2" else None,
                     device_budget_bytes=args.device_budget_bytes or None,
+                    host_arbiter=arbiter,
                     prefetch=False if args.no_prefetch else None,
                     trace=bool(args.profile_out), predictor=predictor,
                     retier_online=args.retier_online,
@@ -212,6 +226,15 @@ def main(argv=None) -> int:
                 ps = server.prefetcher.stats
                 print(f"[serve] predictor: observed {ps.observed} keys, "
                       f"predicted {ps.predicted} ahead-of-schedule loads")
+        if arbiter is not None:
+            audit = arbiter.audit()
+            hs = arbiter.stats
+            print(f"[serve] host arbiter: {audit['resident_bytes']:,}B resident "
+                  f"/ {audit['budget_bytes']:,}B host budget "
+                  f"({audit['pinned_bytes']:,}B pinned); "
+                  f"{hs.evictions} evictions ({hs.evicted_bytes:,}B), "
+                  f"{hs.overshoots} overshoots, "
+                  f"{hs.headroom_denials} prefetch headroom denials")
         if server.retier_daemon is not None:
             ds = server.retier_daemon.stats
             print(f"[serve] online retier: {ds.ticks} ticks, {ds.applies} applies "

@@ -24,6 +24,13 @@ residency layer (``RESIDENCY_PRESETS``):
   full   — unlimited budget + prefetch (≈ *before* warm performance once
            every unit has been touched; tiered artifact layout retained)
 An explicit ``device_budget_bytes`` overrides the preset's budget.
+
+Multi-model hosting (DESIGN.md §13): pass the same ``host_arbiter=`` handle
+to several ``cold_start()`` calls and the servers share ONE host-wide
+device budget — each preset's budget *fraction* is reinterpreted as the
+tenant's relative **share** of that budget (strict→0.25, stats→0.5,
+full→1.0), and eviction becomes a global, heat-weighted decision across
+every co-resident model instead of a private per-model one.
 """
 
 from __future__ import annotations
@@ -39,6 +46,7 @@ import numpy as np
 
 from repro.checkpoint import tensorstore_lite as tsl
 from repro.core.analyzer import AnalysisResult
+from repro.core.arbiter import HostArbiter
 from repro.core.on_demand import AccessTrace, TieredParams
 from repro.core.optional_store import OptionalStore
 from repro.core.prefetch import Prefetcher, TransitionPredictor
@@ -109,10 +117,13 @@ class ColdStartServer:
         self._compiled: dict[tuple, Callable] = {}
 
     def close(self) -> None:
-        """Stop the prefetch threads and release the store handle."""
+        """Stop the prefetch threads, leave the host pool (if arbitered),
+        and release the store handle."""
         if self.prefetcher is not None:
             self.prefetcher.stop()
             self.prefetcher = None
+        if self.tiered is not None and self.tiered.arbiter is not None:
+            self.tiered.arbiter.unregister(self.tiered.tenant_name)
         if self.store is not None:
             self.store.close()
             self.store = None
@@ -167,6 +178,10 @@ def cold_start(
     put: Optional[Callable] = None,  # leaf device_put override (sharded serving)
     residency: Optional[str] = None,  # RESIDENCY_PRESETS name (after2 only)
     device_budget_bytes: Optional[int] = None,  # overrides the preset budget
+    host_arbiter: Optional[HostArbiter] = None,  # shared host budget (DESIGN.md §13)
+    tenant_name: Optional[str] = None,   # arbiter registration name (default: cfg.name)
+    tenant_share: Optional[float] = None,  # overrides the preset-derived share
+    tenant_floor_bytes: int = 0,         # arbiter never evicts below this
     prefetch: Optional[bool] = None,  # overrides the preset prefetch default
     prefetch_batch_units: int = 8,
     trace: bool = False,  # attach an AccessTrace for profiling (DESIGN.md §11)
@@ -230,12 +245,17 @@ def cold_start(
                 live_flat[path] = put(np.zeros(leaf.shape, leaf.dtype))
         tree = tree_from_flat(live_flat)
         _block_until_ready(tree)
-        # resolve the residency preset into a budget + prefetch default
+        # resolve the residency preset into a budget + prefetch default —
+        # or, under a host arbiter, into a relative SHARE of its budget
         budget = device_budget_bytes
         want_prefetch = prefetch
+        share = tenant_share
         if residency is not None:
             frac, preset_prefetch = RESIDENCY_PRESETS[residency]
-            if budget is None and frac is not None:
+            if host_arbiter is not None:
+                if share is None:
+                    share = frac if frac is not None else 1.0
+            elif budget is None and frac is not None:
                 budget = int(frac * plan.tier1_bytes)
                 # keep the machine functional: never below two of the
                 # largest units (one incoming + one pinned)
@@ -244,6 +264,15 @@ def cold_start(
             if want_prefetch is None:
                 want_prefetch = preset_prefetch
         tiered = TieredParams(tree, plan, store, device_budget_bytes=budget)
+        if host_arbiter is not None:
+            # join the host pool BEFORE the hot preload so even cold-start
+            # bytes are admitted by the global make-room path
+            name = tenant_name or getattr(model.cfg, "name", "") or f"tenant-{id(tiered):x}"
+            host_arbiter.register(
+                name, tiered,
+                share=share if share is not None else 1.0,
+                floor_bytes=tenant_floor_bytes,
+            )
         if trace or retier_online:  # the daemon needs a live trace to watch
             tiered.start_trace(AccessTrace())
         # preload the hot set (the paper's offline-profiled module-init list)

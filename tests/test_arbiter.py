@@ -1,0 +1,531 @@
+"""Host-level residency arbiter (DESIGN.md §13).
+
+Covers the arbiter's acceptance contract:
+  * ownership inversion — registration disables the tenant's private
+    budget (restored at unregister) and every make-room decision becomes
+    a global, cross-tenant one;
+  * the victim rule — decayed trace heat weighted by shares, pinned and
+    LOADING keys of EVERY tenant excluded, per-tenant floors never
+    crossed (one hot model cannot starve a neighbour to zero);
+  * exact byte bookkeeping under a shared budget (``audit``), at-rest
+    budget compliance once pins drop, overshoot accounting when pins +
+    floors make the target unreachable;
+  * daemon feedback — refault/overshoot rates retune shares (bounded,
+    renormalized) and the merged trace history feeds victim scoring;
+  * the speculative-load gate — prefetch hints are dropped when they
+    would force co-tenant evictions, demand loads never are;
+  * arbitrary interleavings of register/ensure/pin/evict/unregister keep
+    every invariant (deterministic sequences in the fast suite; the
+    hypothesis-driven search and the threaded cross-tenant stress carry
+    the ``slow`` marker and run in CI's dedicated job — the same
+    20/20-consecutive-runs bar as tests/test_retier_daemon.py).
+"""
+
+import os
+import tempfile
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AccessTrace,
+    HostArbiter,
+    OptionalStore,
+    Prefetcher,
+    RetierDaemon,
+    TieredParams,
+)
+from repro.core.entrypoints import SERVING_PROFILE
+from repro.core.optional_store import write_store
+from repro.core.param_graph import ReachabilityReport
+from repro.core.partition import TierDecision, TierPlan, Unit
+
+ROWS, COLS, N_UNITS = 16, 32, 8
+UNIT_BYTES = ROWS * COLS * 4
+KEYS = [f"emb#rg{g}" for g in range(N_UNITS)]
+
+
+def _mini(tmp_path, budget=None, name="mini", seed=0):
+    """One row-tiered leaf over a real optional store (the loader state
+    machine without a model) — the tests/test_prefetch.py fixture, with a
+    per-tenant data seed so cross-tenant byte mixups can't cancel out."""
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((N_UNITS * ROWS, COLS)).astype(np.float32)
+    units = tuple(
+        Unit(f"emb#rg{g}", "emb", rows=(g * ROWS, (g + 1) * ROWS), nbytes=UNIT_BYTES)
+        for g in range(N_UNITS)
+    )
+    dec = TierDecision("emb", 1, "rows", "test", data.nbytes, units=units)
+    plan = TierPlan({"emb": dec}, SERVING_PROFILE, [])
+    path = str(tmp_path / f"{name}.blob")
+    write_store(path, [(u.key, data[u.rows[0]: u.rows[1]]) for u in units])
+    tp = TieredParams(
+        {"emb": jnp.zeros(data.shape, jnp.float32)}, plan, OptionalStore(path),
+        device_budget_bytes=budget,
+    )
+    return tp, data, units
+
+
+def _rows_of(tp, unit):
+    lo, hi = unit.rows
+    return np.asarray(tp.leaf("emb"))[lo:hi]
+
+
+# ---------------------------------------------------------------------------
+# registration: the ownership inversion
+# ---------------------------------------------------------------------------
+
+def test_register_disables_private_budget_unregister_restores(tmp_path):
+    tp, _, _ = _mini(tmp_path, budget=3 * UNIT_BYTES)
+    arb = HostArbiter(budget_bytes=6 * UNIT_BYTES)
+    arb.register("a", tp, share=1.0)
+    assert tp.arbiter is arb and tp.tenant_name == "a"
+    assert tp.residency.budget_bytes is None      # host governance now
+    # the private budget would have evicted here; the host one has room
+    tp.ensure(KEYS[:5])
+    assert tp.resident_bytes == 5 * UNIT_BYTES
+    arb.unregister("a")
+    assert tp.arbiter is None and tp.tenant_name == ""
+    assert tp.residency.budget_bytes == 3 * UNIT_BYTES   # restored
+    # back under private governance: the next release reclaims the excess
+    tp.release([])
+    assert tp.resident_bytes <= 3 * UNIT_BYTES
+
+
+def test_register_validation(tmp_path):
+    tp1, _, _ = _mini(tmp_path, name="a")
+    tp2, _, _ = _mini(tmp_path, name="b")
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp1, floor_bytes=3 * UNIT_BYTES)
+    with pytest.raises(ValueError, match="already registered"):
+        arb.register("a", tp2)
+    with pytest.raises(ValueError, match="already governed"):
+        HostArbiter(budget_bytes=UNIT_BYTES).register("x", tp1)
+    with pytest.raises(ValueError, match="floors"):
+        arb.register("b", tp2, floor_bytes=2 * UNIT_BYTES)  # 3+2 > 4 units
+    with pytest.raises(ValueError, match="share"):
+        arb.register("b", tp2, share=0.0)
+    with pytest.raises(KeyError):
+        arb.unregister("never-registered")
+    with pytest.raises(ValueError, match="budget_bytes"):
+        HostArbiter(budget_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# the cross-model victim rule
+# ---------------------------------------------------------------------------
+
+def test_two_tenants_share_one_budget_cross_eviction(tmp_path):
+    tp1, d1, u1 = _mini(tmp_path, name="a", seed=1)
+    tp2, d2, u2 = _mini(tmp_path, name="b", seed=2)
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp1)
+    arb.register("b", tp2)
+    tp1.ensure(KEYS[:4])                      # fills the whole host budget
+    assert arb.total_resident_bytes() == 4 * UNIT_BYTES
+    tp2.ensure(KEYS[:2])                      # must displace tenant a's units
+    assert arb.total_resident_bytes() <= 4 * UNIT_BYTES
+    assert tp2.resident_bytes == 2 * UNIT_BYTES
+    assert tp1.resident_bytes == 2 * UNIT_BYTES
+    assert arb.stats.cross_evictions >= 2
+    # evicted rows are placeholder zeros; resident rows are content-exact
+    for tp, data, units in ((tp1, d1, u1), (tp2, d2, u2)):
+        for u in units:
+            expect = (data[u.rows[0]: u.rows[1]] if tp.is_resident(u.key)
+                      else np.zeros((ROWS, COLS), np.float32))
+            np.testing.assert_array_equal(_rows_of(tp, u), expect)
+    arb.audit()
+
+
+def test_pinned_keys_of_any_tenant_never_evicted(tmp_path):
+    tp1, d1, u1 = _mini(tmp_path, name="a", seed=1)
+    tp2, _, _ = _mini(tmp_path, name="b", seed=2)
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp1)
+    arb.register("b", tp2)
+    tp1.ensure(KEYS[:3], pin=True)
+    tp2.ensure(KEYS[:4])                      # pressure against a's pins
+    for k in KEYS[:3]:
+        assert tp1.is_resident(k), f"pinned {k} was evicted cross-tenant"
+    for u in u1[:3]:
+        np.testing.assert_array_equal(_rows_of(tp1, u), d1[u.rows[0]: u.rows[1]])
+    tp1.release(KEYS[:3])
+    assert arb.total_resident_bytes() <= 4 * UNIT_BYTES  # rebalance reclaimed
+
+
+def test_floor_blocks_starvation(tmp_path):
+    tp1, _, _ = _mini(tmp_path, name="a", seed=1)
+    tp2, _, _ = _mini(tmp_path, name="b", seed=2)
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp1, floor_bytes=2 * UNIT_BYTES)
+    arb.register("b", tp2)
+    tp1.ensure(KEYS[:3])
+    tp2.ensure(KEYS[:6])                      # a hot neighbour wants it all
+    # tenant a was squeezed, but never below its floor
+    assert tp1.resident_bytes >= 2 * UNIT_BYTES
+    assert arb.stats.floor_skips > 0
+    assert arb.total_resident_bytes() <= 4 * UNIT_BYTES
+
+
+def test_overshoot_when_pins_and_floors_block(tmp_path):
+    tp1, _, _ = _mini(tmp_path, name="a", seed=1)
+    tp2, _, _ = _mini(tmp_path, name="b", seed=2)
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp1)
+    arb.register("b", tp2)
+    tp1.ensure(KEYS[:4], pin=True)            # budget fully pinned
+    tp2.ensure(KEYS[:2], pin=True)            # nothing evictable: overshoot
+    assert tp2.resident_bytes == 2 * UNIT_BYTES   # correctness over budget
+    assert arb.total_resident_bytes() == 6 * UNIT_BYTES
+    assert arb.stats.overshoots >= 2
+    assert arb.tenants["b"].overshoots >= 2   # charged to the requester
+    tp1.release(KEYS[:4])
+    tp2.release(KEYS[:2])
+    assert arb.total_resident_bytes() <= 4 * UNIT_BYTES
+
+
+def test_heat_weighted_victims_prefer_cold_tenant(tmp_path):
+    """Trace-derived heat protects a profiled tenant's touched units: the
+    victim pass takes the co-tenant's never-touched units first."""
+    tp1, _, _ = _mini(tmp_path, name="a", seed=1)
+    tp2, _, _ = _mini(tmp_path, name="b", seed=2)
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp1)
+    arb.register("b", tp2)
+    tp1.start_trace(AccessTrace())
+    tp2.ensure(KEYS[:2])                      # b: resident, zero heat
+    tp1.ensure(KEYS[:2])                      # a: resident + traced touches
+    tp1.ensure(KEYS[:2])                      # warm re-touch -> more heat
+    tp1.ensure([KEYS[2]])                     # need 1: must pick from b
+    assert tp1.resident_bytes == 3 * UNIT_BYTES
+    assert tp2.resident_bytes == 1 * UNIT_BYTES
+    # deterministic within the cold tenant: batch-stamp tie broken by key
+    assert not tp2.is_resident(KEYS[0])
+    assert tp2.is_resident(KEYS[1])
+
+
+def test_audit_detects_cooked_books(tmp_path):
+    tp, _, _ = _mini(tmp_path)
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp)
+    tp.ensure(KEYS[:2])
+    audit = arb.audit()
+    assert audit["resident_bytes"] == 2 * UNIT_BYTES
+    assert audit["tenants"]["a"]["resident_bytes"] == 2 * UNIT_BYTES
+    tp.residency.resident_bytes += 1          # cook the running counter
+    with pytest.raises(AssertionError):
+        arb.audit()
+    tp.residency.resident_bytes -= 1
+
+
+# ---------------------------------------------------------------------------
+# share feedback + the speculative-load gate
+# ---------------------------------------------------------------------------
+
+def test_observe_tick_retunes_shares_toward_pressure(tmp_path):
+    tp1, _, _ = _mini(tmp_path, name="a", seed=1)
+    tp2, _, _ = _mini(tmp_path, name="b", seed=2)
+    arb = HostArbiter(budget_bytes=4 * UNIT_BYTES)
+    arb.register("a", tp1, share=1.0)
+    arb.register("b", tp2, share=1.0)
+    tp1.stats.refaults += 10                  # a is thrashing; b is idle
+    arb.observe_tick(tp1)
+    arb.observe_tick(tp2)
+    shares = arb.shares()
+    assert shares["a"] > shares["b"]
+    assert shares["a"] + shares["b"] == pytest.approx(2.0)  # renormalized
+    assert shares["b"] >= arb.min_share_frac * 2.0          # bounded below
+    assert arb.stats.share_updates > 0
+    # deltas, not totals: quiet ticks decay the pressure to the floor and
+    # the split relaxes back toward the registration shares
+    for _ in range(16):
+        arb.observe_tick(tp1)
+        arb.observe_tick(tp2)
+    assert arb.shares()["a"] - arb.shares()["b"] < shares["a"] - shares["b"]
+    assert arb.shares()["a"] + arb.shares()["b"] == pytest.approx(2.0)
+
+
+def test_daemon_tick_feeds_arbiter(tmp_path):
+    tp, _, _ = _mini(tmp_path)
+    reach = ReachabilityReport(entry_names=["prefill", "decode_step"],
+                               reachable={"emb": {"prefill"}})
+    arb = HostArbiter(budget_bytes=6 * UNIT_BYTES)
+    arb.register("a", tp)
+    daemon = RetierDaemon(tp, reach, interval_steps=1, decay=0.5)
+    tp.ensure(KEYS[:3])                       # demand traffic into the trace
+    assert daemon.tick() is not None
+    tenant = arb.tenant_of(tp)
+    assert tenant.history is not None         # merged heat handed over
+    assert tenant.history.touches            # ...and non-empty
+    assert tenant.last_refaults == tp.stats.refaults
+
+
+def test_prefetch_headroom_gates_speculative_loads_only(tmp_path):
+    tp, data, units = _mini(tmp_path)
+    arb = HostArbiter(budget_bytes=3 * UNIT_BYTES)
+    arb.register("a", tp)
+    tp.ensure(KEYS[:3])                       # at budget and at share
+    with Prefetcher(tp, batch_units=2) as pf:
+        accepted = pf.hint([KEYS[4]])         # would force an eviction
+        assert accepted == 0
+        assert pf.stats.skipped_headroom == 1
+        assert arb.stats.headroom_denials == 1
+        tp.evict([KEYS[0]])                   # open one slot
+        assert pf.hint([KEYS[4]]) == 1        # now there is headroom
+        assert pf.drain()
+    assert tp.is_resident(KEYS[4])
+    # demand ensure is NEVER gated: it displaces instead
+    tp.ensure([KEYS[5]])
+    assert tp.is_resident(KEYS[5])
+    assert arb.total_resident_bytes() <= 3 * UNIT_BYTES
+
+
+# ---------------------------------------------------------------------------
+# interleaving machinery: shared by the deterministic fast test and the
+# hypothesis property test (slow)
+# ---------------------------------------------------------------------------
+
+HOST_BUDGET = 6 * UNIT_BYTES
+_SHARED: dict = {}
+
+
+def _shared_stores():
+    """Three read-only optional stores written once per process (hypothesis
+    examples must not touch function-scoped tmp dirs)."""
+    if not _SHARED:
+        root = tempfile.mkdtemp(prefix="arbiter_prop_")
+        for i in range(3):
+            rng = np.random.default_rng(100 + i)
+            data = rng.standard_normal((N_UNITS * ROWS, COLS)).astype(np.float32)
+            units = tuple(
+                Unit(f"emb#rg{g}", "emb", rows=(g * ROWS, (g + 1) * ROWS),
+                     nbytes=UNIT_BYTES)
+                for g in range(N_UNITS)
+            )
+            dec = TierDecision("emb", 1, "rows", "test", data.nbytes, units=units)
+            plan = TierPlan({"emb": dec}, SERVING_PROFILE, [])
+            path = os.path.join(root, f"t{i}.blob")
+            write_store(path, [(u.key, data[u.rows[0]: u.rows[1]]) for u in units])
+            _SHARED[i] = (path, data, units, plan)
+    return _SHARED
+
+
+def _run_ops(ops):
+    """Execute one interleaving of register/ensure/pin/evict/unregister
+    against 3 fresh tenants and check every invariant after every op:
+
+      * pinned keys (of every tenant) are always RESIDENT;
+      * byte bookkeeping is exact (``audit`` recomputes and raises);
+      * the arbiter never evicts a tenant below its floor — only the
+        tenant's own explicit ``evict`` may (excluded from that check);
+      * with no pins outstanding, total registered resident ≤ budget
+        after any byte-moving op (floors are generated small enough that
+        an unpinned make-room target is always reachable).
+    """
+    stores = _shared_stores()
+    arb = HostArbiter(budget_bytes=HOST_BUDGET)
+    tps = []
+    for i in range(3):
+        path, data, units, plan = stores[i]
+        tps.append(TieredParams(
+            {"emb": jnp.zeros((N_UNITS * ROWS, COLS), jnp.float32)},
+            plan, OptionalStore(path),
+        ))
+    registered = [False] * 3
+    pinned: list = [[], [], []]               # per-tenant stack of pinned batches
+    try:
+        for op in ops:
+            kind, i = op[0], op[1]
+            tp = tps[i]
+            before = [t.resident_bytes for t in tps]
+            if kind == "register":
+                _, _, share, floor_units = op
+                if registered[i]:
+                    continue
+                arb.register(f"t{i}", tp, share=share,
+                             floor_bytes=floor_units * UNIT_BYTES)
+                registered[i] = True
+            elif kind == "unregister":
+                if not registered[i] or pinned[i]:
+                    continue                  # never orphan a pinned batch
+                arb.unregister(f"t{i}")
+                registered[i] = False
+            elif kind == "ensure":
+                _, _, idxs, pin = op
+                if not registered[i]:
+                    continue
+                ks = [KEYS[g] for g in idxs]
+                tp.ensure(ks, pin=pin)
+                if pin:
+                    pinned[i].append(ks)
+            elif kind == "release":
+                if not pinned[i]:
+                    continue
+                tp.release(pinned[i].pop())
+            elif kind == "evict":
+                _, _, idxs = op
+                tp.evict([KEYS[g] for g in idxs])
+
+            # invariant 1: no pinned key of ANY tenant was evicted
+            for j in range(3):
+                for batch in pinned[j]:
+                    for k in batch:
+                        assert tps[j].is_resident(k), (kind, i, j, k)
+            # invariant 2: bookkeeping is exact (audit raises on mismatch)
+            arb.audit()
+            # invariant 3: floors — only a tenant's own evict may go below
+            for j in range(3):
+                if registered[j] and not (kind == "evict" and j == i):
+                    floor = arb.tenants[f"t{j}"].floor_bytes
+                    assert tps[j].resident_bytes >= min(before[j], floor), (
+                        kind, i, j, tps[j].resident_bytes, before[j], floor)
+            # invariant 4: at rest, the registered set fits the host budget
+            if kind in ("ensure", "release", "evict") and not any(pinned):
+                total = sum(t.resident_bytes
+                            for j, t in enumerate(tps) if registered[j])
+                assert total <= HOST_BUDGET, (kind, i, total)
+    finally:
+        for tp in tps:
+            tp.store.close()
+
+
+def test_interleavings_deterministic_sequences():
+    """The canned sequences every property run would shrink toward —
+    exercised in the fast tier-1 suite so the machinery never rots."""
+    _run_ops([
+        ("register", 0, 1.0, 1),
+        ("register", 1, 2.0, 1),
+        ("ensure", 0, [0, 1, 2, 3], False),
+        ("ensure", 1, [0, 1, 2, 3], True),
+        ("ensure", 0, [4, 5], True),
+        ("release", 1),
+        ("evict", 0, [0, 1]),
+        ("release", 0),
+        ("register", 2, 0.5, 0),
+        ("ensure", 2, [6, 7], False),
+        ("unregister", 1),
+        ("ensure", 2, [0, 1, 2], True),
+        ("release", 2),
+        ("unregister", 2),
+        ("unregister", 0),
+    ])
+    # pathological: pin everything, then churn the third tenant
+    _run_ops([
+        ("register", 0, 1.0, 0),
+        ("register", 1, 1.0, 0),
+        ("ensure", 0, [0, 1, 2], True),
+        ("ensure", 1, [0, 1, 2], True),
+        ("register", 2, 4.0, 2),
+        ("ensure", 2, [0, 1, 2, 3], False),
+        ("ensure", 2, [4, 5, 6, 7], False),
+        ("release", 0),
+        ("release", 1),
+        ("evict", 2, [4, 5, 6, 7]),
+    ])
+
+
+@pytest.mark.slow
+def test_property_arbitrary_interleavings_hold_invariants():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    unit_idxs = st.lists(st.integers(0, N_UNITS - 1), min_size=1, max_size=4,
+                         unique=True)
+    op = st.one_of(
+        st.tuples(st.just("register"), st.integers(0, 2),
+                  st.sampled_from([0.5, 1.0, 2.0]), st.integers(0, 1)),
+        st.tuples(st.just("unregister"), st.integers(0, 2)),
+        st.tuples(st.just("ensure"), st.integers(0, 2), unit_idxs,
+                  st.booleans()),
+        st.tuples(st.just("release"), st.integers(0, 2)),
+        st.tuples(st.just("evict"), st.integers(0, 2), unit_idxs),
+    )
+
+    @settings(max_examples=30, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(op, min_size=1, max_size=30))
+    def check(ops):
+        _run_ops(ops)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# the threaded cross-tenant stress (the test_retier_daemon.py 20/20 bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_stress_three_tenants_pinned_ensure_vs_rebalance(tmp_path):
+    """3 tenants x 2 pinned-ensure requester threads racing a rebalance/
+    audit loop under a budget half the combined working set. Mid-step, a
+    pinned unit must stay RESIDENT with exact bytes no matter which
+    tenant's make-room is stealing; at rest, bookkeeping is exact and the
+    host budget holds."""
+    budget = 6 * UNIT_BYTES
+    arb = HostArbiter(budget_bytes=budget)
+    tenants = []
+    for i in range(3):
+        tp, data, units = _mini(tmp_path, name=f"t{i}", seed=10 + i)
+        arb.register(f"t{i}", tp, floor_bytes=UNIT_BYTES)
+        tenants.append((tp, data, units))
+    errors: list = []
+    stop = threading.Event()
+
+    def requester(tid, seed):
+        tp, data, units = tenants[tid]
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(40):
+                step = [str(k) for k in rng.choice(KEYS, size=2, replace=False)]
+                tp.ensure(step, pin=True)
+                try:
+                    for k in step:
+                        assert tp.is_resident(k), f"pinned {k} not resident"
+                        u = units[KEYS.index(k)]
+                        got = _rows_of(tp, u)
+                        np.testing.assert_array_equal(
+                            got, data[u.rows[0]: u.rows[1]],
+                            err_msg=f"pinned t{tid}/{k} zeroed mid-step")
+                finally:
+                    tp.release(step)
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    def rebalancer():
+        try:
+            while not stop.is_set():
+                arb.rebalance()
+                arb.audit()
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=requester, args=(tid, 31 * tid + r))
+               for tid in range(3) for r in range(2)]
+    rt = threading.Thread(target=rebalancer)
+    rt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rt.join()
+
+    assert not errors, errors
+    assert arb.stats.evictions > 0            # the budget really did bite
+    assert arb.stats.cross_evictions > 0      # ...across tenant boundaries
+    # at rest: pins all released -> the host budget holds, bookkeeping is
+    # exact, and every leaf is either content-exact or placeholder zeros
+    audit = arb.audit()
+    assert audit["pinned_bytes"] == 0
+    assert audit["resident_bytes"] <= budget
+    for tp, data, units in tenants:
+        res = tp.residency
+        assert res.resident_bytes == len(res.resident_keys) * UNIT_BYTES
+        for u in units:
+            expect = (data[u.rows[0]: u.rows[1]] if tp.is_resident(u.key)
+                      else np.zeros((ROWS, COLS), np.float32))
+            np.testing.assert_array_equal(_rows_of(tp, u), expect)
+        assert tp.resident_bytes >= UNIT_BYTES    # floors held throughout

@@ -1,0 +1,208 @@
+"""Crash safety of the rename-commit rule (DESIGN.md §6).
+
+Every artifact writer in this repo stages into a ``*.partial`` directory
+and publishes via ``checkpoint.manager.commit_dir``. These tests simulate
+a crash in the window the rule is supposed to protect — after staging is
+complete, before the rename — and assert the contract:
+
+  * the original (committed) artifact is untouched, byte for byte;
+  * the orphaned staging directory is detectable (``orphaned_partials``)
+    and cleanable (``clean_partials``) without risk to committed data;
+  * recovery is "just re-run the rewrite": a retried commit from a fresh
+    staging pass succeeds and the orphan never resurrects.
+
+Covered writers: ``commit_dir`` itself, ``CheckpointManager.save`` (the
+manifest stays on the previous step), and the re-tiering artifact rewrite
+``retier_artifact`` — the code path behind the online daemon's periodic
+``-compact`` rewrite (``RetierDaemon.compact``), where a mid-compaction
+crash must leave the artifact the server is reading from intact.
+"""
+
+import json
+import os
+import types
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    clean_partials,
+    commit_dir,
+    orphaned_partials,
+)
+from repro.checkpoint import tensorstore_lite as tsl
+from repro.core import (
+    AccessTrace,
+    OptionalStore,
+    build_artifact,
+    replan_from_trace,
+    retier_artifact,
+)
+from repro.core.entrypoints import SERVING_PROFILE
+from repro.core.param_graph import ReachabilityReport
+from repro.core.partition import TierDecision, TierPlan, Unit
+
+
+def _write_tree(d, files):
+    os.makedirs(d, exist_ok=True)
+    for name, content in files.items():
+        with open(os.path.join(d, name), "w") as f:
+            f.write(content)
+
+
+def _read_tree(d):
+    out = {}
+    for name in sorted(os.listdir(d)):
+        with open(os.path.join(d, name)) as f:
+            out[name] = f.read()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# commit_dir: the primitive
+# ---------------------------------------------------------------------------
+
+def test_crash_after_staging_leaves_original_untouched(tmp_path):
+    """Staging completed, rename never happened (crash between the two):
+    the committed artifact is byte-identical, the orphan is detectable and
+    cleanable, and cleanup cannot touch committed data."""
+    final = str(tmp_path / "artifact")
+    _write_tree(final, {"data.bin": "v1", "meta.json": '{"v": 1}'})
+    before = _read_tree(final)
+
+    tmp = final + ".partial"
+    _write_tree(tmp, {"data.bin": "v2", "meta.json": '{"v": 2}'})
+    # -- crash here: commit_dir(tmp, final) is never reached -----------------
+
+    assert _read_tree(final) == before
+    assert orphaned_partials(str(tmp_path)) == [tmp]
+    assert clean_partials(str(tmp_path)) == [tmp]
+    assert not os.path.exists(tmp)
+    assert _read_tree(final) == before          # cleanup touched only the orphan
+    assert orphaned_partials(str(tmp_path)) == []
+
+    # recovery = re-run the rewrite: a fresh staging pass commits cleanly
+    _write_tree(tmp, {"data.bin": "v2", "meta.json": '{"v": 2}'})
+    commit_dir(tmp, final)
+    assert _read_tree(final)["data.bin"] == "v2"
+    assert not os.path.exists(tmp)
+
+
+def test_orphan_scan_ignores_committed_dirs_and_files(tmp_path):
+    _write_tree(str(tmp_path / "artifact"), {"a": "1"})
+    _write_tree(str(tmp_path / "other.partial"), {"b": "2"})
+    # a stray *file* with the suffix is not a staging dir
+    with open(str(tmp_path / "trace.json.partial"), "w") as f:
+        f.write("{}")
+    assert orphaned_partials(str(tmp_path)) == [str(tmp_path / "other.partial")]
+    assert orphaned_partials(str(tmp_path / "missing")) == []
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager: manifest stays on the previous step
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_crash_between_staging_and_rename(tmp_path, monkeypatch):
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, async_save=False)
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    mgr.save(100, {"params": tree})
+    assert mgr.latest_step() == 100
+
+    def crash(tmp, final):
+        raise OSError("simulated crash between staging and rename")
+
+    monkeypatch.setattr("repro.checkpoint.manager.commit_dir", crash)
+    with pytest.raises(OSError, match="simulated crash"):
+        mgr.save(200, {"params": {"w": np.arange(8, dtype=np.float32) * 2}})
+
+    # the previous commit is fully intact: manifest, directory, bytes
+    assert mgr.latest_step() == 100
+    assert mgr.all_steps() == [100]
+    restored = mgr.restore(abstract={"params": tree})
+    assert restored.step == 100
+    np.testing.assert_array_equal(restored.collections["params"]["w"], tree["w"])
+    # the torn step is absent; its staging dir is the detectable orphan
+    assert not os.path.exists(os.path.join(d, "step_00000200"))
+    orphans = orphaned_partials(d)
+    assert orphans == [os.path.join(d, "step_00000200.partial")]
+    clean_partials(d)
+    assert orphaned_partials(d) == []
+    assert mgr.restore().step == 100            # cleanup didn't touch step 100
+
+
+# ---------------------------------------------------------------------------
+# retier_artifact: the daemon's -compact rewrite path
+# ---------------------------------------------------------------------------
+
+def _mini_artifact(tmp_path):
+    """A tiny real two-tier artifact + a replanned plan (the shapes
+    retier_artifact moves bytes between), as in tests/test_retier.py."""
+    rng = np.random.default_rng(1)
+    params = {
+        "a": rng.standard_normal((8, 8)).astype(np.float32),
+        "emb": rng.standard_normal((64, 4)).astype(np.float32),
+    }
+    row_units = tuple(
+        Unit(f"emb#rg{g}", "emb", rows=(g * 16, (g + 1) * 16), nbytes=16 * 4 * 4)
+        for g in range(4)
+    )
+    decisions = {
+        "a": TierDecision("a", 0, "leaf", "dense", params["a"].nbytes),
+        "emb": TierDecision("emb", 1, "rows", "rows", params["emb"].nbytes,
+                            units=row_units, resident_units=(row_units[0].key,)),
+    }
+    plan = TierPlan(decisions, SERVING_PROFILE, ["prefill"])
+    reach = ReachabilityReport(entry_names=["prefill"],
+                               reachable={"a": {"prefill"}, "emb": {"prefill"}})
+    result = types.SimpleNamespace(plan=plan, reach=reach, profile=SERVING_PROFILE)
+    outdir = str(tmp_path / "artifact")
+    build_artifact(params, result, outdir)
+
+    trace = AccessTrace()
+    trace.record(["emb#rg2", "emb#rg3"], ["emb#rg2", "emb#rg3"], "prefill")
+    new_plan, _ = replan_from_trace(plan, trace, reach)
+    return outdir, new_plan, params, row_units
+
+
+def test_compact_crash_preserves_source_artifact(tmp_path, monkeypatch):
+    """A crash at the commit point of the artifact rewrite (the daemon's
+    periodic ``-compact``) must leave the artifact the running server
+    reads from untouched, with only a detectable orphan behind."""
+    outdir, new_plan, params, row_units = _mini_artifact(tmp_path)
+    src_files = {
+        n: open(os.path.join(outdir, n), "rb").read()
+        for n in sorted(os.listdir(outdir))
+        if os.path.isfile(os.path.join(outdir, n))
+    }
+    compact_dir = outdir + "-compact"  # the daemon's default out_dir naming
+
+    def crash(tmp, final):
+        raise OSError("simulated crash between staging and rename")
+
+    monkeypatch.setattr("repro.core.retier.commit_dir", crash)
+    with pytest.raises(OSError, match="simulated crash"):
+        retier_artifact(outdir, new_plan, out_dir=compact_dir)
+
+    # source artifact byte-identical; rewrite never became visible
+    for n, blob in src_files.items():
+        assert open(os.path.join(outdir, n), "rb").read() == blob, n
+    assert not os.path.exists(compact_dir)
+    orphans = orphaned_partials(str(tmp_path))
+    assert orphans == [compact_dir + ".partial"]
+    clean_partials(str(tmp_path))
+
+    # recovery: re-run the rewrite with the crash gone — commits cleanly
+    monkeypatch.setattr("repro.core.retier.commit_dir", commit_dir)
+    retier_artifact(outdir, new_plan, out_dir=compact_dir)
+    assert os.path.exists(os.path.join(compact_dir, "artifact.json"))
+    assert not os.path.exists(compact_dir + ".partial")
+    store = OptionalStore(os.path.join(compact_dir, "optional.blob"))
+    for u in row_units:
+        np.testing.assert_array_equal(
+            store.fetch(u.key), params["emb"][u.rows[0]: u.rows[1]])
+    store.close()
+    with open(os.path.join(compact_dir, "artifact.json")) as f:
+        assert json.load(f)["decisions"]["emb"]["resident_units"] == [
+            "emb#rg2", "emb#rg3"]

@@ -155,6 +155,33 @@ def test_touch_refreshes_lru_order(tmp_path):
     assert tp.residency.resident_keys == {units[0].key, units[2].key}
 
 
+def test_select_victims_batch_ties_deterministic(tmp_path):
+    """Units committed by one ensure() batch share a logical-clock stamp;
+    the victim order among them must be the key order, not whatever
+    dict-insertion order the batch happened to load in (regression: tied
+    LRU timestamps from batched commits were insertion-dependent)."""
+    tp_a, _, units = _mini(tmp_path, name="a")
+    tp_b, _, _ = _mini(tmp_path, name="b")
+    batch = [units[3].key, units[1].key, units[2].key]
+    tp_a.ensure(batch)                  # one batch -> one stamp for all 3
+    tp_b.ensure(list(reversed(batch)))  # same batch, opposite insertion order
+    for tp in (tp_a, tp_b):
+        stamps = {k: tp.residency._stamp[k] for k in batch}
+        assert len(set(stamps.values())) == 1, stamps
+        # tie broken by key: insertion order must not matter
+        assert tp.residency.select_victims(UNIT_BYTES) == [units[1].key]
+        assert tp.residency.select_victims(2 * UNIT_BYTES) == [
+            units[1].key, units[2].key]
+    # a later batch is younger: victims still come from the old batch first
+    tp_a.ensure([units[0].key])
+    assert tp_a.residency.select_victims(4 * UNIT_BYTES) == [
+        units[1].key, units[2].key, units[3].key, units[0].key]
+    # and a touch re-stamps: the touched member of the tie survives longest
+    tp_a.touch([units[1].key])
+    assert tp_a.residency.select_victims(2 * UNIT_BYTES) == [
+        units[2].key, units[3].key]
+
+
 def test_pin_blocks_eviction_until_release(tmp_path):
     budget = 2 * UNIT_BYTES
     tp, _, units = _mini(tmp_path, budget=budget)
