@@ -1,0 +1,259 @@
+"""RQ10 (beyond-paper, DESIGN.md §14): does FLEET federation — cross-
+replica trace aggregation + learned pre-warm — cut the exploration cost a
+workload shift charges every replica, without changing a single token?
+
+RQ8 shows one replica's ``RetierDaemon`` adapting to a shift it has
+*seen*. A fleet of N replicas behind a load balancer is worse off: each
+replica must fault its own way through the new hot set before its own
+daemon learns it — N× the exploration cost for one shift. The
+``FleetController`` federates the daemons: pull every replica's trace
+window, merge (order-independently), replan ONCE, push the residency
+overlay back — so the shift replica 0 pays for is pre-warmed on replicas
+1..N-1 before they ever see it.
+
+Workload: two prompt populations from disjoint vocab halves (A = low
+embed rows, B = high rows), phases **A then B** (the shift) on every
+replica, served replica-by-replica within each phase. Two passes over
+the SAME per-replica request sequences, each replica one cold start,
+``stats`` residency, prefetch + daemon on in BOTH passes (the only
+delta is the controller):
+
+  * **solo** — N independent servers, no fleet: replica k's phase-B
+    faults are paid in full by replica k;
+  * **federated** — same servers joined to one ``FleetController``
+    (``sync_preload=True``), ``sync()`` after every replica×phase serve:
+    when replica k serves B, the controller has already learned B from
+    replica 0's window and pushed the overlay, promotions loaded
+    synchronously inside ``sync()`` — between batches, off every request
+    path — so follower residency is deterministic, not a prefetch race.
+
+Every follower serve is *post-shift*: replica 0 has already served and
+``sync()``ed the phase by the time replicas 1..N-1 see it, so in the
+federated pass the followers' request paths should be spared the
+exploration replica 0 already paid for. (The phase-B-only slice is NOT
+a usable metric here: greedy decode wanders over the whole vocab, so a
+solo replica's phase-A decode has already demand-faulted most phase-B
+rows — what remains per phase is LRU churn noise. The exploration cost
+federation removes is the followers' aggregate.)
+
+Asserted, not just printed: per-replica greedy outputs are IDENTICAL
+across passes (federation moves bytes, never tokens); aggregate
+request-path fault bytes over replicas 1..N-1 — their whole post-shift
+serving, both phases — are LOWER federated than solo; and a **late
+joiner** — a fresh replica registered
+against a controller ``restore()``d from ``snapshot()`` — is warm-
+bootstrapped at register time and beats an unfederated cold join on the
+same phase-B traffic, again with identical outputs. Per-replica push
+failures would surface in the summary's fleet stats (must be zero).
+
+Standalone: ``python -m benchmarks.bench_rq10_fleet [--smoke] [--json-out F]``
+(wired into benchmarks/run.py as the ``rq10`` section and the CI smoke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+
+import numpy as np
+
+from benchmarks.bench_rq8_online import _phase_prompts, _serve_phases
+from benchmarks.common import csv_row, setup_app, timed_cold_start
+from repro.core import FleetController
+
+
+def _solo_pass(app, phases, *, n_replicas, prompt_len, gen_steps, max_seq,
+               retier_interval, budget):
+    """N independent replicas, each its own daemon, no federation."""
+    outs, rows = [], []
+    for i in range(n_replicas):
+        with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                              residency="stats", prefetch=True, device_budget_bytes=budget,
+                              retier_online=True,
+                              retier_interval=retier_interval) as server:
+            o, r = _serve_phases(server, phases, gen_steps, max_seq)
+            outs.append(o)
+            rows.append(r)
+    return outs, rows
+
+
+def _federated_pass(app, phases, *, n_replicas, prompt_len, gen_steps, max_seq,
+                    retier_interval, decay, budget):
+    """Same replicas joined to one controller; sync after every serve.
+
+    Serving is replica-major within each phase (r0 A, r1 A, ..., r0 B,
+    r1 B, ...) so replica 0's window of a new phase is federated before
+    replicas 1..N-1 serve it — the pre-warm the fleet exists for."""
+    fleet = FleetController(decay=decay, sync_preload=True)
+    servers = []
+    outs = [[] for _ in range(n_replicas)]
+    rows = [[] for _ in range(n_replicas)]
+    try:
+        for i in range(n_replicas):
+            servers.append(timed_cold_start(
+                app, "after2", warm_shape=(1, prompt_len),
+                residency="stats", prefetch=True, device_budget_bytes=budget,
+                retier_online=True, retier_interval=retier_interval,
+                retier_decay=decay,
+                fleet=fleet, replica_name=f"replica-{i}").__enter__())
+        for prompts in phases:
+            for i, server in enumerate(servers):
+                o, r = _serve_phases(server, [prompts], gen_steps, max_seq)
+                outs[i].extend(o)
+                rows[i].extend(r)
+                fleet.sync()
+        daemons = [s.retier_daemon.stats.to_dict() for s in servers]
+    finally:
+        for s in servers:
+            s.__exit__(None, None, None)
+    return outs, rows, fleet, daemons
+
+
+def run(
+    base_dir: str,
+    arch: str = "mixtral-8x22b",
+    *,
+    n_replicas: int = 3,
+    prompt_len: int = 8,
+    gen_steps: int = 8,
+    n_per_phase: int = 3,
+    retier_interval: int = 10_000,  # local ticks OFF: federation is the only adaptation
+    retier_decay: float = 0.5,
+) -> dict:
+    assert n_replicas >= 2, "federation needs at least 2 replicas"
+    app = setup_app(arch, base_dir)
+    max_seq = prompt_len + gen_steps + 2
+    # budget: everything EXCEPT one vocab half fits. The every-step units
+    # (experts) are never the contested resource; "which vocab half is
+    # resident" is the one real hot-set choice — exactly what the shift
+    # moves and what federation can decide for a follower ahead of time.
+    # (The stats preset's 50% can be smaller than the experts alone, and
+    # then budget churn drowns the federation signal in expert refaults.)
+    plan = app.result.plan
+    embed_bytes = sum(
+        u.nbytes
+        for dec in plan.decisions.values() if dec.tier == 1
+        for u in dec.units if u.key.startswith("embed#")
+    )
+    budget = plan.tier1_bytes - max(embed_bytes // 2, 1)
+    a, b = _phase_prompts(app, n_per_phase=n_per_phase, prompt_len=prompt_len)
+    phases = [a, b]  # the shift: every replica sees A, then B
+
+    outs_solo, rows_solo = _solo_pass(
+        app, phases, n_replicas=n_replicas, prompt_len=prompt_len,
+        gen_steps=gen_steps, max_seq=max_seq, retier_interval=retier_interval,
+        budget=budget)
+    outs_fed, rows_fed, fleet, daemons = _federated_pass(
+        app, phases, n_replicas=n_replicas, prompt_len=prompt_len,
+        gen_steps=gen_steps, max_seq=max_seq, retier_interval=retier_interval,
+        decay=retier_decay, budget=budget)
+
+    # correctness gate: federation may only move bytes, never tokens —
+    # every replica's outputs must match its solo baseline exactly
+    for solo, fed in zip(outs_solo, outs_fed):
+        for ref, got in zip(solo, fed):
+            np.testing.assert_array_equal(got, ref)
+
+    fs = fleet.stats
+    assert fs.replans > 0, "fleet never replanned"
+    assert fs.push_failures == 0, f"fleet push failures: {fleet.last_errors}"
+
+    # post-shift = everything replicas 1..N-1 serve (each phase reaches a
+    # follower only after replica 0 served and sync()ed it): solo, every
+    # follower re-pays replica 0's exploration; federated, it was pushed
+    post_solo = sum(p["fault_bytes"] for r in rows_solo[1:] for p in r)
+    post_fed = sum(p["fault_bytes"] for r in rows_fed[1:] for p in r)
+    assert post_fed < post_solo, (
+        f"federation did not reduce post-shift fault bytes on replicas "
+        f"1..N-1: {post_solo} -> {post_fed}"
+    )
+
+    # late joiner: a controller restored from snapshot() warm-bootstraps a
+    # replica it has never met; compare phase-B traffic vs a cold join
+    snap = fleet.snapshot()
+    fleet2 = FleetController.restore(snap)
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                          residency="stats", prefetch=True, device_budget_bytes=budget,
+                          retier_online=True, retier_interval=retier_interval,
+                          fleet=fleet2, replica_name="late-joiner") as server:
+        outs_late, rows_late = _serve_phases(server, [b], gen_steps, max_seq)
+    assert fleet2.stats.bootstraps == 1, (
+        f"late joiner was not warm-bootstrapped: {fleet2.last_errors}"
+    )
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                          residency="stats", prefetch=True, device_budget_bytes=budget,
+                          retier_online=True,
+                          retier_interval=retier_interval) as server:
+        outs_cold, rows_cold = _serve_phases(server, [b], gen_steps, max_seq)
+    for ref, got in zip(outs_cold, outs_late):
+        np.testing.assert_array_equal(got, ref)
+    late_fault = rows_late[0]["fault_bytes"]
+    cold_fault = rows_cold[0]["fault_bytes"]
+    assert late_fault < cold_fault, (
+        f"snapshot warm bootstrap did not beat a cold join: "
+        f"{cold_fault} -> {late_fault}"
+    )
+
+    return {
+        "arch": arch,
+        "n_replicas": n_replicas,
+        "n_requests_per_replica": len(phases) * n_per_phase,
+        "gen_steps": gen_steps,
+        "fault_bytes_post_shift_solo": post_solo,
+        "fault_bytes_post_shift_federated": post_fed,
+        "fault_bytes_reduction": 1.0 - post_fed / max(1, post_solo),
+        "phase_fault_bytes_solo": [[p["fault_bytes"] for p in r] for r in rows_solo],
+        "phase_fault_bytes_federated": [[p["fault_bytes"] for p in r] for r in rows_fed],
+        "late_join_fault_bytes_cold": cold_fault,
+        "late_join_fault_bytes_bootstrapped": late_fault,
+        "late_join_reduction": 1.0 - late_fault / max(1, cold_fault),
+        "fleet": fs.to_dict(),
+        "daemons": daemons,
+        "restarts": 0,
+        "outputs_identical": True,
+    }
+
+
+def main(base_dir: str, *, smoke: bool = False, archs=None) -> list[str]:
+    archs = archs or (("mixtral-8x22b",) if smoke else ("mixtral-8x22b", "yi-34b"))
+    kw = dict(gen_steps=6, n_per_phase=2) if smoke else {}
+    rows = []
+    for arch in archs:
+        r = run(base_dir, arch, **kw)
+        f = r["fleet"]
+        rows.append(csv_row(
+            f"rq10_fleet/{r['arch']}",
+            0.0,
+            f"post_shift_fault_bytes {r['fault_bytes_post_shift_solo']}->"
+            f"{r['fault_bytes_post_shift_federated']} "
+            f"(-{r['fault_bytes_reduction'] * 100:.0f}% over "
+            f"{r['n_replicas'] - 1} followers)"
+            f"|late_join {r['late_join_fault_bytes_cold']}->"
+            f"{r['late_join_fault_bytes_bootstrapped']} "
+            f"(-{r['late_join_reduction'] * 100:.0f}%)"
+            f"|syncs={f['syncs']} replans={f['replans']} pushes={f['pushes']} "
+            f"push_failures={f['push_failures']} bootstraps={f['bootstraps']}"
+            f"|restarts=0|outputs=identical",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one arch, 2 prompts x 6 steps per phase")
+    ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
+    ap.add_argument("--json-out", default="",
+                    help="also write the CSV rows as a JSON list here")
+    args = ap.parse_args()
+    scratch = args.out or tempfile.mkdtemp(prefix="faaslight_rq10_")
+    print("name,us_per_call,derived")
+    rows = main(scratch, smoke=args.smoke)
+    for row in rows:
+        print(row)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"section": "rq10", "rows": rows}, f, indent=2)
+    sys.exit(0)

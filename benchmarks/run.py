@@ -26,10 +26,11 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: rq2 (one arch, 2 runs, no warm-set compile) "
                          "+ the rq7 profile→re-tier cycle + the rq8 online "
-                         "re-tier shift + the rq9 multi-model zoo (~4 min)")
+                         "re-tier shift + the rq9 multi-model zoo + the rq10 "
+                         "fleet federation (~6 min)")
     ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
     ap.add_argument("--only", default="",
-                    help="comma list: rq1,rq2,rq3,rq4,rq5,traffic,rq6,rq7,rq8,rq9,roofline")
+                    help="comma list: rq1,rq2,rq3,rq4,rq5,traffic,rq6,rq7,rq8,rq9,rq10,roofline")
     ap.add_argument("--json-out", default="",
                     help="also write all rows as JSON {section: [rows]} here")
     args = ap.parse_args(argv)
@@ -46,6 +47,7 @@ def main(argv=None) -> int:
         bench_rq7_retier,
         bench_rq8_online,
         bench_rq9_zoo,
+        bench_rq10_fleet,
         roofline,
     )
 
@@ -74,6 +76,7 @@ def main(argv=None) -> int:
             ("rq7_smoke", lambda: bench_rq7_retier.main(scratch, smoke=True)),
             ("rq8_smoke", lambda: bench_rq8_online.main(scratch, smoke=True)),
             ("rq9_smoke", lambda: bench_rq9_zoo.main(scratch, smoke=True)),
+            ("rq10_smoke", lambda: bench_rq10_fleet.main(scratch, smoke=True)),
         ]
     else:
         if want("rq1"):
@@ -96,6 +99,8 @@ def main(argv=None) -> int:
             sections.append(("rq8", lambda: bench_rq8_online.main(scratch)))
         if want("rq9"):
             sections.append(("rq9", lambda: bench_rq9_zoo.main(scratch)))
+        if want("rq10"):
+            sections.append(("rq10", lambda: bench_rq10_fleet.main(scratch)))
         if want("roofline"):
             sections.append(("roofline", roofline.main))
 

@@ -2,10 +2,12 @@
 call graph, tier partitioning) + Code Generator (optional store, on-demand
 loader, artifact builder) + the profile-guided re-tiering loop (access
 telemetry, trace-driven replanner, predictive prefetch) and its online
-form (the restart-free RetierDaemon). See DESIGN.md §4, §11 and §12."""
+form (the restart-free RetierDaemon) and its fleet form (the federated
+FleetController). See DESIGN.md §4, §11, §12 and §14."""
 
 from repro.core.analyzer import AnalysisResult, analyze, build_artifact, write_monolithic
 from repro.core.arbiter import HostArbiter, HostArbiterStats
+from repro.core.fleet import FleetController, FleetStats
 from repro.core.entrypoints import (
     SERVING_MULTIMODAL_PROFILE,
     SERVING_PROFILE,
@@ -28,9 +30,11 @@ from repro.core.param_graph import ReachabilityReport, build_reachability, entry
 from repro.core.partition import TierDecision, TierPlan, Unit, build_tier_plan
 from repro.core.retier import (
     RetierReport,
+    apply_overlay,
     check_tier0_superset,
     replan_from_trace,
     required_tier0,
+    residency_overlay,
     retier_artifact,
 )
 from repro.core.retier_daemon import RetierDaemon, RetierDaemonStats
@@ -61,10 +65,14 @@ __all__ = [
     "RetierReport",
     "RetierDaemon",
     "RetierDaemonStats",
+    "FleetController",
+    "FleetStats",
     "replan_from_trace",
     "required_tier0",
     "check_tier0_superset",
     "retier_artifact",
+    "residency_overlay",
+    "apply_overlay",
     "OptionalStore",
     "OptionalStoreWriter",
     "write_store",

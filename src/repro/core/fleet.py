@@ -1,0 +1,358 @@
+"""⑨ Fleet federation — cross-replica trace aggregation + learned
+pre-warm (DESIGN.md §14).
+
+A ``RetierDaemon`` (§12) adapts ONE replica from its own traffic, which
+means N replicas behind a load balancer each pay the full exploration
+cost of a workload shift: every replica must fault on the new hot set
+before its own daemon learns it. The ``FleetController`` closes that gap
+by federating what the replicas observe:
+
+    replica daemons ──pull_window()──▶ windows of ONE sync cycle
+        ──AccessTrace.merge_all (plain sum, commutative)──▶ combined
+        ──history.merge(combined, decay)──▶ fleet history
+        ──replan ONCE from the base plan──▶ fleet plan
+        ──residency_overlay──▶ {tier-1 path: hot unit keys}
+        ──apply_overlay + RetierDaemon.apply_plan──▶ every replica
+
+so a shift ANY replica sees pre-warms ALL of them, and the per-replica
+daemons' own safety machinery is unchanged: each replica re-proves the
+tier-0 ⊇ entry-reachable invariant itself before mutating (§12.1 rule 1
+— the controller is not trusted), promotions ride the prefetcher or a
+between-batches synchronous preload, demotions respect pins.
+
+Federation contract (DESIGN.md §14.1):
+
+  * **order-independent**: the windows of one cycle are combined with an
+    undecayed, commutative sum (``AccessTrace.merge_all``) BEFORE the
+    single decayed fold into history — the fleet plan cannot depend on
+    the order replicas are polled in;
+  * **overlay, not plan**: what crosses the replica boundary is the
+    residency overlay (plain ``{path: [unit key, ...]}``), applied to
+    each replica's OWN plan via ``apply_overlay`` — tiers can never flip
+    remotely, foreign unit keys are ignored, and the state serializes;
+  * **failure-isolated**: a replica that fails a pull or rejects a push
+    (invariant violation, I/O error) is recorded and skipped — the cycle
+    completes for every other replica, and the failing replica's loader
+    is untouched (``apply_plan`` checks before mutating);
+  * **warm bootstrap**: ``snapshot()`` captures history + overlay as
+    JSON; a late joiner restored from it applies the fleet plan with a
+    SYNCHRONOUS preload at ``register()`` time — resident before it
+    admits traffic, instead of re-faulting its way to the fleet's hot
+    set.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.on_demand import AccessTrace
+from repro.core.retier import (
+    apply_overlay,
+    replan_from_trace,
+    residency_overlay,
+)
+
+
+@dataclass
+class FleetStats:
+    """Controller lifetime accounting (printed by the launcher, asserted
+    by tests/test_fleet.py and benchmarks/bench_rq10_fleet.py)."""
+
+    syncs: int = 0              # sync() cycles run
+    pulls: int = 0              # per-replica window pulls attempted
+    pull_failures: int = 0      # pulls that raised (replica skipped)
+    empty_windows: int = 0      # pulls that returned no new batches
+    replans: int = 0            # cycles that produced a fresh fleet plan
+    pushes: int = 0             # per-replica plan applications that stuck
+    push_failures: int = 0      # rejected/failed applications (isolated)
+    bootstraps: int = 0         # late joiners warm-started at register()
+    bootstrap_failures: int = 0
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class FleetController:
+    """Federates N ``RetierDaemon``s into one learned hot set.
+
+    The controller is *passive* like the daemons it drives: it owns no
+    thread, and ``sync()`` is called from whatever loop coordinates the
+    replicas (the ``--fleet`` launcher, a test, a cron). All controller
+    state is behind one lock; every replica mutation goes through
+    ``RetierDaemon.apply_plan``, which takes the daemon's own lock and
+    re-proves the §12.1 invariant before touching the loader.
+
+    The canonical fleet state is deliberately tiny and portable: the
+    decayed fleet history (an ``AccessTrace``) plus the last residency
+    overlay. ``snapshot()``/``restore()`` round-trip exactly that —
+    byte-identically, by the §10 canonical-number rule — which is the
+    whole warm-bootstrap story (§14.1).
+    """
+
+    SNAPSHOT_VERSION = 1
+
+    def __init__(
+        self,
+        *,
+        decay: float = 0.5,
+        promote_min_faults: int = 1,
+        max_promote_bytes: Optional[int] = None,
+        sync_preload: bool = False,
+    ):
+        if not 0.0 <= decay <= 1.0:
+            raise ValueError(f"decay must be in [0, 1], got {decay!r}")
+        self.decay = decay
+        self.promote_min_faults = promote_min_faults
+        self.max_promote_bytes = max_promote_bytes
+        # sync_preload=True makes every push load promotions synchronously
+        # INSIDE sync() — between batches, off any request path — instead
+        # of queueing prefetch hints. Deterministic residency after each
+        # cycle, at the cost of sync() stalling on tier-1 reads; the mode
+        # for coordinators that sync idle/between-phase replicas.
+        self.sync_preload = sync_preload
+        self.stats = FleetStats()
+        self._lock = threading.Lock()
+        self._replicas: dict[str, object] = {}  # name -> RetierDaemon
+        self._history: Optional[AccessTrace] = None
+        self._overlay: Optional[dict[str, list[str]]] = None
+        # replan determinism: always from the FIRST registered replica's
+        # plan + static analysis, with the controller's own last overlay
+        # as the resident set (fault-admitted, touch-retained — see
+        # ``sync``); never from any replica's drifting live plan
+        self._base_plan = None
+        self._reach = None
+        self._min_budget: Optional[int] = None  # tightest replica budget seen
+        self.last_errors: dict[str, str] = {}
+
+    # -- membership --------------------------------------------------------------
+    @property
+    def replicas(self) -> list[str]:
+        with self._lock:
+            return sorted(self._replicas)
+
+    def register(self, name: str, daemon) -> bool:
+        """Add a replica's daemon to the fleet. The first registration
+        donates the base plan + reachability the controller replans from.
+
+        A replica joining AFTER the fleet has learned an overlay (a late
+        joiner, typically on a controller built by ``restore()``) is
+        warm-bootstrapped here: the fleet plan is applied with a
+        synchronous preload, so the replica is resident before its first
+        batch. Returns True when that happened. A bootstrap failure is
+        absorbed (recorded in ``stats``/``last_errors``) — the replica
+        still joins, merely cold, exactly as if unfederated."""
+        with self._lock:
+            if name in self._replicas:
+                raise ValueError(f"replica {name!r} already registered")
+            self._replicas[name] = daemon
+            if self._base_plan is None:
+                self._base_plan = daemon.tiered.plan
+                self._reach = daemon.reach
+            b = daemon.tiered.residency.budget_bytes
+            if b and (self._min_budget is None or b < self._min_budget):
+                # the fleet plans for its tightest replica: an overlay the
+                # smallest budget can't hold would LRU-churn that replica
+                # instead of warming it
+                self._min_budget = b
+            if self._overlay is None:
+                return False
+            try:
+                plan = apply_overlay(daemon.tiered.plan, self._overlay)
+                daemon.apply_plan(plan, trace=self._history, sync_preload=True)
+                self.stats.bootstraps += 1
+                return True
+            except Exception as e:  # cold join is a degraded mode, not a crash
+                self.stats.bootstrap_failures += 1
+                self.last_errors[name] = repr(e)
+                return False
+
+    def unregister(self, name: str) -> None:
+        """Drop a replica (drained / crashed). Its contributions stay in
+        the decayed history — evidence outlives membership."""
+        with self._lock:
+            self._replicas.pop(name, None)
+
+    # -- one federation cycle ----------------------------------------------------
+    def sync(self) -> dict:
+        """Run one pull → merge → replan → push cycle; returns a summary.
+
+        Never raises for per-replica trouble: a failing pull or push is
+        recorded (``stats``, ``last_errors``, the summary's ``failed``
+        map) and the cycle continues for the rest of the fleet."""
+        with self._lock:
+            self.stats.syncs += 1
+            summary: dict = {
+                "pulled": 0, "windows": 0, "replanned": False,
+                "pushed": [], "bootstrapped": [], "failed": {},
+                "promoted": 0, "demoted": 0,
+            }
+            if not self._replicas:
+                return summary
+
+            # 1. pull one window per replica (failure-isolated)
+            windows = []
+            for name, daemon in self._replicas.items():
+                self.stats.pulls += 1
+                summary["pulled"] += 1
+                try:
+                    w = daemon.pull_window()
+                except Exception as e:
+                    self.stats.pull_failures += 1
+                    self.last_errors[name] = repr(e)
+                    summary["failed"][name] = f"pull: {e!r}"
+                    continue
+                if w is None:
+                    self.stats.empty_windows += 1
+                else:
+                    windows.append(w)
+            summary["windows"] = len(windows)
+
+            # 2. commutative combine, then ONE decayed fold (§14.1 rule 1)
+            if windows:
+                combined = AccessTrace.merge_all(windows)
+                self._history = (
+                    combined if self._history is None
+                    else self._history.merge(combined, decay=self.decay)
+                )
+
+            # 3. replan ONCE against the fleet history — from the base plan
+            # CARRYING the previous overlay. Replanning from the pristine
+            # base would make residency require *ongoing faults*, and a
+            # federated pre-warm exists precisely to stop units faulting:
+            # warmed units would lose their (decayed, pruned) fault
+            # evidence, fall out of the overlay, be demoted, refault, and
+            # be re-admitted — a fleet-wide eviction/refault oscillation.
+            # With the previous overlay as the replan's resident set, a
+            # fault ADMITS a unit and decayed touches RETAIN it; it drops
+            # out only once the fleet stops touching it (the same
+            # semantics a local daemon gets by replanning from its live
+            # plan). Promotions still never compound: retention requires
+            # touches, which prune to zero a few decayed folds after the
+            # workload moves on.
+            if self._history is None or not self._history.batches:
+                return summary
+            replan_base = (
+                self._base_plan if self._overlay is None
+                else apply_overlay(self._base_plan, self._overlay)
+            )
+            new_plan, _report = replan_from_trace(
+                replan_base,
+                self._history,
+                self._reach,
+                promote_min_faults=self.promote_min_faults,
+                max_promote_bytes=self.max_promote_bytes,
+                promote_leaves=False,  # §12.1 rule 2: tier flips are local-only
+            )
+            self._overlay = self._trim_overlay(
+                residency_overlay(new_plan), new_plan, self._history)
+            self.stats.replans += 1
+            summary["replanned"] = True
+
+            # 4. push to every replica as an overlay on ITS plan
+            for name, daemon in self._replicas.items():
+                try:
+                    plan = apply_overlay(daemon.tiered.plan, self._overlay)
+                    res = daemon.apply_plan(plan, trace=self._history,
+                                            sync_preload=self.sync_preload)
+                except Exception as e:
+                    self.stats.push_failures += 1
+                    self.last_errors[name] = repr(e)
+                    summary["failed"][name] = f"push: {e!r}"
+                    continue
+                self.stats.pushes += 1
+                summary["pushed"].append(name)
+                summary["promoted"] += res["promoted"]
+                summary["demoted"] += res["demoted"]
+            return summary
+
+    def _trim_overlay(
+        self, overlay: dict[str, list[str]], plan, history: AccessTrace
+    ) -> dict[str, list[str]]:
+        """Fit the overlay to the fleet's tightest replica budget, keeping
+        the globally hottest units (by federated touch+fault heat). The
+        replan promotes everything the history justifies; the budget is a
+        per-replica property the replan can't see, so the cap is applied
+        here — per-path order (replan's within-path ranking) is kept for
+        whatever survives. No registered budget → nothing to trim."""
+        cap = self._min_budget
+        if not cap:
+            return overlay
+        sizes = {
+            u.key: u.nbytes
+            for dec in plan.decisions.values() if dec.tier == 1
+            for u in dec.units
+        }
+        def heat(k: str) -> float:
+            return history.touches.get(k, 0) + history.faults.get(k, 0)
+        ranked = sorted(
+            ((p, k) for p, ks in overlay.items() for k in ks),
+            key=lambda pk: (-heat(pk[1]), pk[1]),  # deterministic tie-break
+        )
+        kept: set[str] = set()
+        total = 0
+        for _, k in ranked:
+            nb = sizes.get(k, 0)
+            if total + nb <= cap:
+                kept.add(k)
+                total += nb
+        return {p: [k for k in ks if k in kept] for p, ks in overlay.items()}
+
+    # -- warm bootstrap ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """The fleet's learned state as a plain-JSON dict: the decayed
+        history (§10 canonical numbers — round-trips byte-identically)
+        plus the last pushed overlay. No plans, no unit objects, no
+        replica handles: a controller in another process can ``restore``
+        this and warm-bootstrap replicas it has never met."""
+        with self._lock:
+            return {
+                "version": self.SNAPSHOT_VERSION,
+                "decay": self.decay,
+                "promote_min_faults": self.promote_min_faults,
+                "max_promote_bytes": self.max_promote_bytes,
+                "sync_preload": self.sync_preload,
+                "history": None if self._history is None else self._history.to_dict(),
+                "overlay": None if self._overlay is None else {
+                    p: list(ks) for p, ks in sorted(self._overlay.items())
+                },
+            }
+
+    @classmethod
+    def restore(cls, snap: dict) -> "FleetController":
+        """Rebuild a controller from ``snapshot()`` output. Replicas are
+        NOT restored — they re-``register``, and any that join while the
+        restored overlay is set get the §14.1 warm bootstrap."""
+        version = snap.get("version")
+        if version != cls.SNAPSHOT_VERSION:
+            raise ValueError(
+                f"unsupported fleet snapshot version {version!r} "
+                f"(expected {cls.SNAPSHOT_VERSION})"
+            )
+        fc = cls(
+            decay=snap["decay"],
+            promote_min_faults=snap["promote_min_faults"],
+            max_promote_bytes=snap["max_promote_bytes"],
+            sync_preload=snap.get("sync_preload", False),
+        )
+        if snap.get("history") is not None:
+            fc._history = AccessTrace.from_dict(snap["history"])
+        if snap.get("overlay") is not None:
+            fc._overlay = {p: list(ks) for p, ks in snap["overlay"].items()}
+        return fc
+
+    # -- introspection -----------------------------------------------------------
+    @property
+    def history(self) -> Optional[AccessTrace]:
+        """The decayed federated history the last replan saw."""
+        with self._lock:
+            return self._history
+
+    @property
+    def overlay(self) -> Optional[dict[str, list[str]]]:
+        """The last pushed residency overlay (a copy)."""
+        with self._lock:
+            if self._overlay is None:
+                return None
+            return {p: list(ks) for p, ks in self._overlay.items()}

@@ -97,22 +97,39 @@ class AccessTrace:
     ``end_request(rid)`` drops the per-request chain state at retirement
     so a long-lived trace never links across unrelated requests.
 
+    **Higher-order signals** (DESIGN.md §14.2, schema v3): alongside the
+    first-order ``transitions``, ``record`` keeps
+
+      * ``phase_transitions[phase][a][b]`` — the same batch→next-batch
+        counts split by the *current* batch's request phase, so a
+        predictor can rank prefill successors and decode successors
+        separately (a unit hot during prefill is often cold in decode);
+      * ``transitions2[(a2, a1)][b]`` — second-order context: ``a2`` from
+        the batch two steps back, ``a1`` from the previous batch, ``b``
+        in the current one. Recorded only for batches of at most
+        ``max_order2_batch`` keys (the pair fan-out is quadratic where
+        first-order is linear).
+
     **Lifecycle** (DESIGN.md §12.2): one trace = one observation window.
     ``merge(newer, decay=d)`` folds windows across cadence ticks (and
     across replicas): this window's counts are scaled by ``d`` before the
     newer window's are added, so the hot set tracks shifting workloads
     (``d=1`` → plain lifetime sum, ``d=0`` → newest window only). Entries
-    decaying below ``prune_below`` are dropped. The schema carries a
+    decaying below ``prune_below`` are dropped. ``merge_all`` folds a
+    *list* of same-tick windows (one per fleet replica) with plain-sum
+    semantics — commutative and associative, so the fleet plan cannot
+    depend on replica pull order (DESIGN.md §14.1). The schema carries a
     ``version`` field next to artifact.json's; merging or loading across
-    schema versions raises (v1 documents, which predate the request-
-    attribution fields, still load).
+    schema versions raises (v1/v2 documents, which predate the request-
+    attribution and higher-order fields respectively, still load).
     """
 
-    VERSION = 2
+    VERSION = 3
 
-    def __init__(self, *, max_assoc_batch: int = 64):
+    def __init__(self, *, max_assoc_batch: int = 64, max_order2_batch: int = 8):
         self.version = self.VERSION
         self.max_assoc_batch = max_assoc_batch
+        self.max_order2_batch = max_order2_batch
         self.batches = 0
         self.touches: dict[str, int] = {}
         self.faults: dict[str, int] = {}
@@ -121,7 +138,11 @@ class AccessTrace:
         self.transitions: dict[str, dict[str, int]] = {}
         self.request_pairs: dict[tuple, int] = {}   # same-request co-access
         self.request_transitions: dict[str, dict[str, int]] = {}
+        # schema v3: phase-conditioned + second-order successor counts
+        self.phase_transitions: dict[str, dict[str, dict[str, int]]] = {}
+        self.transitions2: dict[tuple, dict[str, int]] = {}  # (a2, a1) -> {b: n}
         self._last_batch: list[str] = []
+        self._last2_batch: list[str] = []  # the batch before _last_batch
         self._last_by_request: dict[int, list[str]] = {}
 
     def record(self, keys: Iterable[str], cold: Iterable[str], phase: str = "") -> None:
@@ -146,16 +167,39 @@ class AccessTrace:
                         self.pairs[pair] = self.pairs.get(pair, 0) + 1
             # _last_batch is [] or an under-cap batch by construction
             cur = set(keys)
+            by_phase = self.phase_transitions.setdefault(phase, {})
             for a in self._last_batch:
                 succ = [b for b in cur if b != a]
                 if not succ:
                     continue  # never leave an empty successor dict behind
                 nxt = self.transitions.setdefault(a, {})
+                pnxt = by_phase.setdefault(a, {})
                 for b in succ:
                     nxt[b] = nxt.get(b, 0) + 1
+                    pnxt[b] = pnxt.get(b, 0) + 1
+            if not by_phase:
+                del self.phase_transitions[phase]
+            # second-order context (DESIGN.md §14.2): the quadratic
+            # (a2, a1) fan-out gets a tighter cap than first-order
+            cap2 = self.max_order2_batch
+            if (
+                len(keys) <= cap2
+                and 0 < len(self._last_batch) <= cap2
+                and 0 < len(self._last2_batch) <= cap2
+            ):
+                for a2 in self._last2_batch:
+                    for a1 in self._last_batch:
+                        succ = [b for b in cur if b != a1 and b != a2]
+                        if not succ:
+                            continue
+                        nxt2 = self.transitions2.setdefault((a2, a1), {})
+                        for b in succ:
+                            nxt2[b] = nxt2.get(b, 0) + 1
+            self._last2_batch = self._last_batch
             self._last_batch = keys
         else:
             self._last_batch = []
+            self._last2_batch = []
 
     # -- request attribution (DESIGN.md §12.3) ---------------------------------
     def record_request(self, rid: int, keys: Iterable[str]) -> None:
@@ -199,7 +243,14 @@ class AccessTrace:
         neither input is mutated, and the merged trace carries no
         in-flight chain state (``_last_batch``/``_last_by_request``).
         Deterministic: same inputs → byte-identical ``to_json``. Raises on
-        schema-version mismatch."""
+        schema-version mismatch, and on ``newer is self`` (an aliased
+        merge would read counts it is also summing into — fold a window
+        into a *different* history object, or snapshot first)."""
+        if newer is self:
+            raise ValueError(
+                "cannot merge an AccessTrace into itself (aliasing); "
+                "merge a rotated window or a snapshot copy instead"
+            )
         if not 0.0 <= decay <= 1.0:
             raise ValueError(f"decay must be in [0, 1], got {decay!r}")
         if self.version != newer.version:
@@ -228,7 +279,8 @@ class AccessTrace:
             return {k: v for k, v in sub.items() if v}
 
         merged = AccessTrace(
-            max_assoc_batch=max(self.max_assoc_batch, newer.max_assoc_batch))
+            max_assoc_batch=max(self.max_assoc_batch, newer.max_assoc_batch),
+            max_order2_batch=max(self.max_order2_batch, newer.max_order2_batch))
         merged.batches = norm(
             (self.batches if decay == 1 else self.batches * decay) + newer.batches)
         merged.touches = counts(self.touches, newer.touches)
@@ -239,7 +291,28 @@ class AccessTrace:
         merged.request_pairs = counts(self.request_pairs, newer.request_pairs)
         merged.request_transitions = nested(
             self.request_transitions, newer.request_transitions)
+        merged.phase_transitions = {
+            ph: sub
+            for ph in set(self.phase_transitions) | set(newer.phase_transitions)
+            if (sub := nested(self.phase_transitions.get(ph, {}),
+                              newer.phase_transitions.get(ph, {})))
+        }
+        merged.transitions2 = nested(self.transitions2, newer.transitions2)
         return merged
+
+    @classmethod
+    def merge_all(cls, windows, *, prune_below: float = 0.5) -> "AccessTrace":
+        """Fold a list of observation windows into one trace with *plain
+        sum* semantics (``decay=1``). Integer counts make the sum
+        commutative and associative, so the result — and any fleet plan
+        derived from it — is independent of the order replicas were
+        pulled in (DESIGN.md §14.1, property-tested in tests/test_fleet.py).
+        An empty window list returns an empty trace (a fleet tick where
+        every replica was idle is a no-op, not an error)."""
+        out = cls()
+        for w in windows:
+            out = out.merge(w, decay=1.0, prune_below=prune_below)
+        return out
 
     # -- serialization (deterministic; the --profile-out format) --------------
     def to_dict(self) -> dict:
@@ -264,6 +337,19 @@ class AccessTrace:
                 k: {n: v[n] for n in sorted(v)}
                 for k, v in sorted(self.request_transitions.items())
             },
+            "phase_transitions": {
+                ph: {
+                    k: {n: v[n] for n in sorted(v)}
+                    for k, v in sorted(tbl.items())
+                }
+                for ph, tbl in sorted(self.phase_transitions.items())
+            },
+            # tuple keys flatten to sorted [a2, a1, b, n] rows (JSON-safe)
+            "transitions2": [
+                [a2, a1, b, v[b]]
+                for (a2, a1), v in sorted(self.transitions2.items())
+                for b in sorted(v)
+            ],
         }
 
     def to_json(self) -> str:
@@ -273,9 +359,10 @@ class AccessTrace:
 
     @classmethod
     def from_dict(cls, d: dict) -> "AccessTrace":
-        # v1 documents (pre request-attribution) still load — the new
-        # fields default empty; anything else is a schema we don't know
-        if d.get("version") not in (1, cls.VERSION):
+        # older documents still load — v1 predates request attribution,
+        # v2 the higher-order tables; the absent fields default empty.
+        # Anything else is a schema we don't know.
+        if d.get("version") not in (1, 2, cls.VERSION):
             raise ValueError(f"unsupported AccessTrace version {d.get('version')!r}")
         t = cls()
         # counts stay as-parsed (int, or float from a decayed merge) so a
@@ -290,6 +377,12 @@ class AccessTrace:
         t.request_transitions = {
             k: dict(v) for k, v in d.get("request_transitions", {}).items()
         }
+        t.phase_transitions = {
+            ph: {k: dict(v) for k, v in tbl.items()}
+            for ph, tbl in d.get("phase_transitions", {}).items()
+        }
+        for a2, a1, b, n in d.get("transitions2", []):
+            t.transitions2.setdefault((a2, a1), {})[b] = n
         return t
 
     @classmethod

@@ -70,51 +70,154 @@ def merge_hints(*hint_lists: Iterable[str]) -> list[str]:
     return list(out)
 
 
-class TransitionPredictor:
-    """Learned unit→next-unit table from a profiling run (DESIGN.md §11.3).
+def _rank(counts: dict, k: int) -> list[str]:
+    """Top-``k`` keys by observed count, equal counts tie-broken by key —
+    NEVER by dict insertion order, so an identical table built from a
+    differently-ordered trace predicts in an identical order
+    (tests/test_fleet.py regression)."""
+    return [n for n, _ in sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))[:k]]
 
-    Built from ``AccessTrace.transitions`` (batch→next-batch co-occurrence
-    counts): for each unit the top-``k`` successors ranked by observed
-    count (ties broken by key for determinism). ``follow(keys)``
-    round-robin-merges the per-key successor lists — the same fairness
-    rule the scheduler applies to per-slot hints — so one unit's long
-    tail cannot starve another's best prediction.
+
+class TransitionPredictor:
+    """Learned unit→next-unit model from a profiling run (DESIGN.md §11.3,
+    upgraded per §14.2).
+
+    Three stacked signals, consulted most-specific-first by ``follow``:
+
+      * **second-order** — ``AccessTrace.transitions2``: successors of the
+        *(two-batches-ago, previous-batch)* unit pair; a workload whose
+        step t is ambiguous given step t−1 alone (shared prefix, divergent
+        tails) disambiguates on the pair;
+      * **phase-conditioned** — ``AccessTrace.phase_transitions``: separate
+        successor tables for prefill and decode batches (a unit hot during
+        prefill is often cold in decode); falls back to
+      * **first-order global** — the original ``transitions`` table.
+
+    Rankings come from observed counts with ties broken by key (see
+    ``_rank``); per-key lists are round-robin-merged (``merge_hints``, the
+    scheduler's per-slot fairness rule) so one unit's long tail cannot
+    starve another's best prediction. Finally each predicted unit is
+    **cluster-expanded** through its strongest co-access mates (from the
+    coincidence-free ``request_pairs`` when present, else ``pairs``): one
+    predicted hit pre-warms the whole cluster that historically loads
+    together.
     """
 
-    def __init__(self, transitions: dict, *, top_k: int = 8):
+    def __init__(
+        self,
+        transitions: dict,
+        *,
+        top_k: int = 8,
+        phase_transitions: Optional[dict] = None,
+        transitions2: Optional[dict] = None,
+        pairs: Optional[dict] = None,
+        cluster_size: int = 3,
+        cluster_min_count: int = 2,
+    ):
         self.top_k = max(1, top_k)
         self._table: dict[str, list[str]] = {
-            key: [
-                nxt
-                for nxt, _ in sorted(counts.items(), key=lambda kv: (-kv[1], kv[0]))[
-                    : self.top_k
-                ]
-            ]
+            key: _rank(counts, self.top_k)
             for key, counts in transitions.items()
             if counts
         }
+        self._phase_tables: dict[str, dict[str, list[str]]] = {
+            ph: {key: _rank(counts, self.top_k) for key, counts in tbl.items() if counts}
+            for ph, tbl in (phase_transitions or {}).items()
+        }
+        self._table2: dict[tuple, list[str]] = {
+            ctx: _rank(counts, self.top_k)
+            for ctx, counts in (transitions2 or {}).items()
+            if counts
+        }
+        # co-access clusters as bounded neighbour lists: for each unit, its
+        # ``cluster_size`` strongest partners with pair count >=
+        # ``cluster_min_count`` (a one-off coincidence is not a cluster)
+        by_key: dict[str, dict[str, int]] = {}
+        for (a, b), n in (pairs or {}).items():
+            if n >= cluster_min_count:
+                by_key.setdefault(a, {})[b] = n
+                by_key.setdefault(b, {})[a] = n
+        self._mates: dict[str, list[str]] = {
+            k: _rank(partners, max(0, cluster_size))
+            for k, partners in by_key.items()
+        }
 
     @classmethod
-    def from_trace(cls, trace, *, top_k: int = 8) -> "TransitionPredictor":
-        """``trace`` is an ``core.on_demand.AccessTrace`` (or anything with
-        a ``transitions`` dict)."""
-        return cls(trace.transitions, top_k=top_k)
+    def from_trace(
+        cls, trace, *, top_k: int = 8, prefer_request: bool = False,
+        cluster_size: int = 3, cluster_min_count: int = 2,
+    ) -> "TransitionPredictor":
+        """``trace`` is a ``core.on_demand.AccessTrace`` (or anything with
+        the same table attributes; absent ones default empty). With
+        ``prefer_request`` the coincidence-free ``request_transitions`` /
+        ``request_pairs`` take precedence over the batch-level tables when
+        non-empty (scheduler-attributed traffic, DESIGN.md §12.3)."""
+        table = trace.transitions
+        pairs = getattr(trace, "pairs", None)
+        if prefer_request:
+            table = getattr(trace, "request_transitions", None) or table
+            pairs = getattr(trace, "request_pairs", None) or pairs
+        return cls(
+            table,
+            top_k=top_k,
+            phase_transitions=getattr(trace, "phase_transitions", None),
+            transitions2=getattr(trace, "transitions2", None),
+            pairs=pairs,
+            cluster_size=cluster_size,
+            cluster_min_count=cluster_min_count,
+        )
 
     def __len__(self) -> int:
         return len(self._table)
 
-    def successors(self, key: str) -> list[str]:
+    def successors(self, key: str, *, phase: str = "") -> list[str]:
+        """First-order successors; with ``phase`` the phase-conditioned
+        table is consulted first, falling back to the global one."""
+        if phase:
+            hit = self._phase_tables.get(phase, {}).get(key)
+            if hit:
+                return list(hit)
         return list(self._table.get(key, ()))
 
-    def follow(self, keys: Iterable[str]) -> list[str]:
+    def mates(self, key: str) -> list[str]:
+        """The unit's co-access cluster (strongest partners first)."""
+        return list(self._mates.get(key, ()))
+
+    def follow(
+        self, keys: Iterable[str], *, phase: str = "", prev: Iterable[str] = (),
+    ) -> list[str]:
         """Ranked, deduped successor predictions for a set of observed
-        units; the observed units themselves are never predicted. Merge
-        order follows the caller's key order (deduped), not a hash-
+        units; the observed units themselves are never predicted. ``prev``
+        is the previous observation batch — when given, second-order
+        ``(prev_unit, cur_unit)`` context outranks first-order successors.
+        Merge order follows the caller's key order (deduped), not a hash-
         randomized set, so identical runs prefetch in identical order."""
         ordered = list(dict.fromkeys(keys))
         seen = set(ordered)
-        merged = merge_hints(*(self._table.get(k, ()) for k in ordered))
-        return [k for k in merged if k not in seen]
+        streams: list = []
+        if prev and self._table2:
+            prev_ordered = list(dict.fromkeys(prev))
+            streams.extend(
+                self._table2[(a2, a1)]
+                for a2 in prev_ordered
+                for a1 in ordered
+                if (a2, a1) in self._table2
+            )
+        streams.extend(self.successors(k, phase=phase) for k in ordered)
+        merged = [k for k in merge_hints(*streams) if k not in seen]
+        if not self._mates:
+            return merged
+        # cluster expansion: a predicted unit drags its co-access mates in
+        # behind it (they historically load together), never ahead of a
+        # directly-predicted unit
+        out = list(merged)
+        have = seen | set(out)
+        for k in merged:
+            for m in self._mates.get(k, ()):
+                if m not in have:
+                    out.append(m)
+                    have.add(m)
+        return out
 
 
 @dataclass
@@ -169,6 +272,7 @@ class Prefetcher:
         self.tiered = tiered
         self.batch_units = max(1, batch_units)
         self.predictor = predictor
+        self._obs_prev: list[str] = []  # last observe() batch (2nd-order ctx)
         self.stats = PrefetchStats()
         # hint set keeps insertion order (FIFO priority) while deduping
         self._hints: OrderedDict[str, None] = OrderedDict()
@@ -233,7 +337,9 @@ class Prefetcher:
         if not keys:
             return 0
         self.stats.observed += len(keys)
-        predicted = self.predictor.follow(keys)
+        prev, self._obs_prev = self._obs_prev, keys
+        predicted = self.predictor.follow(
+            keys, phase=self.tiered._phase, prev=prev)
         if not predicted:
             return 0
         accepted = self.hint(predicted)

@@ -202,6 +202,43 @@ def replan_from_trace(
     return new_plan, report
 
 
+def residency_overlay(plan: TierPlan) -> dict[str, list[str]]:
+    """The portable residency state of a plan: tier-1 path → hot-set unit
+    keys, hottest-first order preserved. This is what a fleet controller
+    federates (DESIGN.md §14.1): unlike a ``TierPlan`` it carries no
+    ``Unit`` objects, serializes to plain JSON, and can be applied to any
+    replica's own plan via ``apply_overlay`` — including a replica in a
+    different process restoring from a snapshot."""
+    return {
+        path: list(dec.resident_units)
+        for path, dec in sorted(plan.decisions.items())
+        if dec.tier == 1
+    }
+
+
+def apply_overlay(plan: TierPlan, overlay: dict[str, list[str]]) -> TierPlan:
+    """Materialize a replica-local plan from a fleet residency overlay:
+    each tier-1 decision's hot set is replaced by the overlay's entry,
+    filtered to unit keys the decision actually owns (replicas with a
+    slightly different unit split simply ignore foreign keys). Paths
+    absent from the overlay — and every tier-0 decision — are untouched,
+    so applying an overlay can never flip a tier (the §12.1 rule 2
+    analogue for remote plans). Returns a NEW plan; the input is not
+    mutated."""
+    decisions = dict(plan.decisions)
+    for path, keys in overlay.items():
+        dec = decisions.get(path)
+        if dec is None or dec.tier != 1:
+            continue
+        owned = {u.key for u in dec.units}
+        decisions[path] = dataclasses.replace(
+            dec, resident_units=tuple(k for k in keys if k in owned)
+        )
+    return TierPlan(
+        decisions=decisions, profile=plan.profile, entry_names=list(plan.entry_names)
+    )
+
+
 def retier_artifact(
     artifact_dir: str,
     plan: TierPlan,

@@ -35,6 +35,15 @@ Safety rules (DESIGN.md §12.1):
     actually owns (``TieredParams`` units backed by the optional store);
   * demotion uses ``TieredParams.evict``, which skips pinned, LOADING,
     and already-cold units — a mid-step working set is untouchable.
+
+Fleet federation (DESIGN.md §14): a ``FleetController`` drives N daemons
+through two remote hooks — ``pull_window()`` hands the controller this
+replica's rotated trace window (folding it into the local history as a
+tick would), and ``apply_plan()`` applies a plan the controller replanned
+from the *federated* history, under exactly the §12.1 safety rules (the
+tier-0 ⊇ entry-reachable invariant is re-proved HERE, on the replica,
+before any mutation — a corrupted or adversarial remote plan is rejected
+whole).
 """
 
 from __future__ import annotations
@@ -72,6 +81,8 @@ class RetierDaemonStats:
     preload_bytes: int = 0      # synchronous (no-prefetcher) preload traffic
     predictor_refreshes: int = 0
     compactions: int = 0        # periodic artifact rewrites
+    pulls: int = 0              # fleet window pulls (DESIGN.md §14.1)
+    remote_applies: int = 0     # fleet plans applied via apply_plan()
 
     def to_dict(self) -> dict:
         return dict(self.__dict__)
@@ -135,6 +146,7 @@ class RetierDaemon:
         self.last_error: str = ""
         self._lock = threading.Lock()
         self._merged: Optional[AccessTrace] = None
+        self._unpulled: Optional[AccessTrace] = None  # accumulated for the fleet
         self._steps_since = 0
         self._last_tick_t = time.monotonic()
         # the invariant's required set is a function of the ORIGINAL plan
@@ -208,6 +220,7 @@ class RetierDaemon:
         if window is None:
             self.stats.skipped_empty += 1
             return None
+        self._accumulate_unpulled(window)
         if window.batches < self.min_batches:
             # too little signal to replan on, but don't throw it away:
             # fold it in undecayed so slow traffic still accumulates
@@ -230,7 +243,7 @@ class RetierDaemon:
             max_promote_bytes=self.max_promote_bytes,
             promote_leaves=False,  # §12.1: tier flips wait for compaction
         )
-        self._apply(new_plan, report)
+        self._apply(new_plan)
         self.last_report = report
         arb = getattr(self.tiered, "arbiter", None)
         if arb is not None:
@@ -241,7 +254,69 @@ class RetierDaemon:
             arb.observe_tick(self.tiered)
         return report
 
-    def _apply(self, new_plan, report: RetierReport) -> None:
+    # -- fleet hooks (DESIGN.md §14.1) -------------------------------------------
+    def _accumulate_unpulled(self, window: AccessTrace) -> None:
+        """Every rotated window (tick OR pull) also lands — undecayed,
+        plain-sum — in the since-last-pull accumulator, so the fleet's
+        ``pull_window`` sees everything this replica observed regardless
+        of how its local tick cadence happened to chop the trace up. The
+        undecayed sum keeps the pulled windows commutative across
+        replicas (§14.1 rule 1)."""
+        if not window.batches:
+            return
+        self._unpulled = (
+            window if self._unpulled is None
+            else self._unpulled.merge(window, decay=1.0)
+        )
+
+    def pull_window(self) -> Optional[AccessTrace]:
+        """Rotate the live trace and hand the controller EVERYTHING this
+        replica observed since the last pull (rotated window + any
+        windows local ticks already consumed). The live window is ALSO
+        folded into the local decayed history — exactly as a tick would —
+        so ``trace_snapshot``/``--profile-out`` keep working, federated
+        or not. Returns ``None`` when nothing new was observed (the
+        controller skips this replica for the cycle)."""
+        with self._lock:
+            self.stats.pulls += 1
+            window = self.tiered.rotate_trace()
+            if window is not None and window.batches:
+                self._accumulate_unpulled(window)
+                self._merged = (
+                    window if self._merged is None
+                    else self._merged.merge(window, decay=self.decay)
+                )
+            out, self._unpulled = self._unpulled, None
+            return out
+
+    def apply_plan(
+        self,
+        new_plan,
+        *,
+        trace: Optional[AccessTrace] = None,
+        sync_preload: bool = False,
+    ) -> dict:
+        """Apply a plan replanned ELSEWHERE (a ``FleetController``) under
+        the same §12.1 safety rules as a local tick.
+
+        Unlike ``tick()`` this RAISES on a tier-0 superset violation —
+        strictly before any mutation — so the controller can quarantine a
+        bad plan/replica without this replica's loader ever changing
+        state. ``trace`` (the federated history) refreshes the predictor
+        in place of the local history; ``sync_preload=True`` forces
+        promotions through a synchronous between-batches preload even
+        when a prefetcher is attached — the warm-bootstrap path, where
+        the replica must be resident BEFORE admitting traffic."""
+        with self._lock:
+            n_promote, n_demote = self._apply(
+                new_plan, sync_preload=sync_preload, refresh_from=trace
+            )
+            self.stats.remote_applies += 1
+            return {"promoted": n_promote, "demoted": n_demote}
+
+    def _apply(
+        self, new_plan, *, sync_preload: bool = False, refresh_from=None
+    ) -> tuple[int, int]:
         """Apply a replanned hot set to the running loader, in place."""
         # §12.1 rule 1: re-prove the invariant on EVERY application
         check_tier0_superset(new_plan, self._required)
@@ -271,32 +346,66 @@ class RetierDaemon:
             self.stats.demoted_units += len(demote)
             self.stats.evicted_units += tiered.stats.evictions - evictions0
             self.stats.evicted_bytes += freed
+        budget = tiered.residency.budget_bytes
+        sync_path = sync_preload or self.prefetcher is None
+        if promote and budget and sync_path:
+            # budget-fit trim for the SYNCHRONOUS preload path only:
+            # preloading past the budget would LRU-churn out the very units
+            # just loaded (the replan ranks promotions but can't know this
+            # replica's budget — under federation the controller doesn't
+            # either, §14.1). Rank globally hottest-first by trace heat
+            # (the per-decision diff above concatenates paths in plan
+            # order), keep the prefix that fits the post-demotion headroom;
+            # the tail stays demand-faultable. Async hints need neither the
+            # sort nor the trim: the queue is loaded in order under LRU, so
+            # what persists is its suffix, and interleaved demand faults
+            # keep re-claiming what the workload actually needs.
+            heat_src = refresh_from if refresh_from is not None else self._merged
+            if heat_src is not None:
+                heat = {
+                    k: heat_src.touches.get(k, 0) + heat_src.faults.get(k, 0)
+                    for k in promote
+                }
+                promote.sort(key=lambda k: -heat[k])  # stable: ties keep plan order
+            resident = tiered.resident_keys
+            headroom = budget - tiered.resident_bytes
+            kept = []
+            for k in promote:
+                if k in resident:
+                    kept.append(k)
+                    continue
+                nb = tiered._unit_nbytes(k)
+                if nb <= headroom:
+                    headroom -= nb
+                    kept.append(k)
+            promote = kept
         if promote:
             self.stats.promoted_units += len(promote)
-            if self.prefetcher is not None:
+            if self.prefetcher is not None and not sync_preload:
                 # promotions ride the prefetch queue: claimed COLD→LOADING,
                 # loaded off the serving thread, hit-accounted like any hint
                 self.prefetcher.hint(promote)
             else:
-                # no prefetcher (strict deployments): preload synchronously
-                # HERE, between batches — bytes move, but never inside a
-                # step and never on a request's fault path
+                # no prefetcher (strict deployments) or a warm bootstrap:
+                # preload synchronously HERE, between batches — bytes move,
+                # but never inside a step and never on a request's fault path
                 self.stats.preload_bytes += tiered.ensure(promote, source="preload")
 
         tiered.plan = new_plan
         self.stats.applies += 1
 
-        if self.refresh_predictor and self.prefetcher is not None and self._merged:
+        src = refresh_from if refresh_from is not None else self._merged
+        if self.refresh_predictor and self.prefetcher is not None and src is not None:
             # per-request transitions are coincidence-free (§12.3); fall
             # back to batch transitions when no scheduler attribution exists
-            table = self._merged.request_transitions or self._merged.transitions
-            if table:
-                self.prefetcher.predictor = TransitionPredictor(
-                    table, top_k=self.predictor_top_k)
+            if src.request_transitions or src.transitions:
+                self.prefetcher.predictor = TransitionPredictor.from_trace(
+                    src, top_k=self.predictor_top_k, prefer_request=True)
                 self.stats.predictor_refreshes += 1
 
         if self.compact_every and self.stats.applies % self.compact_every == 0:
             self.compact()
+        return len(promote), len(demote)
 
     def compact(self) -> dict:
         """Rewrite the artifact from the CURRENT live plan so the next cold

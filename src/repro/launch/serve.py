@@ -28,6 +28,13 @@ hot set to the running server (promote = prefetch preload, demote =
 eviction). ``--retier-compact-every N`` additionally rewrites the
 artifact every N applications so future cold starts boot the adapted
 hot set.
+
+Fleet federation (DESIGN.md §14): ``--fleet N`` serves the one-shot
+workload through N in-process replicas sharing one ``FleetController``
+— each replica's daemon contributes its trace window at every
+``fleet.sync()``, the controller replans ONCE from the federated
+history, and pushes the residency overlay back to every replica, so a
+hot-set shift one replica sees pre-warms all of them.
 """
 
 from __future__ import annotations
@@ -46,6 +53,7 @@ from repro.configs import get_config, get_reduced
 from repro.core import (
     AccessTrace,
     DeploymentProfile,
+    FleetController,
     HostArbiter,
     TransitionPredictor,
     analyze,
@@ -112,6 +120,12 @@ def main(argv=None) -> int:
                     help="online mode: rewrite the artifact (out-of-place, "
                          "rename-committed) every N plan applications so the "
                          "NEXT cold start boots the adapted hot set (0 = never)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="serve through N in-process replicas federated by a "
+                         "FleetController (DESIGN.md §14): each replica runs "
+                         "the one-shot workload, the controller syncs traces "
+                         "and pushes the learned hot set to all of them "
+                         "(implies --retier-online; after2 one-shot only)")
     args = ap.parse_args(argv)
     if (args.profile_out or args.retier_from or args.retier_online) and args.mode != "after2":
         ap.error("--profile-out/--retier-from/--retier-online need the "
@@ -128,6 +142,17 @@ def main(argv=None) -> int:
         # cold start has already run (RetierDaemon validates too, but by
         # then the tier-0 read + hot-set preload were paid for)
         ap.error("--retier-interval must be >= 1")
+    if args.fleet:
+        if args.fleet < 2:
+            ap.error("--fleet needs at least 2 replicas to federate")
+        if args.mode != "after2":
+            ap.error("--fleet needs the two-tier runtime (--mode after2)")
+        if args.concurrency > 0:
+            ap.error("--fleet drives the one-shot path; drop --concurrency")
+        if args.host_budget_bytes or args.profile_out or args.retier_from:
+            ap.error("--fleet composes with none of --host-budget-bytes/"
+                     "--profile-out/--retier-from (yet)")
+        args.retier_online = True  # the fleet federates RetierDaemons
     if args.retier_from and (args.no_prefetch or args.policy == "strict"):
         # without a prefetcher (explicit --no-prefetch, or the strict
         # preset's prefetch-off default) the trained predictor would be
@@ -185,6 +210,9 @@ def main(argv=None) -> int:
         print(f"[serve] re-tiered from {args.retier_from} -> {retier_dir}:",
               json.dumps(rep.summary()))
 
+    if args.fleet:
+        return _serve_fleet(model, result, outdir, args, cfg)
+
     warm_B = 1 if args.concurrency > 0 else args.batch
     # the context manager guarantees prefetcher/store teardown even when
     # the request path raises (a leaked reader/uploader thread would hang
@@ -236,12 +264,7 @@ def main(argv=None) -> int:
                   f"{hs.overshoots} overshoots, "
                   f"{hs.headroom_denials} prefetch headroom denials")
         if server.retier_daemon is not None:
-            ds = server.retier_daemon.stats
-            print(f"[serve] online retier: {ds.ticks} ticks, {ds.applies} applies "
-                  f"(+{ds.promoted_units}/-{ds.demoted_units} units, "
-                  f"{ds.evicted_bytes:,}B evicted, "
-                  f"{ds.predictor_refreshes} predictor refreshes, "
-                  f"{ds.compactions} compactions); zero restarts")
+            _print_daemon_stats(server)
         if args.profile_out and server.tiered is not None and server.tiered.trace is not None:
             # with the daemon on, the live trace is only the newest window —
             # save the decayed merge of everything the run observed instead
@@ -253,6 +276,77 @@ def main(argv=None) -> int:
                   f"{len(t.transitions)} transition sources)")
     if failed:
         print(f"[serve] FAILED: {failed} request(s) failed or never finished")
+    return 1 if failed else 0
+
+
+def _print_daemon_stats(server, label: str = "online retier") -> None:
+    """One line of daemon accounting + the predictor counters the daemon's
+    refresh cycle feeds (hit rate / observed / predicted)."""
+    ds = server.retier_daemon.stats
+    pred = ""
+    if server.tiered is not None and server.prefetcher is not None:
+        ts, ps = server.tiered.stats, server.prefetcher.stats
+        pred = (f", predictor hit rate {ts.prefetch_hit_rate:.2f} "
+                f"({ps.observed} observed, {ps.predicted} predicted)")
+    print(f"[serve] {label}: {ds.ticks} ticks, {ds.applies} applies "
+          f"(+{ds.promoted_units}/-{ds.demoted_units} units, "
+          f"{ds.evicted_bytes:,}B evicted, "
+          f"{ds.predictor_refreshes} predictor refreshes, "
+          f"{ds.compactions} compactions{pred}); zero restarts")
+
+
+def _serve_fleet(model, result, outdir, args, cfg) -> int:
+    """``--fleet N``: the one-shot workload through N in-process replicas
+    federated by one FleetController (DESIGN.md §14). Each replica cold-
+    starts with its own daemon registered to the fleet, serves the batch,
+    and the controller syncs after every replica — so by the time replica
+    k serves, it already carries the hot set replicas 0..k-1 learned."""
+    fleet = FleetController(decay=args.retier_decay)
+    servers = []
+    failed = 0
+    try:
+        for i in range(args.fleet):
+            s = cold_start(
+                model, outdir, result, mode="after2",
+                warm_shapes=((args.batch, args.prompt_len),),
+                residency=args.policy,
+                device_budget_bytes=args.device_budget_bytes or None,
+                prefetch=False if args.no_prefetch else None,
+                retier_online=True,
+                retier_interval=args.retier_interval,
+                retier_decay=args.retier_decay,
+                retier_compact_every=args.retier_compact_every,
+                fleet=fleet, replica_name=f"replica-{i}",
+            )
+            servers.append(s)
+            print(f"[serve] replica-{i} cold start:",
+                  json.dumps(s.report.to_dict(), default=float))
+        for i, s in enumerate(servers):
+            engine = GenerationEngine(s, max_seq=args.prompt_len + args.gen_steps + 8)
+            prompts = jax.random.randint(
+                jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+            out, st = engine.generate(prompts, args.gen_steps)
+            if out.shape[0] != args.batch:
+                failed += 1
+            print(f"[serve] replica-{i}: generated {out.shape}; "
+                  f"faults={st.faulted_units} ({st.faulted_bytes/2**20:.2f}MiB, "
+                  f"{st.fault_s*1e3:.1f}ms)")
+            rep = fleet.sync()
+            print(f"[serve] fleet sync: {rep['windows']}/{rep['pulled']} windows, "
+                  f"pushed to {len(rep['pushed'])} replicas "
+                  f"(+{rep['promoted']}/-{rep['demoted']} units)"
+                  + (f", FAILED {sorted(rep['failed'])}" if rep["failed"] else ""))
+        for i, s in enumerate(servers):
+            _print_daemon_stats(s, label=f"replica-{i} retier")
+        fs = fleet.stats
+        print(f"[serve] fleet: {fs.syncs} syncs, {fs.replans} replans, "
+              f"{fs.pushes} pushes ({fs.push_failures} failed), "
+              f"{fs.bootstraps} warm bootstraps")
+    finally:
+        for s in servers:
+            s.close()
+    if failed:
+        print(f"[serve] FAILED: {failed} replica run(s) produced short output")
     return 1 if failed else 0
 
 

@@ -191,6 +191,8 @@ def cold_start(
     retier_interval_s: Optional[float] = None,  # or wall-clock seconds
     retier_decay: float = 0.5,    # trace-window merge decay per tick
     retier_compact_every: int = 0,  # artifact rewrite every N applies (0 = never)
+    fleet=None,                   # FleetController to join (DESIGN.md §14)
+    replica_name: Optional[str] = None,  # fleet registration name
 ) -> ColdStartServer:
     """Run one timed cold start. ``result`` is required for after2.
 
@@ -200,8 +202,11 @@ def cold_start(
     unit→next-unit table from a prior profiling run (``--retier-from``).
     ``retier_online=True`` attaches a ``RetierDaemon`` (which implies a
     live trace) so the hot set adapts in place without a restart — the
-    engine/scheduler tick it between batches. All are after2-only and
-    ignored for the monolithic baselines.
+    engine/scheduler tick it between batches. ``fleet=`` registers the
+    daemon with a ``FleetController`` (DESIGN.md §14) before the server
+    is returned — i.e. before any traffic — so a late joiner against a
+    controller with learned state is warm-bootstrapped synchronously.
+    All are after2-only and ignored for the monolithic baselines.
     """
     put = put or (lambda host: jax.device_put(host))
     if residency is not None and residency not in RESIDENCY_PRESETS:
@@ -287,6 +292,9 @@ def cold_start(
             else None
         )
         daemon = None
+        if fleet is not None and not retier_online:
+            raise ValueError("fleet= needs retier_online=True (the fleet "
+                             "federates RetierDaemons, not bare loaders)")
         if retier_online:
             daemon = RetierDaemon(
                 tiered, result.reach, prefetcher=prefetcher,
@@ -294,6 +302,11 @@ def cold_start(
                 decay=retier_decay, compact_every=retier_compact_every,
                 artifact_dir=artifact_dir,
             )
+            if fleet is not None:
+                # join the fleet BEFORE traffic: a controller with learned
+                # state warm-bootstraps this replica here, synchronously
+                name = replica_name or f"replica-{len(fleet.replicas)}"
+                fleet.register(name, daemon)
         server = ColdStartServer(model, tree, report, tiered=tiered, store=store,
                                  prefetcher=prefetcher, retier_daemon=daemon)
     else:

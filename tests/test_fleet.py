@@ -1,0 +1,350 @@
+"""Fleet controller: federated trace aggregation + learned pre-warm
+(DESIGN.md §14).
+
+Covers the federation contract:
+  * one ``sync()`` cycle federates one replica's demand faults to every
+    other replica — pulled, merged, replanned ONCE, pushed as a residency
+    overlay and preloaded with exact bytes;
+  * retention: a unit a push warmed STOPS faulting, and must stay in the
+    overlay on decayed touches alone (regression: replanning from the
+    pristine base plan each cycle made residency require ongoing faults,
+    so the fleet demoted its own pre-warm, refaulted it, re-admitted it —
+    a fleet-wide eviction/refault oscillation);
+  * failure isolation: a replica whose push raises is recorded and
+    skipped, its loader untouched, and the cycle completes for the rest;
+  * the §12.1 invariant is re-proved ON THE REPLICA: ``apply_plan`` of a
+    plan that flips an entry-reachable tier-0 leaf raises strictly before
+    any mutation;
+  * warm bootstrap: ``snapshot()`` → ``restore()`` round-trips the fleet
+    state byte-identically, and a late joiner registered against a
+    restored controller is resident before it serves;
+  * pull-order independence (hypothesis, `slow`): the overlay and history
+    a sync produces do not depend on replica registration/poll order;
+  * predictor determinism: equal transition counts rank tie-broken by
+    key, never by table insertion order.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AccessTrace,
+    FleetController,
+    OptionalStore,
+    RetierDaemon,
+    TieredParams,
+    TransitionPredictor,
+)
+from repro.core.entrypoints import SERVING_PROFILE
+from repro.core.optional_store import write_store
+from repro.core.param_graph import ReachabilityReport
+from repro.core.partition import TierDecision, TierPlan, Unit
+
+import jax.numpy as jnp
+
+ROWS, COLS, N_UNITS = 16, 32, 8
+UNIT_BYTES = ROWS * COLS * 4
+
+
+def _replica(tmp_path, name, *, budget=None, resident=(), with_head=False):
+    """One row-tiered leaf over a real optional store + static reach —
+    the same mini fixture the daemon tests use, one store per replica."""
+    rng = np.random.default_rng(0)  # same bytes on every replica
+    data = rng.standard_normal((N_UNITS * ROWS, COLS)).astype(np.float32)
+    units = tuple(
+        Unit(f"emb#rg{g}", "emb", rows=(g * ROWS, (g + 1) * ROWS), nbytes=UNIT_BYTES)
+        for g in range(N_UNITS)
+    )
+    decisions = {
+        "emb": TierDecision("emb", 1, "rows", "test", data.nbytes, units=units,
+                            resident_units=tuple(resident)),
+    }
+    reachable = {"emb": {"prefill"}}
+    tree = {"emb": jnp.zeros(data.shape, jnp.float32)}
+    if with_head:
+        decisions["head"] = TierDecision("head", 0, "leaf", "test", 64)
+        reachable["head"] = {"decode_step"}
+        tree["head"] = jnp.zeros((4, 4), jnp.float32)
+    plan = TierPlan(decisions, SERVING_PROFILE, [])
+    path = str(tmp_path / f"{name}.blob")
+    write_store(path, [(u.key, data[u.rows[0]: u.rows[1]]) for u in units])
+    tp = TieredParams(tree, plan, OptionalStore(path), device_budget_bytes=budget)
+    reach = ReachabilityReport(entry_names=["prefill", "decode_step"],
+                               reachable=reachable)
+    daemon = RetierDaemon(tp, reach, interval_steps=10_000)
+    return tp, data, units, daemon
+
+
+def _rows_of(tp, units, g):
+    lo, hi = units[g].rows
+    return np.asarray(tp.leaf("emb"))[lo:hi]
+
+
+# ---------------------------------------------------------------------------
+# one federation cycle
+# ---------------------------------------------------------------------------
+
+def test_sync_federates_one_replicas_faults_to_all(tmp_path):
+    tp0, data, units, d0 = _replica(tmp_path, "r0")
+    tp1, _, _, d1 = _replica(tmp_path, "r1")
+    keys = [u.key for u in units]
+    fleet = FleetController()
+    fleet.register("r0", d0)
+    fleet.register("r1", d1)
+
+    tp0.ensure([keys[4], keys[5]])  # replica 0 explores; replica 1 is idle
+    summary = fleet.sync()
+
+    assert summary["replanned"] and sorted(summary["pushed"]) == ["r0", "r1"]
+    ov = fleet.overlay
+    assert set(ov["emb"]) == {keys[4], keys[5]}
+    # replica 1 never touched rg4/rg5, yet they are resident — exact bytes,
+    # loaded by the push's preload (no prefetcher → synchronous path)
+    for g in (4, 5):
+        assert tp1.is_resident(keys[g])
+        np.testing.assert_array_equal(
+            _rows_of(tp1, units, g), data[g * ROWS:(g + 1) * ROWS])
+    fs = fleet.stats
+    assert fs.syncs == 1 and fs.replans == 1
+    assert fs.pushes == 2 and fs.push_failures == 0
+    assert fs.pulls == 2 and fs.empty_windows == 1  # r1 had nothing new
+    assert d1.stats.remote_applies == 1 and d1.stats.pulls == 1
+
+
+def test_pull_window_survives_local_tick_cadence(tmp_path):
+    """A local tick rotating the live trace must not hide that window from
+    the next fleet pull — ticks fold windows into the un-pulled
+    accumulator, and the pull drains it."""
+    tp, _, units, daemon = _replica(tmp_path, "r0")
+    keys = [u.key for u in units]
+    tp.ensure([keys[3]])
+    daemon.tick()           # local tick consumes the live window...
+    tp.ensure([keys[6]])
+    w = daemon.pull_window()
+    assert w is not None    # ...but the fleet still sees BOTH observations
+    assert keys[3] in w.faults and keys[6] in w.faults
+    assert daemon.pull_window() is None  # drained — nothing new since
+
+
+def test_retention_no_promote_demote_oscillation(tmp_path):
+    """Once a push warms a unit it stops faulting; decayed TOUCHES alone
+    must keep it in the overlay (fault admits, touch retains), and only a
+    unit the whole fleet stops touching decays out."""
+    tp0, _, units, d0 = _replica(tmp_path, "r0")
+    tp1, _, _, d1 = _replica(tmp_path, "r1")
+    keys = [u.key for u in units]
+    fleet = FleetController()
+    fleet.register("r0", d0)
+    fleet.register("r1", d1)
+
+    tp0.ensure([keys[4], keys[5]])  # both admitted by fault
+    fleet.sync()
+    assert set(fleet.overlay["emb"]) == {keys[4], keys[5]}
+
+    for cycle in range(3):  # warm hits: touches only, zero new faults
+        tp0.ensure([keys[4]])
+        fleet.sync()
+        assert keys[4] in fleet.overlay["emb"], f"dropped on cycle {cycle}"
+        assert tp1.is_resident(keys[4])
+    # rg5 was never touched again: decayed out of the history (two halvings
+    # hit the prune threshold) and demoted everywhere — retention is by
+    # evidence, not tenure
+    assert keys[5] not in fleet.overlay["emb"]
+    assert not tp1.is_resident(keys[5])
+
+
+# ---------------------------------------------------------------------------
+# failure isolation + the on-replica invariant
+# ---------------------------------------------------------------------------
+
+def test_push_failure_is_isolated_to_the_failing_replica(tmp_path):
+    tp0, data, units, d0 = _replica(tmp_path, "r0")
+    tp1, _, _, d1 = _replica(tmp_path, "r1")
+    tp2, _, _, d2 = _replica(tmp_path, "r2")
+    keys = [u.key for u in units]
+    fleet = FleetController()
+    for name, d in (("r0", d0), ("r1", d1), ("r2", d2)):
+        fleet.register(name, d)
+
+    def boom(plan, **kw):
+        raise RuntimeError("replica wedged")
+    d1.apply_plan = boom
+
+    tp0.ensure([keys[4]])
+    summary = fleet.sync()
+
+    assert fleet.stats.push_failures == 1 and fleet.stats.pushes == 2
+    assert "replica wedged" in summary["failed"]["r1"]
+    assert "replica wedged" in fleet.last_errors["r1"]
+    # the healthy replicas were warmed; the wedged one's loader untouched
+    assert tp2.is_resident(keys[4])
+    assert not tp1.is_resident(keys[4])
+    assert tp1.plan.decisions["emb"].resident_units == ()
+    # the next cycle still serves everyone that works
+    tp0.ensure([keys[6]])
+    fleet.sync()
+    assert tp2.is_resident(keys[6])
+
+
+def test_apply_plan_reproves_invariant_before_any_mutation(tmp_path):
+    """§12.1 rule 1, federated: the REPLICA re-proves tier-0 ⊇
+    entry-reachable on a remote plan — a plan that flips a required leaf
+    is rejected whole, before a byte moves."""
+    tp, _, units, daemon = _replica(tmp_path, "r0", with_head=True)
+    bad = TierPlan(
+        {
+            **tp.plan.decisions,
+            "head": dataclasses.replace(
+                tp.plan.decisions["head"], tier=1,
+                units=(Unit("head", "head", nbytes=64),)),
+        },
+        SERVING_PROFILE, [],
+    )
+    before = tp.plan
+    with pytest.raises(ValueError, match="invariant"):
+        daemon.apply_plan(bad)
+    assert tp.plan is before                      # nothing swapped
+    assert daemon.stats.remote_applies == 0       # nothing counted applied
+    assert daemon.stats.promoted_units == daemon.stats.demoted_units == 0
+    assert tp.stats.evictions == 0
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore + warm bootstrap
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_roundtrip_and_late_join_bootstrap(tmp_path):
+    tp0, data, units, d0 = _replica(tmp_path, "r0")
+    keys = [u.key for u in units]
+    fleet = FleetController(decay=0.25, sync_preload=True)
+    fleet.register("r0", d0)
+    tp0.ensure([keys[2], keys[7]])
+    fleet.sync()
+
+    snap = fleet.snapshot()
+    wire = json.dumps(snap, sort_keys=True)       # must be plain JSON
+    fleet2 = FleetController.restore(json.loads(wire))
+    # byte-identical round-trip: restore() loses nothing snapshot() kept
+    assert json.dumps(fleet2.snapshot(), sort_keys=True) == wire
+    assert fleet2.decay == 0.25 and fleet2.sync_preload is True
+
+    # a replica the restored controller has NEVER met joins warm: the
+    # overlay is applied + preloaded synchronously inside register()
+    tp_new, _, _, d_new = _replica(tmp_path, "late")
+    assert fleet2.register("late", d_new) is True
+    assert fleet2.stats.bootstraps == 1
+    for g in (2, 7):
+        assert tp_new.is_resident(keys[g])
+        np.testing.assert_array_equal(
+            _rows_of(tp_new, units, g), data[g * ROWS:(g + 1) * ROWS])
+    assert d_new.stats.remote_applies == 1
+
+
+def test_restore_rejects_unknown_snapshot_version():
+    with pytest.raises(ValueError, match="version"):
+        FleetController.restore({"version": 99})
+
+
+def test_register_duplicate_name_rejected(tmp_path):
+    _, _, _, daemon = _replica(tmp_path, "r0")
+    fleet = FleetController()
+    fleet.register("r0", daemon)
+    with pytest.raises(ValueError, match="already registered"):
+        fleet.register("r0", daemon)
+    fleet.unregister("r0")
+    assert fleet.replicas == []
+    fleet.register("r0", daemon)  # name reusable after unregister
+
+
+# ---------------------------------------------------------------------------
+# pull-order independence (§14.1 rule 1, property-tested)
+# ---------------------------------------------------------------------------
+
+class _StubDaemon:
+    """The controller-facing daemon surface, with a canned window and a
+    recording apply — lets the property run hundreds of fleets without
+    stores or loaders."""
+
+    def __init__(self, tp, reach, window):
+        self.tiered = tp
+        self.reach = reach
+        self._window = window
+        self.applied = []
+
+    def pull_window(self):
+        w, self._window = self._window, None
+        return w
+
+    def apply_plan(self, plan, *, trace=None, sync_preload=False):
+        self.applied.append(plan)
+        return {"promoted": 0, "demoted": 0}
+
+
+@pytest.mark.slow
+def test_sync_result_independent_of_poll_order(tmp_path):
+    """Whatever windows the replicas hand over, registering (and hence
+    polling) them in a different order yields the SAME overlay and the
+    SAME federated history — byte-identically (§14.1 rule 1)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    keys = [f"emb#rg{g}" for g in range(N_UNITS)]
+    tp, _, _, real = _replica(tmp_path, "base")
+
+    @st.composite
+    def windows_and_order(draw):
+        n = draw(st.integers(min_value=2, max_value=4))
+        windows = []
+        for _ in range(n):
+            w = AccessTrace()
+            for _ in range(draw(st.integers(min_value=0, max_value=4))):
+                ks = draw(st.lists(st.sampled_from(keys), min_size=1,
+                                   max_size=4, unique=True))
+                cold = [k for k in ks if draw(st.booleans())]
+                w.record(ks, cold, draw(st.sampled_from(["prefill", "decode", ""])))
+            windows.append(w)
+        order = draw(st.permutations(list(range(n))))
+        return windows, order
+
+    def one_fleet(windows, idx_order):
+        fleet = FleetController()
+        for i in idx_order:
+            # fresh stubs per fleet: pull_window drains the window, and
+            # merging into an empty trace deep-copies the shared original
+            fleet.register(f"r{i}", _StubDaemon(
+                tp, real.reach, AccessTrace().merge(windows[i], decay=1.0)))
+        fleet.sync()
+        h = fleet.history
+        return fleet.overlay, None if h is None else h.to_json()
+
+    @settings(max_examples=60, deadline=None)
+    @given(windows_and_order())
+    def check(wo):
+        windows, order = wo
+        ov_a, hist_a = one_fleet(windows, list(range(len(windows))))
+        ov_b, hist_b = one_fleet(windows, list(order))
+        assert ov_a == ov_b
+        assert hist_a == hist_b
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# predictor rank determinism (the federated-retrain regression)
+# ---------------------------------------------------------------------------
+
+def test_predictor_tie_break_is_by_key_not_insertion_order():
+    """Two successor tables with the same counts but different dict
+    insertion order (exactly what differently-ordered federation merges
+    produce) must predict in the same order: ties break by key."""
+    fwd = {"a": {"x": 2, "y": 2, "z": 3}}
+    rev = {"a": {"z": 3, "y": 2, "x": 2}}
+    p_fwd = TransitionPredictor(fwd, top_k=3)
+    p_rev = TransitionPredictor(rev, top_k=3)
+    assert p_fwd.successors("a") == p_rev.successors("a") == ["z", "x", "y"]
+    # truncation happens AFTER the deterministic sort: top-2 keeps the
+    # count-3 winner plus the lexicographically-first of the tied pair
+    assert TransitionPredictor(rev, top_k=2).successors("a") == ["z", "x"]

@@ -9,7 +9,10 @@ contract the online re-tiering daemon depends on:
   * counts decaying below the prune threshold genuinely leave the trace;
   * schema-version mismatch raises; v1 documents still load; unknown
     versions don't; merged (fractional-count) traces round-trip through
-    the versioned JSON byte-identically.
+    the versioned JSON byte-identically;
+  * the fleet-federation edges (DESIGN.md §14.1): ``merge_all`` of no
+    windows is an empty trace, of any window permutation a byte-identical
+    plain sum, and merging a trace into itself (aliasing) is rejected.
 """
 
 import json
@@ -125,6 +128,45 @@ def test_merge_deterministic_and_non_mutating(decay):
     assert new1.to_json() == before_new
     # merged trace carries no in-flight chain state
     assert m1._last_batch == [] and m1._last_by_request == {}
+
+
+# ---------------------------------------------------------------------------
+# merge_all + aliasing (the fleet-federation edges, DESIGN.md §14.1)
+# ---------------------------------------------------------------------------
+
+def test_merge_all_of_nothing_is_an_empty_trace():
+    """A sync cycle where every replica returned an empty window must
+    produce a genuinely empty combined trace, not crash or fabricate."""
+    m = AccessTrace.merge_all([])
+    assert m.batches == 0
+    assert m.to_dict() == AccessTrace().to_dict()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_merge_all_is_order_independent_plain_sum(seed):
+    """§14.1 rule 1: the combine is commutative (undecayed sum), so the
+    fleet plan cannot depend on replica polling order."""
+    ws = [_random_trace(seed * 10 + i, with_requests=True) for i in range(4)]
+    m = AccessTrace.merge_all(ws)
+    perm = list(np.random.default_rng(seed).permutation(len(ws)))
+    assert m.to_json() == AccessTrace.merge_all([ws[i] for i in perm]).to_json()
+    # ... and equals the daemon's own decay=1 fold, window by window
+    acc = ws[0]
+    for w in ws[1:]:
+        acc = acc.merge(w, decay=1.0)
+    assert m.to_json() == acc.to_json()
+    for w in ws:  # inputs untouched
+        assert w.batches > 0
+
+
+def test_merge_self_aliasing_rejected():
+    """history.merge(history) would double-count every table in place;
+    the guard turns the silent corruption into an immediate error."""
+    t = _random_trace(5, with_requests=True)
+    before = t.to_json()
+    with pytest.raises(ValueError, match="itself"):
+        t.merge(t)
+    assert t.to_json() == before
 
 
 # ---------------------------------------------------------------------------
