@@ -1,0 +1,232 @@
+"""RQ11 (beyond-paper, DESIGN.md §15): scale-out serving on a simulated
+multi-device host — mesh-sharded tiered load and warm snapshot/restore.
+
+Three questions, one reduced MoE app:
+
+  * **shard-load** — tier-0 bundle upload + tier-1 full fault-in onto a
+    debug mesh with the §6 sharding rules vs. the same bytes replicated
+    to every device (``put=`` override with an empty PartitionSpec).
+    Sharding moves 1/shards of the bytes per device, so the wall-clock
+    and the per-device residency charge both shrink.
+  * **restore** — a replica joining from a warm server snapshot
+    (``cold_start(restore_from=...)``) vs. an identical replica joining
+    cold and re-faulting on the request path. First-request TTFT and
+    request-path fault bytes are compared; restore must cut fault
+    traffic by >= 2x.
+  * **parity** — the §15.1 contract: greedy outputs are asserted
+    identical between the eager sharded baseline (mode="before" on the
+    mesh) and the tiered sharded server, and between the cold and the
+    restored replica. (Cross-geometry tokens are only tolerance-close —
+    GSPMD reorders bf16 partial sums — so parity is asserted per
+    geometry, and cross-geometry on the *loaded bytes*.)
+
+The mesh wants 8 simulated devices: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI scale-out
+smoke job does; standalone ``python -m benchmarks.bench_rq11_scaleout``
+sets it before jax initializes). On fewer devices it degrades to a
+1xN mesh and says so.
+
+Wired into ``benchmarks/run.py`` as the ``rq11`` section and the
+``rq11_smoke`` entry of ``--smoke``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+# NOTE: no jax (or jax-importing repro/benchmarks module) at import time —
+# __main__ must be able to force the 8-device host platform first.
+
+
+def _mesh_or_fallback():
+    import jax
+
+    from repro.launch.mesh import make_debug_mesh
+
+    n = jax.device_count()
+    if n >= 8:
+        return make_debug_mesh(2, 4), "2x4"
+    return make_debug_mesh(1, n), f"1x{n}(degraded)"
+
+
+def _serve(server, prompts, gen_steps, max_seq, *, canary=None):
+    """Sequential greedy passes; returns (outputs, per-request TTFT s,
+    request-path fault bytes consumed). TTFT is time-to-first-token —
+    the first token is the prefill's argmax, so its cost is the request's
+    fault stall plus the prefill compute. ``canary`` is an optional
+    warmup prompt served (and discarded) first: the pre-admission canary
+    request every replica pays identically, so first-call jit dispatch
+    compiles don't drown the reduced-scale fault signal."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serving import GenerationEngine
+
+    eng = GenerationEngine(server, max_seq=max_seq)
+    if canary is not None:
+        eng.generate(jnp.asarray(canary[None, :]), gen_steps)
+    outs, ttfts = [], []
+    fault0 = server.tiered.stats.request_fault_bytes if server.tiered else 0
+    for p in prompts:
+        out, st = eng.generate(jnp.asarray(p[None, :]), gen_steps)
+        ttfts.append(st.fault_s + st.prefill_s)
+        outs.append(np.asarray(out[0]))
+    fault1 = server.tiered.stats.request_fault_bytes if server.tiered else 0
+    return outs, ttfts, fault1 - fault0
+
+
+def run(
+    base_dir: str,
+    arch: str = "mixtral-8x22b",
+    *,
+    n_requests: int = 4,
+    prompt_len: int = 6,
+    gen_steps: int = 6,
+) -> dict:
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from benchmarks.common import setup_app, timed_cold_start
+    from repro.utils.tree import flatten_with_paths
+
+    app = setup_app(arch, base_dir)
+    mesh, geometry = _mesh_or_fallback()
+    max_seq = prompt_len + gen_steps + 2
+    prompts = [
+        np.asarray(jax.random.randint(
+            jax.random.PRNGKey(100 + i), (prompt_len,), 0, app.cfg.vocab_size))
+        for i in range(n_requests)
+    ]
+
+    # -- (a) sharded vs replicated tiered load over the same mesh -------------
+    replicate = lambda host: jax.device_put(host, NamedSharding(mesh, P()))
+    loads = {}
+    for label, kw in (("replicated", {"put": replicate}), ("sharded", {"mesh": mesh})):
+        best = None
+        for _ in range(2):  # best-of-2: cold-start wall is noisy on CI hosts
+            with timed_cold_start(app, "after2", warm_shape=(1, prompt_len),
+                                  compile_warm=False, **kw) as server:
+                t0 = time.perf_counter()
+                server.tiered.ensure_all()
+                fault_wall = time.perf_counter() - t0
+                rec = {
+                    "upload_s": server.report.upload_s,
+                    "fault_wall_s": fault_wall,
+                    "load_s": server.report.upload_s + fault_wall,
+                    "charged": server.tiered.residency.charged_bytes(),
+                    "divs": dict(server.tiered._shard_div),
+                    "tree": {p: np.asarray(v)
+                             for p, v in flatten_with_paths(server.tiered.tree())},
+                }
+                if best is None or rec["load_s"] < best["load_s"]:
+                    best = rec
+        loads[label] = best
+    n_sharded = sum(1 for d in loads["sharded"]["divs"].values() if d > 1)
+    if geometry == "2x4":
+        assert n_sharded > 0, loads["sharded"]["divs"]
+        assert loads["sharded"]["charged"] < loads["replicated"]["charged"]
+    # cross-geometry/\-sharding load parity: every resolved leaf bit-identical
+    for p, v in loads["replicated"]["tree"].items():
+        np.testing.assert_array_equal(v, loads["sharded"]["tree"][p], err_msg=p)
+
+    # parity within the sharded geometry: eager baseline == tiered serving
+    with timed_cold_start(app, "before", warm_shape=(1, prompt_len), mesh=mesh) as server:
+        eager_out, _, _ = _serve(server, prompts, gen_steps, max_seq)
+    with timed_cold_start(app, "after2", warm_shape=(1, prompt_len), mesh=mesh) as server:
+        tiered_out, _, _ = _serve(server, prompts, gen_steps, max_seq)
+    for a, b in zip(eager_out, tiered_out):
+        np.testing.assert_array_equal(a, b)
+
+    # -- (b) warm snapshot/restore vs cold re-faulting join --------------------
+    # both warm shapes: prefill at prompt_len AND the max_seq decode cache,
+    # so neither replica jit-compiles on the request path — TTFT compares
+    # fault traffic, not shared one-time compiles
+    ttft_warm = dict(warm_shapes=((1, prompt_len), (1, max_seq)))
+    # constant-token canary: triggers every jit dispatch compile while
+    # routing through the fewest experts/vocab rows, so the cold replica
+    # still pays the stream's faults on the measured requests
+    canary = np.zeros((prompt_len,), np.int32)
+    with timed_cold_start(app, "after2", **ttft_warm) as server:
+        donor_out, _, _ = _serve(server, prompts, gen_steps, max_seq, canary=canary)
+        snap = server.snapshot()
+
+    with timed_cold_start(app, "after2", **ttft_warm) as server:
+        cold_out, cold_walls, cold_fault = _serve(
+            server, prompts, gen_steps, max_seq, canary=canary)
+    with timed_cold_start(app, "after2", restore_from=snap, **ttft_warm) as server:
+        restore_report = server.restore_report
+        warm_out, warm_walls, warm_fault = _serve(
+            server, prompts, gen_steps, max_seq, canary=canary)
+
+    # -- (c) parity: cold, restored, and donor replicas serve identically -----
+    for a, b, c in zip(donor_out, cold_out, warm_out):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert restore_report["restored"] > 0
+    # the restored replica must not re-pay the donor's request-path faults
+    assert warm_fault * 2 <= max(cold_fault, 1), (warm_fault, cold_fault)
+
+    return {
+        "arch": arch,
+        "geometry": geometry,
+        "n_devices": jax.device_count(),
+        "sharded_leaves": n_sharded,
+        "load_repl_s": loads["replicated"]["load_s"],
+        "load_shard_s": loads["sharded"]["load_s"],
+        "load_speedup": loads["replicated"]["load_s"] / max(loads["sharded"]["load_s"], 1e-9),
+        "charged_repl": loads["replicated"]["charged"],
+        "charged_shard": loads["sharded"]["charged"],
+        "ttft_cold_ms": cold_walls[0] * 1e3,
+        "ttft_restored_ms": warm_walls[0] * 1e3,
+        "ttft_speedup": cold_walls[0] / max(warm_walls[0], 1e-9),
+        "fault_cold_bytes": cold_fault,
+        "fault_restored_bytes": warm_fault,
+        "restored_units": restore_report["restored"],
+    }
+
+
+def main(base_dir: str, *, smoke: bool = False) -> list[str]:
+    from benchmarks.common import csv_row
+
+    kw = dict(n_requests=3, gen_steps=4) if smoke else {}
+    r = run(base_dir, **kw)
+    return [
+        csv_row(
+            f"rq11_shardload/{r['arch']}/{r['geometry']}",
+            r["load_shard_s"] * 1e6,
+            f"sharded_load={r['load_shard_s']*1e3:.0f}ms vs replicated "
+            f"{r['load_repl_s']*1e3:.0f}ms ({r['load_speedup']:.2f}x) "
+            f"on {r['n_devices']}dev|sharded_leaves={r['sharded_leaves']}"
+            f"|charged {r['charged_shard']}B vs {r['charged_repl']}B replicated",
+        ),
+        csv_row(
+            f"rq11_restore/{r['arch']}",
+            r["ttft_restored_ms"] * 1e3,
+            f"ttft_restored={r['ttft_restored_ms']:.0f}ms vs cold-join "
+            f"{r['ttft_cold_ms']:.0f}ms ({r['ttft_speedup']:.2f}x)"
+            f"|request_faults {r['fault_restored_bytes']}B vs {r['fault_cold_bytes']}B"
+            f"|restored_units={r['restored_units']}|outputs=identical",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 3 requests x 4 steps")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="simulated host device count (default 8)")
+    ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
+    args = ap.parse_args()
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+    scratch = args.out or tempfile.mkdtemp(prefix="faaslight_scaleout_")
+    print("name,us_per_call,derived")
+    for row in main(scratch, smoke=args.smoke):
+        print(row)
+    sys.exit(0)

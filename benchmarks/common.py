@@ -88,10 +88,13 @@ def setup_app(arch: str, base_dir: str, *, profile=None, stats=True) -> App:
 
 def timed_cold_start(app: App, mode: str, *, warm_shape=(2, 8), compile_warm=True, **cold_kw):
     """``cold_kw`` passes through to ``cold_start`` (residency preset,
-    device budget, prefetch toggles — see serving.cold_start)."""
+    device budget, prefetch toggles — see serving.cold_start). An explicit
+    ``warm_shapes`` in ``cold_kw`` overrides the single ``warm_shape``
+    (e.g. to also pre-compile the max_seq decode cache for TTFT runs)."""
+    warm_shapes = cold_kw.pop("warm_shapes", (warm_shape,))
     return cold_start(
         app.model, app.outdir, app.result if mode == "after2" else None,
-        mode=mode, warm_shapes=(warm_shape,), compile_warm_set=compile_warm,
+        mode=mode, warm_shapes=warm_shapes, compile_warm_set=compile_warm,
         **cold_kw,
     )
 

@@ -27,10 +27,11 @@ def main(argv=None) -> int:
                     help="CI smoke: rq2 (one arch, 2 runs, no warm-set compile) "
                          "+ the rq7 profile→re-tier cycle + the rq8 online "
                          "re-tier shift + the rq9 multi-model zoo + the rq10 "
-                         "fleet federation (~6 min)")
+                         "fleet federation + the rq11 scale-out mesh/snapshot "
+                         "(~7 min)")
     ap.add_argument("--out", default="", help="artifact scratch dir (default: temp)")
     ap.add_argument("--only", default="",
-                    help="comma list: rq1,rq2,rq3,rq4,rq5,traffic,rq6,rq7,rq8,rq9,rq10,roofline")
+                    help="comma list: rq1,rq2,rq3,rq4,rq5,traffic,rq6,rq7,rq8,rq9,rq10,rq11,roofline")
     ap.add_argument("--json-out", default="",
                     help="also write all rows as JSON {section: [rows]} here")
     args = ap.parse_args(argv)
@@ -48,6 +49,7 @@ def main(argv=None) -> int:
         bench_rq8_online,
         bench_rq9_zoo,
         bench_rq10_fleet,
+        bench_rq11_scaleout,
         roofline,
     )
 
@@ -70,14 +72,18 @@ def main(argv=None) -> int:
 
     sections = []
     if args.smoke:
-        sections = [
-            ("rq2_smoke", lambda: bench_rq2_cold.main(
+        smoke = [
+            ("rq2", lambda: bench_rq2_cold.main(
                 scratch, n_runs=2, archs=("mixtral-8x22b",), compile_warm=False)),
-            ("rq7_smoke", lambda: bench_rq7_retier.main(scratch, smoke=True)),
-            ("rq8_smoke", lambda: bench_rq8_online.main(scratch, smoke=True)),
-            ("rq9_smoke", lambda: bench_rq9_zoo.main(scratch, smoke=True)),
-            ("rq10_smoke", lambda: bench_rq10_fleet.main(scratch, smoke=True)),
+            ("rq7", lambda: bench_rq7_retier.main(scratch, smoke=True)),
+            ("rq8", lambda: bench_rq8_online.main(scratch, smoke=True)),
+            ("rq9", lambda: bench_rq9_zoo.main(scratch, smoke=True)),
+            ("rq10", lambda: bench_rq10_fleet.main(scratch, smoke=True)),
+            ("rq11", lambda: bench_rq11_scaleout.main(scratch, smoke=True)),
         ]
+        # --only filters smoke sections too (CI's dedicated scale-out job
+        # runs `--smoke --only rq11` under an 8-device host platform)
+        sections = [(f"{k}_smoke", fn) for k, fn in smoke if want(k)]
     else:
         if want("rq1"):
             sections.append(("rq1", lambda: bench_rq1_size.main(scratch)))
@@ -101,6 +107,8 @@ def main(argv=None) -> int:
             sections.append(("rq9", lambda: bench_rq9_zoo.main(scratch)))
         if want("rq10"):
             sections.append(("rq10", lambda: bench_rq10_fleet.main(scratch)))
+        if want("rq11"):
+            sections.append(("rq11", lambda: bench_rq11_scaleout.main(scratch)))
         if want("roofline"):
             sections.append(("roofline", roofline.main))
 

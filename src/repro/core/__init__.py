@@ -38,6 +38,12 @@ from repro.core.retier import (
     retier_artifact,
 )
 from repro.core.retier_daemon import RetierDaemon, RetierDaemonStats
+from repro.core.snapshot import (
+    SNAPSHOT_VERSION,
+    artifact_fingerprint,
+    capture as capture_server_snapshot,
+    restore as restore_server_snapshot,
+)
 
 __all__ = [
     "AnalysisResult",
@@ -67,6 +73,10 @@ __all__ = [
     "RetierDaemonStats",
     "FleetController",
     "FleetStats",
+    "SNAPSHOT_VERSION",
+    "artifact_fingerprint",
+    "capture_server_snapshot",
+    "restore_server_snapshot",
     "replan_from_trace",
     "required_tier0",
     "check_tier0_superset",

@@ -48,6 +48,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.on_demand import AccessTrace
+from repro.core import snapshot as server_snapshot_mod
 from repro.core.retier import (
     apply_overlay,
     replan_from_trace,
@@ -124,6 +125,10 @@ class FleetController:
         self._base_plan = None
         self._reach = None
         self._min_budget: Optional[int] = None  # tightest replica budget seen
+        # warm server snapshot (DESIGN.md §15.3) offered by a warmed
+        # replica; restored onto late joiners at register() — the
+        # bootstrap fast path that skips re-faulting the hot set
+        self._server_snapshot: Optional[dict] = None
         self.last_errors: dict[str, str] = {}
 
     # -- membership --------------------------------------------------------------
@@ -132,17 +137,19 @@ class FleetController:
         with self._lock:
             return sorted(self._replicas)
 
-    def register(self, name: str, daemon) -> bool:
+    def register(self, name: str, daemon, *, server_snapshot: Optional[dict] = None) -> bool:
         """Add a replica's daemon to the fleet. The first registration
         donates the base plan + reachability the controller replans from.
 
-        A replica joining AFTER the fleet has learned an overlay (a late
-        joiner, typically on a controller built by ``restore()``) is
-        warm-bootstrapped here: the fleet plan is applied with a
-        synchronous preload, so the replica is resident before its first
-        batch. Returns True when that happened. A bootstrap failure is
-        absorbed (recorded in ``stats``/``last_errors``) — the replica
-        still joins, merely cold, exactly as if unfederated."""
+        Two warm-bootstrap paths run here, fast first (DESIGN.md §15.3
+        then §14.1): a *server snapshot* (passed in, or previously
+        ``offer_server_snapshot``-ed by a warmed replica) replays a donor
+        replica's exact residency set + LRU order + predictor onto the
+        joiner; then, if the fleet has learned an overlay, the fleet plan
+        is applied with a synchronous preload. Returns True when either
+        left the replica warm. A bootstrap failure is absorbed (recorded
+        in ``stats``/``last_errors``) — the replica still joins, merely
+        cold, exactly as if unfederated."""
         with self._lock:
             if name in self._replicas:
                 raise ValueError(f"replica {name!r} already registered")
@@ -156,8 +163,24 @@ class FleetController:
                 # smallest budget can't hold would LRU-churn that replica
                 # instead of warming it
                 self._min_budget = b
+            warmed = False
+            snap = server_snapshot if server_snapshot is not None else self._server_snapshot
+            if snap is not None:
+                try:
+                    rep = server_snapshot_mod.restore(
+                        daemon.tiered, snap,
+                        prefetcher=getattr(daemon, "prefetcher", None),
+                        artifact_dir=getattr(daemon, "artifact_dir", None),
+                        strict=False,  # mismatched artifact → cold join, not a crash
+                    )
+                    if rep["restored"]:
+                        self.stats.bootstraps += 1
+                        warmed = True
+                except Exception as e:
+                    self.stats.bootstrap_failures += 1
+                    self.last_errors[name] = repr(e)
             if self._overlay is None:
-                return False
+                return warmed
             try:
                 plan = apply_overlay(daemon.tiered.plan, self._overlay)
                 daemon.apply_plan(plan, trace=self._history, sync_preload=True)
@@ -166,7 +189,22 @@ class FleetController:
             except Exception as e:  # cold join is a degraded mode, not a crash
                 self.stats.bootstrap_failures += 1
                 self.last_errors[name] = repr(e)
-                return False
+                return warmed
+
+    def offer_server_snapshot(self, snap: Optional[dict]) -> None:
+        """Stash a warmed replica's server snapshot (``ColdStartServer.
+        snapshot()``) for every future ``register()`` to restore from.
+        ``None`` clears it. Version-checked on offer so a bad document
+        fails loudly here, not inside some later join."""
+        if snap is not None:
+            version = snap.get("version")
+            if version != server_snapshot_mod.SNAPSHOT_VERSION:
+                raise ValueError(
+                    f"unsupported server snapshot version {version!r} "
+                    f"(expected {server_snapshot_mod.SNAPSHOT_VERSION})"
+                )
+        with self._lock:
+            self._server_snapshot = snap
 
     def unregister(self, name: str) -> None:
         """Drop a replica (drained / crashed). Its contributions stay in
@@ -317,6 +355,9 @@ class FleetController:
                 "overlay": None if self._overlay is None else {
                     p: list(ks) for p, ks in sorted(self._overlay.items())
                 },
+                # §15.3 fast path rides along; absent/None in older
+                # documents, so v1 snapshots from before it still load
+                "server_snapshot": self._server_snapshot,
             }
 
     @classmethod
@@ -340,6 +381,7 @@ class FleetController:
             fc._history = AccessTrace.from_dict(snap["history"])
         if snap.get("overlay") is not None:
             fc._overlay = {p: list(ks) for p, ks in snap["overlay"].items()}
+        fc._server_snapshot = snap.get("server_snapshot")
         return fc
 
     # -- introspection -----------------------------------------------------------

@@ -642,11 +642,18 @@ class TieredParams:
         store: Optional[OptionalStore],
         *,
         device_budget_bytes: Optional[int] = None,
+        shard_divisors: Optional[dict] = None,
     ):
         self._tree = tree
         self._flat = dict(flatten_with_paths(tree))
         self.plan = plan
         self.store = store
+        # mesh-sharded serving (DESIGN.md §15.1): per-leaf shard counts.
+        # A unit of a leaf split D ways costs nbytes/D *per device*, so the
+        # budget/arbiter charge is divided by the owning leaf's divisor
+        # (absent → 1 → byte-identical to unsharded accounting). IO stats
+        # (LoadEvent, faulted_bytes) always keep raw host bytes.
+        self._shard_div: dict[str, int] = dict(shard_divisors or {})
         self.stats = LoaderStats()
         self.trace: Optional[AccessTrace] = None  # attach via start_trace()
         self._phase = ""  # request phase tag for trace/LoadEvent (DESIGN.md §11)
@@ -716,7 +723,7 @@ class TieredParams:
         with self._lock:
             if self.residency.begin_load(key, "mark"):
                 self.residency.advance_clock()
-                self.residency.commit_load(key, self._unit_nbytes(key), "mark")
+                self.residency.commit_load(key, self.unit_charge(key), "mark")
 
     @property
     def resident_keys(self) -> set:
@@ -737,6 +744,16 @@ class TieredParams:
         if self.store is not None and key in self.store.entries:
             return self.store.entries[key].rsize
         return 0
+
+    def unit_charge(self, key: str, nbytes: Optional[int] = None) -> int:
+        """Device-budget charge for one unit: its host bytes divided by the
+        owning leaf's shard count (§15.1 per-shard accounting; ceil so a
+        charge is never rounded to free). Equal to the raw bytes when the
+        leaf is replicated or no mesh is attached."""
+        nb = self._unit_nbytes(key) if nbytes is None else nbytes
+        u = self._all_units.get(key)
+        div = self._shard_div.get(u.path, 1) if u is not None else 1
+        return nb if div <= 1 else -(-nb // div)
 
     # -- the rewrite_template analogue ---------------------------------------
     def ensure(self, keys: Iterable[str], *, pin: bool = False, source: str = "fault") -> int:
@@ -799,15 +816,16 @@ class TieredParams:
                         for k in ordered[i:]:
                             res.abort_load(k)
                     raise
+                charge = self.unit_charge(key, arr.nbytes)
                 if self.arbiter is not None:
                     # cross-tenant make-room BEFORE taking our own lock
                     # (arbiter lock orders first; it may lock other tenants)
-                    self.arbiter.make_room(self, arr.nbytes)
+                    self.arbiter.make_room(self, charge)
                 with self._lock:
-                    self._evict_to_fit(arr.nbytes)
+                    self._evict_to_fit(charge)
                     self._install(self._all_units[key], arr)
                     t2 = time.perf_counter()
-                    res.commit_load(key, arr.nbytes, source)
+                    res.commit_load(key, charge, source)
                     if res.was_evicted(key):
                         self.stats.refaults += 1
                     if source == "fault":  # preload is not a request-path miss
@@ -858,13 +876,14 @@ class TieredParams:
             with self._lock:
                 res.abort_load(key)
             raise
+        charge = self.unit_charge(key, arr.nbytes)
         if self.arbiter is not None:
-            self.arbiter.make_room(self, arr.nbytes)
+            self.arbiter.make_room(self, charge)
         with self._lock:
-            self._evict_to_fit(arr.nbytes)
+            self._evict_to_fit(charge)
             self._install(self._all_units[key], arr)
             t2 = time.perf_counter()
-            res.commit_load(key, arr.nbytes, source)
+            res.commit_load(key, charge, source)
             if source == "fault":
                 self.stats.misses += 1
             self.stats.events.append(
@@ -935,18 +954,19 @@ class TieredParams:
         if unit is None or self.residency.state_of(key) != LOADING:
             return 0
         nbytes = arr.nbytes
+        charge = self.unit_charge(key, nbytes)
         host = jnp.asarray(arr, dtype=self._flat[unit.path].dtype)
         if self.arbiter is not None:
-            self.arbiter.make_room(self, nbytes)
+            self.arbiter.make_room(self, charge)
         with self._lock:
             if self.residency.state_of(key) != LOADING:
                 return 0
             self.residency.advance_clock()
-            self._evict_to_fit(nbytes)
+            self._evict_to_fit(charge)
             t0 = time.perf_counter()
             self._install(unit, host)
             upload_s = time.perf_counter() - t0
-            self.residency.commit_load(key, nbytes, "prefetch")
+            self.residency.commit_load(key, charge, "prefetch")
             self.stats.events.append(
                 LoadEvent(key, nbytes, fetch_s, upload_s,
                           t=time.monotonic(), source="prefetch",

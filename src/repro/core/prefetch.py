@@ -170,6 +170,38 @@ class TransitionPredictor:
     def __len__(self) -> int:
         return len(self._table)
 
+    # -- serialization (server snapshot/restore, DESIGN.md §15.3) -----------
+    def to_dict(self) -> dict:
+        """The *ranked* tables as a plain-JSON dict. Counts are already
+        folded into rank order by __init__, so the round-trip preserves
+        exactly what ``follow`` consults — deterministically (every key
+        sorted)."""
+        return {
+            "top_k": self.top_k,
+            "table": {k: list(v) for k, v in sorted(self._table.items())},
+            "phase_tables": {
+                ph: {k: list(v) for k, v in sorted(tbl.items())}
+                for ph, tbl in sorted(self._phase_tables.items())
+            },
+            # tuple context keys flatten to [a2, a1, [succ...]] rows
+            "table2": [
+                [a2, a1, list(v)] for (a2, a1), v in sorted(self._table2.items())
+            ],
+            "mates": {k: list(v) for k, v in sorted(self._mates.items())},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TransitionPredictor":
+        p = cls({}, top_k=d.get("top_k", 8))
+        p._table = {k: list(v) for k, v in d.get("table", {}).items()}
+        p._phase_tables = {
+            ph: {k: list(v) for k, v in tbl.items()}
+            for ph, tbl in d.get("phase_tables", {}).items()
+        }
+        p._table2 = {(a2, a1): list(v) for a2, a1, v in d.get("table2", [])}
+        p._mates = {k: list(v) for k, v in d.get("mates", {}).items()}
+        return p
+
     def successors(self, key: str, *, phase: str = "") -> list[str]:
         """First-order successors; with ``phase`` the phase-conditioned
         table is consulted first, falling back to the global one."""
@@ -311,7 +343,7 @@ class Prefetcher:
                         touch.append(k)
                     continue
                 if arb is not None and not arb.prefetch_headroom(
-                    self.tiered, self.tiered._unit_nbytes(k)
+                    self.tiered, self.tiered.unit_charge(k)
                 ):
                     self.stats.skipped_headroom += 1
                     continue

@@ -374,7 +374,7 @@ class RetierDaemon:
                 if k in resident:
                     kept.append(k)
                     continue
-                nb = tiered._unit_nbytes(k)
+                nb = tiered.unit_charge(k)
                 if nb <= headroom:
                     headroom -= nb
                     kept.append(k)

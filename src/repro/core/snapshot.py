@@ -1,0 +1,186 @@
+"""⑩ Warm server snapshot/restore (DESIGN.md §15.3).
+
+A warmed ``ColdStartServer`` embodies state that took real traffic to
+learn: which tier-1 units are RESIDENT, in what LRU order, and what the
+prefetch predictor knows about unit→unit transitions. A fresh replica
+joining a scaled-out deployment re-pays all of that as request-path
+faults. This module serializes exactly that state — small, plain JSON,
+no tensor bytes — so a new replica can *restore to RESIDENT-warm before
+admitting traffic*:
+
+  * ``capture(tiered, ...)`` → dict with the residency set + logical LRU
+    stamps, the predictor's ranked tables, and the artifact identity
+    (a fingerprint of the artifact directory's file names/sizes and its
+    JSON manifests);
+  * ``restore(tiered, snap, ...)`` verifies the fingerprint (the
+    compatibility rule: weights bytes come from the *artifact*, so a
+    snapshot is only meaningful against the same artifact), re-faults
+    the resident set oldest-first through the normal ``ensure`` path —
+    budget, eviction, and any ``HostArbiter`` make-room charges all
+    apply exactly as for organic traffic — then reinstates the donor's
+    LRU stamps, and arms the prefetcher's predictor.
+
+The snapshot deliberately carries no device bytes and no plan objects:
+restore is a *replay* against the restoring replica's own artifact and
+budget, so a tighter replica simply keeps the hottest (newest-stamped)
+suffix of the donor's resident set and a foreign unit key is skipped,
+never an error. Wired into ``cold_start(restore_from=...)``, the
+launcher's ``--snapshot-out``/``--restore-from``, and
+``FleetController.register`` (the bootstrap fast path).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Optional
+
+from repro.core.prefetch import TransitionPredictor
+
+SNAPSHOT_VERSION = 1
+
+
+def artifact_fingerprint(artifact_dir: str) -> str:
+    """Identity of an artifact directory: sha256 over every file's
+    relative path and size, plus the *content* of JSON manifests (small,
+    and where layout-changing rewrites announce themselves). Two
+    directories that disagree here hold different artifacts; a snapshot
+    must not cross that line (DESIGN.md §15.3)."""
+    h = hashlib.sha256()
+    for root, dirs, files in os.walk(artifact_dir):
+        dirs.sort()
+        for fn in sorted(files):
+            p = os.path.join(root, fn)
+            rel = os.path.relpath(p, artifact_dir)
+            h.update(rel.encode())
+            h.update(str(os.path.getsize(p)).encode())
+            if fn.endswith(".json"):
+                with open(p, "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def capture(tiered, *, prefetcher=None, artifact_dir: Optional[str] = None) -> dict:
+    """Serialize a warmed loader's residency state (plus the prefetcher's
+    predictor, when armed) as a plain-JSON dict. Deterministic: the
+    resident list is (stamp, key)-sorted — the same order eviction uses —
+    so capture → save → load → capture round-trips byte-identically."""
+    with tiered._lock:
+        res = tiered.residency
+        resident = sorted(
+            ((res._stamp.get(k, 0), k) for k in res._lru),
+            key=lambda sk: (sk[0], sk[1]),
+        )
+        snap = {
+            "version": SNAPSHOT_VERSION,
+            "artifact": {
+                "dir": artifact_dir,
+                "fingerprint": (
+                    artifact_fingerprint(artifact_dir) if artifact_dir else None
+                ),
+            },
+            "clock": res._clock,
+            "resident": [[k, stamp] for stamp, k in resident],
+        }
+    predictor = getattr(prefetcher, "predictor", None)
+    snap["predictor"] = predictor.to_dict() if predictor is not None else None
+    return snap
+
+
+def restore(
+    tiered,
+    snap: dict,
+    *,
+    prefetcher=None,
+    artifact_dir: Optional[str] = None,
+    strict: bool = True,
+) -> dict:
+    """Replay a snapshot onto a fresh loader; returns a report dict.
+
+    Compatibility rule: when both the snapshot and the caller provide an
+    artifact identity, they must match — ``strict=True`` raises on
+    mismatch, ``strict=False`` skips the residency replay (cold join)
+    and says so in the report. Version mismatches always raise.
+
+    The replay faults units oldest-stamp-first with ``source="preload"``
+    through the ordinary ``ensure`` path, so the restoring replica's own
+    budget/arbiter govern what actually sticks: under a tighter budget
+    the oldest restored units are the LRU victims, leaving the donor's
+    hottest suffix resident. Donor LRU stamps are then reinstated for
+    whatever survived, so the first organic evictions on the restored
+    replica fall on the same units they would have on the donor.
+    """
+    version = snap.get("version")
+    if version != SNAPSHOT_VERSION:
+        raise ValueError(
+            f"unsupported server snapshot version {version!r} (expected {SNAPSHOT_VERSION})"
+        )
+    report = {
+        "requested": len(snap.get("resident", [])),
+        "restored": 0,
+        "skipped_foreign": 0,
+        "moved_bytes": 0,
+        "fingerprint_ok": None,
+        "predictor_armed": False,
+    }
+    want = snap.get("artifact", {}).get("fingerprint")
+    if want is not None and artifact_dir is not None:
+        have = artifact_fingerprint(artifact_dir)
+        report["fingerprint_ok"] = have == want
+        if have != want:
+            if strict:
+                raise ValueError(
+                    f"snapshot artifact fingerprint mismatch: snapshot has "
+                    f"{want[:12]}…, {artifact_dir!r} has {have[:12]}… — a warm "
+                    f"snapshot only restores against the same artifact"
+                )
+            return report  # cold join: residency replay skipped
+
+    entries = [
+        (k, stamp) for k, stamp in snap.get("resident", []) if k in tiered._all_units
+    ]
+    report["skipped_foreign"] = report["requested"] - len(entries)
+    # oldest first, one ensure per unit: a batch would share a single LRU
+    # stamp and load in store-offset order, so only per-unit replay makes
+    # budget eviction shed exactly the donor's coldest units
+    entries.sort(key=lambda ks: (ks[1], ks[0]))
+    if entries:
+        moved = 0
+        for k, _ in entries:
+            moved += tiered.ensure([k], source="preload")
+        report["moved_bytes"] = moved
+        with tiered._lock:
+            res = tiered.residency
+            stamps = dict(entries)
+            survivors = [k for k, _ in entries if k in res._lru]
+            for k in survivors:
+                res._stamp[k] = stamps[k]
+            # rebuild recency order to match the reinstated stamps (other
+            # residents — e.g. a preloaded hot set — keep their stamps and
+            # sort in by the same (stamp, key) rule eviction uses)
+            ordered = sorted(
+                res._lru, key=lambda k: (res._stamp.get(k, 0), k)
+            )
+            for k in ordered:
+                res._lru.move_to_end(k)
+            res._clock = max(res._clock, int(snap.get("clock", 0)))
+            report["restored"] = len(survivors)
+
+    if prefetcher is not None and snap.get("predictor") is not None:
+        prefetcher.predictor = TransitionPredictor.from_dict(snap["predictor"])
+        report["predictor_armed"] = True
+    return report
+
+
+def save(snap: dict, path: str) -> None:
+    """Atomic temp+rename write (the repo-wide artifact commit rule)."""
+    tmp = path + ".partial"
+    with open(tmp, "w") as f:
+        json.dump(snap, f, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

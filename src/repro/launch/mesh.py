@@ -26,7 +26,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many devices exist (CPU smoke tests)."""
+    """Small mesh over however many devices exist (CPU smoke tests).
+
+    Fails with an actionable message when the requested geometry wants
+    more devices than the platform exposes — otherwise jax surfaces an
+    opaque reshape error from deep inside ``make_mesh``. On CPU the fix
+    is the dry-run's trick: set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax call."""
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data}, model={model}")
+    have = jax.device_count()
+    if data * model > have:
+        raise ValueError(
+            f"debug mesh ({data}x{model}) needs {data * model} devices but only "
+            f"{have} exist; set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{data * model} before the first jax init (see launch/dryrun.py)"
+        )
     return jax.make_mesh((data, model), ("data", "model"))
 
 

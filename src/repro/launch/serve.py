@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import clean_partials
 from repro.configs import get_config, get_reduced
 from repro.core import (
     AccessTrace,
@@ -62,10 +63,17 @@ from repro.core import (
     retier_artifact,
     write_monolithic,
 )
+from repro.core import snapshot as server_snapshot
 from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.launch.mesh import make_debug_mesh
 from repro.models.zoo import build_model
 from repro.optim import init_adamw
-from repro.serving import ContinuousBatchingScheduler, GenerationEngine, cold_start
+from repro.serving import (
+    ContinuousBatchingScheduler,
+    GenerationEngine,
+    SLOAdmission,
+    cold_start,
+)
 
 
 def main(argv=None) -> int:
@@ -120,6 +128,27 @@ def main(argv=None) -> int:
                     help="online mode: rewrite the artifact (out-of-place, "
                          "rename-committed) every N plan applications so the "
                          "NEXT cold start boots the adapted hot set (0 = never)")
+    ap.add_argument("--mesh", default="",
+                    help="shard serving over a DATAxMODEL debug mesh (e.g. 2x4): "
+                         "tier-0 load and tier-1 faults device_put shards, the "
+                         "residency budget charges per-device bytes (DESIGN.md "
+                         "§15.1; needs that many devices — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--admission", default="fifo", choices=["fifo", "slo"],
+                    help="scheduler admission policy (DESIGN.md §15.2): fifo = "
+                         "strict arrival order (default), slo = deadline-aware "
+                         "shed/re-order (traffic mode)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="SLO admission: per-request latency deadline in ms "
+                         "(0 = none; requests projected to miss it are shed)")
+    ap.add_argument("--snapshot-out", default="",
+                    help="write the warmed server's snapshot (residency set + "
+                         "LRU order + predictor + artifact identity, DESIGN.md "
+                         "§15.3) here at exit (after2 only)")
+    ap.add_argument("--restore-from", default="",
+                    help="restore a --snapshot-out document before admitting "
+                         "traffic: the replica cold-starts RESIDENT-warm "
+                         "instead of re-faulting its hot set (after2 only)")
     ap.add_argument("--fleet", type=int, default=0,
                     help="serve through N in-process replicas federated by a "
                          "FleetController (DESIGN.md §14): each replica runs "
@@ -133,6 +162,23 @@ def main(argv=None) -> int:
     if args.host_budget_bytes and args.mode != "after2":
         ap.error("--host-budget-bytes governs the tier-1 residency layer "
                  "(--mode after2 only)")
+    if (args.snapshot_out or args.restore_from) and args.mode != "after2":
+        ap.error("--snapshot-out/--restore-from serialize the tier-1 "
+                 "residency set (--mode after2 only)")
+    if args.admission == "fifo" and args.deadline_ms:
+        ap.error("--deadline-ms needs --admission slo (FIFO never sheds)")
+    if args.deadline_ms < 0:
+        ap.error("--deadline-ms must be >= 0")
+    mesh = None
+    if args.mesh:
+        try:
+            data_ax, model_ax = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"--mesh wants DATAxMODEL (e.g. 2x4), got {args.mesh!r}")
+        try:
+            mesh = make_debug_mesh(data_ax, model_ax)
+        except ValueError as e:  # not enough devices: surface the XLA_FLAGS hint
+            ap.error(str(e))
     if args.host_budget_bytes < 0:
         ap.error("--host-budget-bytes must be >= 0")
     if not 0.0 <= args.retier_decay <= 1.0:
@@ -190,6 +236,13 @@ def main(argv=None) -> int:
     params = model.init(jax.random.PRNGKey(0))
     opt = init_adamw(params)
     os.makedirs(outdir, exist_ok=True)
+    # crash recovery before any writer exists: a prior run killed mid-way
+    # through an artifact rewrite (retier compaction, checkpoint save)
+    # leaves *.partial staging dirs behind — never committed, safe to drop
+    removed = clean_partials(outdir)
+    if removed:
+        print(f"[serve] removed {len(removed)} orphaned partial(s): "
+              + ", ".join(os.path.basename(p) for p in removed))
     if args.mode in ("before", "after1"):
         write_monolithic({"params": params, "opt_state": {"m": opt.m, "v": opt.v}},
                          outdir, pruned=args.mode == "after1")
@@ -219,6 +272,11 @@ def main(argv=None) -> int:
     # the process on exit)
     failed = 0
     arbiter = HostArbiter(args.host_budget_bytes) if args.host_budget_bytes else None
+    admission = None
+    if args.admission == "slo":
+        admission = SLOAdmission(
+            default_deadline_s=(args.deadline_ms / 1e3) if args.deadline_ms else None
+        )
     with cold_start(model, outdir, result if args.mode == "after2" else None,
                     mode=args.mode, warm_shapes=((warm_B, args.prompt_len),),
                     residency=args.policy if args.mode == "after2" else None,
@@ -229,8 +287,15 @@ def main(argv=None) -> int:
                     retier_online=args.retier_online,
                     retier_interval=args.retier_interval,
                     retier_decay=args.retier_decay,
-                    retier_compact_every=args.retier_compact_every) as server:
+                    retier_compact_every=args.retier_compact_every,
+                    mesh=mesh, admission=admission,
+                    restore_from=args.restore_from or None) as server:
         print(f"[serve] cold start ({args.mode}):", json.dumps(server.report.to_dict(), default=float))
+        if server.restore_report is not None:
+            rr = server.restore_report
+            print(f"[serve] warm restore: {rr['restored']}/{rr['requested']} units "
+                  f"resident ({rr['moved_bytes']:,}B replayed, "
+                  f"predictor {'armed' if rr['predictor_armed'] else 'absent'})")
 
         engine = GenerationEngine(server, max_seq=args.prompt_len + args.gen_steps + 8)
         if args.concurrency > 0:
@@ -274,6 +339,12 @@ def main(argv=None) -> int:
             print(f"[serve] wrote access trace to {args.profile_out} "
                   f"({t.batches} batches, {len(t.faults)} faulted units, "
                   f"{len(t.transitions)} transition sources)")
+        if args.snapshot_out and server.tiered is not None:
+            snap = server.snapshot()
+            server_snapshot.save(snap, args.snapshot_out)
+            print(f"[serve] wrote server snapshot to {args.snapshot_out} "
+                  f"({len(snap['resident'])} resident units, "
+                  f"predictor {'included' if snap['predictor'] else 'absent'})")
     if failed:
         print(f"[serve] FAILED: {failed} request(s) failed or never finished")
     return 1 if failed else 0
@@ -361,6 +432,7 @@ def _serve_traffic(engine: GenerationEngine, args, cfg) -> int:
         np.asarray(jax.random.randint(jax.random.PRNGKey(100 + i), (args.prompt_len,), 0, cfg.vocab_size))
         for i in range(args.requests)
     ]
+    deadline_s = (args.deadline_ms / 1e3) if args.deadline_ms else None
     stop = threading.Event()
     loop = threading.Thread(target=sched.serve_forever, args=(stop,), name="sched-loop")
     loop.start()
@@ -368,7 +440,7 @@ def _serve_traffic(engine: GenerationEngine, args, cfg) -> int:
     reqs = []
     try:
         for p in prompts:
-            reqs.append(sched.submit(p, args.gen_steps))
+            reqs.append(sched.queue.submit(p, args.gen_steps, deadline_s=deadline_s))
             if args.arrival_rate > 0:
                 time.sleep(rng.exponential(1.0 / args.arrival_rate))
         # bail out early if the loop thread dies instead of blocking the
@@ -387,19 +459,23 @@ def _serve_traffic(engine: GenerationEngine, args, cfg) -> int:
         loop.join()
     wall = time.perf_counter() - t0
     done = [r for r in reqs if r.done and r.error is None]
+    shed = [r for r in reqs if r.shed]
     lat = np.array([r.latency_s for r in done]) if done else np.zeros(1)
     ttft = np.array([r.ttft_s for r in done]) if done else np.zeros(1)
     print(f"[serve] traffic: {len(done)}/{len(reqs)} ok in {wall:.2f}s "
           f"({len(done) / wall:.2f} req/s over {sched.stats.steps} batched steps, "
-          f"max_active={sched.stats.max_active})")
+          f"max_active={sched.stats.max_active}"
+          + (f", shed={len(shed)}" if shed else "") + ")")
     print(f"[serve] latency p50={np.percentile(lat, 50) * 1e3:.0f}ms "
           f"p99={np.percentile(lat, 99) * 1e3:.0f}ms; "
           f"ttft p50={np.percentile(ttft, 50) * 1e3:.0f}ms; "
           f"step faults={sched.stats.faulted_units} ({sched.stats.fault_s * 1e3:.1f}ms)")
     for r in reqs:
-        if r.error:
+        if r.error and not r.shed:
             print(f"[serve] request {r.rid} failed: {r.error}")
-    return sum(1 for r in reqs if r.error is not None or not r.done)
+    # an SLO shed is the policy doing its job — a deliberate drop, not a
+    # serving failure; rejects/exceptions/unfinished still exit nonzero
+    return sum(1 for r in reqs if (r.error is not None and not r.shed) or not r.done)
 
 
 if __name__ == "__main__":

@@ -11,10 +11,13 @@ from repro.serving.cold_start import (
 )
 from repro.serving.engine import GenerationEngine, RequestStats
 from repro.serving.scheduler import (
+    AdmissionPolicy,
     ContinuousBatchingScheduler,
+    FIFOAdmission,
     Request,
     RequestQueue,
     SchedulerStats,
+    SLOAdmission,
 )
 
 __all__ = [
@@ -24,6 +27,9 @@ __all__ = [
     "cold_start",
     "GenerationEngine",
     "RequestStats",
+    "AdmissionPolicy",
+    "FIFOAdmission",
+    "SLOAdmission",
     "ContinuousBatchingScheduler",
     "Request",
     "RequestQueue",

@@ -51,7 +51,9 @@ from repro.core.on_demand import AccessTrace, TieredParams
 from repro.core.optional_store import OptionalStore
 from repro.core.prefetch import Prefetcher, TransitionPredictor
 from repro.core.retier_daemon import RetierDaemon
+from repro.core import snapshot as server_snapshot
 from repro.models.zoo import Model
+from repro.sharding.rules import param_shardings, spec_shard_divisor
 from repro.utils.tree import flatten_with_paths, tree_from_flat
 
 # residency policy -> (tier-1 budget fraction, prefetch enabled); DESIGN.md §4.2
@@ -106,6 +108,8 @@ class ColdStartServer:
         store: Optional[OptionalStore] = None,
         prefetcher: Optional[Prefetcher] = None,
         retier_daemon: Optional[RetierDaemon] = None,
+        artifact_dir: Optional[str] = None,
+        admission: Any = None,
     ):
         self.model = model
         self.params = params
@@ -114,6 +118,11 @@ class ColdStartServer:
         self.store = store
         self.prefetcher = prefetcher
         self.retier_daemon = retier_daemon
+        self.artifact_dir = artifact_dir
+        # default AdmissionPolicy for schedulers built on this server
+        # (DESIGN.md §15.2); None → the scheduler's FIFO default
+        self.admission = admission
+        self.restore_report: Optional[dict] = None  # set by restore_from=
         self._compiled: dict[tuple, Callable] = {}
 
     def close(self) -> None:
@@ -166,6 +175,17 @@ class ColdStartServer:
     def live_params(self) -> Any:
         return self.tiered.tree() if self.tiered is not None else self.params
 
+    # -- warm snapshot (DESIGN.md §15.3) --------------------------------------
+    def snapshot(self) -> dict:
+        """Serialize this server's warm state — residency set + LRU stamps,
+        predictor table, artifact identity — as a plain-JSON dict a new
+        replica can restore from (``cold_start(restore_from=...)``)."""
+        if self.tiered is None:
+            raise ValueError("snapshot() needs a tiered (after2) server")
+        return server_snapshot.capture(
+            self.tiered, prefetcher=self.prefetcher, artifact_dir=self.artifact_dir
+        )
+
 
 def cold_start(
     model: Model,
@@ -193,6 +213,9 @@ def cold_start(
     retier_compact_every: int = 0,  # artifact rewrite every N applies (0 = never)
     fleet=None,                   # FleetController to join (DESIGN.md §14)
     replica_name: Optional[str] = None,  # fleet registration name
+    mesh=None,                    # jax Mesh: shard tier-0/tier-1 puts (DESIGN.md §15.1)
+    admission=None,               # default AdmissionPolicy for schedulers (§15.2)
+    restore_from=None,            # snapshot dict or path: warm restore (§15.3)
 ) -> ColdStartServer:
     """Run one timed cold start. ``result`` is required for after2.
 
@@ -207,12 +230,46 @@ def cold_start(
     is returned — i.e. before any traffic — so a late joiner against a
     controller with learned state is warm-bootstrapped synchronously.
     All are after2-only and ignored for the monolithic baselines.
+
+    ``mesh=`` threads a jax Mesh through every device_put: tier-0 leaves
+    and tier-1 placeholders land as *shards* resolved via the logical-axis
+    rules (repro.sharding), and the residency budget/arbiter charge
+    per-device bytes (nbytes / shard count) instead of replicated bytes
+    (DESIGN.md §15.1). ``restore_from=`` (a snapshot dict or JSON path)
+    re-faults a previously-warmed server's residency set and arms its
+    predictor before the server is returned (DESIGN.md §15.3).
     """
-    put = put or (lambda host: jax.device_put(host))
     if residency is not None and residency not in RESIDENCY_PRESETS:
         raise ValueError(f"unknown residency policy {residency!r}; want one of {sorted(RESIDENCY_PRESETS)}")
+    if restore_from is not None and mode != "after2":
+        raise ValueError("restore_from= is after2-only (monolithic modes have no residency set)")
     report = ColdStartReport(mode=mode)
     abstract = model.abstract()
+
+    # path-aware device placement: an explicit put= wins; else a mesh
+    # resolves each leaf's logical axes to a NamedSharding (same rules as
+    # training, so serving shards match checkpointed shards); else plain.
+    shardings_flat = None
+    if mesh is not None and put is None:
+        shardings_flat = dict(
+            flatten_with_paths(
+                param_shardings(
+                    model.logical_axes(), abstract, mesh,
+                    fsdp=bool(getattr(model.cfg, "fsdp", True)),
+                )
+            )
+        )
+    if put is not None:
+        user_put = put
+        def _put(path, host):
+            return user_put(host)
+    elif shardings_flat is not None:
+        def _put(path, host):
+            sh = shardings_flat.get(path)
+            return jax.device_put(host, sh) if sh is not None else jax.device_put(host)
+    else:
+        def _put(path, host):
+            return jax.device_put(host)
 
     if mode in ("before", "after1"):
         prefix = os.path.join(artifact_dir, mode)
@@ -225,12 +282,13 @@ def cold_start(
         pflat = {
             p[len("params."):]: v for p, v in flat.items() if p.startswith("params.")
         }
-        tree = tree_from_flat({p: put(v) for p, v in pflat.items()})
+        tree = tree_from_flat({p: _put(p, v) for p, v in pflat.items()})
         _block_until_ready(tree)
         t2 = time.perf_counter()
         report.read_s, report.upload_s = t1 - t0, t2 - t1
         report.bytes_uploaded = sum(v.nbytes for v in pflat.values())
-        server = ColdStartServer(model, tree, report)
+        server = ColdStartServer(model, tree, report,
+                                 artifact_dir=artifact_dir, admission=admission)
     elif mode == "after2":
         if result is None:
             raise ValueError("after2 cold start needs the AnalysisResult (plan)")
@@ -244,12 +302,20 @@ def cold_start(
         live_flat = {}
         for path, leaf in flat_abs.items():
             if plan.decisions[path].tier == 0:
-                live_flat[path] = put(tier0[path])
+                live_flat[path] = _put(path, tier0[path])
             else:
                 # the rewritten stub: placeholder zeros, full shape/sharding
-                live_flat[path] = put(np.zeros(leaf.shape, leaf.dtype))
+                live_flat[path] = _put(path, np.zeros(leaf.shape, leaf.dtype))
         tree = tree_from_flat(live_flat)
         _block_until_ready(tree)
+        # per-leaf shard counts for residency accounting (DESIGN.md §15.1):
+        # a unit of a D-way-sharded leaf costs nbytes/D per device
+        shard_divisors = None
+        if shardings_flat is not None:
+            shard_divisors = {
+                path: spec_shard_divisor(shardings_flat[path].spec, mesh)
+                for path in flat_abs
+            }
         # resolve the residency preset into a budget + prefetch default —
         # or, under a host arbiter, into a relative SHARE of its budget
         budget = device_budget_bytes
@@ -261,14 +327,26 @@ def cold_start(
                 if share is None:
                     share = frac if frac is not None else 1.0
             elif budget is None and frac is not None:
-                budget = int(frac * plan.tier1_bytes)
+                # budget fractions apply to *charged* (per-device) tier-1
+                # bytes: under a mesh each leaf counts nbytes/divisor, so
+                # the same preset means the same per-device pressure
+                tier1_charged = plan.tier1_bytes
+                if shard_divisors:
+                    tier1_charged = 0
+                    for path, leaf in flat_abs.items():
+                        if plan.decisions[path].tier != 0:
+                            nb = int(np.prod(leaf.shape, dtype=np.int64)) * np.dtype(leaf.dtype).itemsize
+                            d = shard_divisors.get(path, 1)
+                            tier1_charged += nb if d <= 1 else -(-nb // d)
+                budget = int(frac * tier1_charged)
                 # keep the machine functional: never below two of the
                 # largest units (one incoming + one pinned)
                 max_unit = max((e.rsize for e in store.entries.values()), default=0)
                 budget = max(budget, 2 * max_unit)
             if want_prefetch is None:
                 want_prefetch = preset_prefetch
-        tiered = TieredParams(tree, plan, store, device_budget_bytes=budget)
+        tiered = TieredParams(tree, plan, store, device_budget_bytes=budget,
+                              shard_divisors=shard_divisors)
         if host_arbiter is not None:
             # join the host pool BEFORE the hot preload so even cold-start
             # bytes are admitted by the global make-room path
@@ -308,7 +386,23 @@ def cold_start(
                 name = replica_name or f"replica-{len(fleet.replicas)}"
                 fleet.register(name, daemon)
         server = ColdStartServer(model, tree, report, tiered=tiered, store=store,
-                                 prefetcher=prefetcher, retier_daemon=daemon)
+                                 prefetcher=prefetcher, retier_daemon=daemon,
+                                 artifact_dir=artifact_dir, admission=admission)
+        if restore_from is not None:
+            # warm restore (DESIGN.md §15.3): re-fault the donor's residency
+            # set (in LRU order, through the arbiter make-room path) and arm
+            # the predictor BEFORE the server admits traffic. Counted in the
+            # upload phase — it is bytes moved as part of becoming ready.
+            t_r = time.perf_counter()
+            snap = (
+                server_snapshot.load(restore_from)
+                if isinstance(restore_from, str) else restore_from
+            )
+            server.restore_report = server_snapshot.restore(
+                tiered, snap, prefetcher=prefetcher, artifact_dir=artifact_dir
+            )
+            report.upload_s += time.perf_counter() - t_r
+            report.bytes_uploaded += server.restore_report.get("moved_bytes", 0)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -64,6 +64,12 @@ class Request:
     admitted_t: float = 0.0
     first_token_t: float = 0.0
     finished_t: float = 0.0
+    # SLO admission (DESIGN.md §15.2): seconds after submit by which the
+    # LAST token must land (None → no deadline), and a tie-breaking
+    # priority (higher first under burst re-ordering). Both are ignored
+    # by the default FIFO policy.
+    deadline_s: Optional[float] = None
+    priority: int = 0
     out: list = field(default_factory=list)  # emitted token ids
     stats: RequestStats = field(default_factory=RequestStats)
     error: Optional[str] = None
@@ -95,6 +101,18 @@ class Request:
         """Submit → first token (prefill wait included)."""
         return max(0.0, self.first_token_t - self.submitted_t)
 
+    @property
+    def deadline_t(self) -> Optional[float]:
+        """Absolute perf_counter deadline (None without one)."""
+        if self.deadline_s is None:
+            return None
+        return self.submitted_t + self.deadline_s
+
+    @property
+    def shed(self) -> bool:
+        """True when an SLO policy dropped this request unserved."""
+        return self.error is not None and self.error.startswith("shed:")
+
 
 class RequestQueue:
     """Thread-safe FIFO of pending requests.
@@ -109,13 +127,15 @@ class RequestQueue:
         self._lock = threading.Lock()
         self._next_rid = 0
 
-    def submit(self, tokens, n_steps: int) -> Request:
+    def submit(self, tokens, n_steps: int, *, deadline_s: Optional[float] = None,
+               priority: int = 0) -> Request:
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
             req = Request(rid, tokens, int(n_steps),
-                          submitted_t=time.perf_counter())
+                          submitted_t=time.perf_counter(),
+                          deadline_s=deadline_s, priority=int(priority))
             self._q.append(req)
         return req
 
@@ -128,6 +148,160 @@ class RequestQueue:
             return len(self._q)
 
 
+class AdmissionPolicy:
+    """Pluggable admission decision for the scheduler (DESIGN.md §15.2).
+
+    Each admission round the scheduler calls ``select(queue, free, now,
+    validate)``: the policy may pop from the thread-safe queue and must
+    return ``(admit, drop)`` — at most ``free`` requests to admit this
+    round, plus ``(request, kind, error)`` triples to retire unserved
+    (``kind`` is ``"rejected"`` for structurally invalid requests,
+    ``"shed"`` for load/deadline drops; ``error`` becomes
+    ``Request.error``). ``validate(req)`` returns the canonical rejection
+    message or None. A policy may hold popped-but-unadmitted requests in
+    an internal backlog; it then reports them via ``pending()`` so the
+    scheduler's idle/run logic still sees them as outstanding work.
+    ``note_prefill``/``note_step`` feed it observed service times.
+    """
+
+    def select(self, queue: RequestQueue, free: int, now: float, validate):
+        raise NotImplementedError
+
+    def pending(self) -> int:
+        return 0
+
+    def note_prefill(self, seconds: float) -> None:
+        pass
+
+    def note_step(self, seconds: float, n_active: int) -> None:
+        pass
+
+
+class FIFOAdmission(AdmissionPolicy):
+    """The default: strict arrival order, no deadlines, never sheds —
+    byte-identical admission decisions to the pre-policy scheduler (the
+    §9 fairness contract; parity-tested by rq5/rq7/rq8)."""
+
+    def select(self, queue: RequestQueue, free: int, now: float, validate):
+        admit: list[Request] = []
+        drop: list[tuple[Request, str, str]] = []
+        while len(admit) < free:
+            req = queue.pop()
+            if req is None:
+                break
+            err = validate(req)
+            if err is not None:
+                # reject, don't crash: the loop must survive bad requests
+                drop.append((req, "rejected", err))
+                continue
+            admit.append(req)
+        return admit, drop
+
+
+class SLOAdmission(AdmissionPolicy):
+    """Deadline/queue-depth-aware admission (DESIGN.md §15.2).
+
+    Opt-in via ``cold_start(admission=...)`` or the scheduler's
+    ``admission=`` kwarg; the FIFO default is untouched. Three behaviors
+    replace tail-latency-by-timeout with shed-at-admission:
+
+      * **shed-on-hopeless** — a request whose projected finish already
+        exceeds its deadline is dropped *before* any prefill/decode is
+        spent on it, with ``error="shed: ..."``. The projection is
+        slot-granular: ranked-ahead work fills the host's admission
+        slots in waves, each wave holding its slot for a full decode
+        residence, so a request ``w`` waves deep projects ``now +
+        prefill_est + (1 + w) × n_steps × step_est``. Estimates are
+        EMAs of observed service times, so projections track the live
+        fault/decode cost.
+      * **priority re-order under burst** — the backlog admits by
+        (priority desc, deadline asc, arrival), so when a burst
+        overflows the slots, urgent work jumps the queue; with equal
+        priorities and no deadlines the order degenerates to FIFO.
+      * **bounded backlog wait** — requests the round couldn't admit
+        stay in the policy's backlog (counted by ``pending()``) and are
+        re-projected every round: one that becomes hopeless while
+        queued is shed then, not after burning a slot.
+
+    ``default_deadline_s`` applies to requests submitted without one
+    (None → such requests are never shed).
+    """
+
+    def __init__(
+        self,
+        *,
+        default_deadline_s: Optional[float] = None,
+        step_est_s: float = 2e-3,      # decode-step EMA seed (refined online)
+        prefill_est_s: float = 10e-3,  # prefill EMA seed
+        ema: float = 0.2,              # weight of each new observation
+    ):
+        self.default_deadline_s = default_deadline_s
+        self.ema = float(ema)
+        self._step_est = float(step_est_s)
+        self._prefill_est = float(prefill_est_s)
+        self._backlog: list[Request] = []
+        self._slots = 1  # widest admission round seen ≈ the host's slot count
+        self.shed_total = 0
+
+    def pending(self) -> int:
+        return len(self._backlog)
+
+    def note_prefill(self, seconds: float) -> None:
+        self._prefill_est += self.ema * (seconds - self._prefill_est)
+
+    def note_step(self, seconds: float, n_active: int) -> None:
+        self._step_est += self.ema * (seconds - self._step_est)
+
+    def _deadline_t(self, req: Request) -> Optional[float]:
+        if req.deadline_s is not None:
+            return req.submitted_t + req.deadline_s
+        if self.default_deadline_s is not None:
+            return req.submitted_t + self.default_deadline_s
+        return None
+
+    def select(self, queue: RequestQueue, free: int, now: float, validate):
+        drop: list[tuple[Request, str, str]] = []
+        self._slots = max(self._slots, free)
+        # drain arrivals into the backlog (validating on entry, so a bad
+        # request is retired this round whether or not slots are free)
+        while True:
+            req = queue.pop()
+            if req is None:
+                break
+            err = validate(req)
+            if err is not None:
+                drop.append((req, "rejected", err))
+                continue
+            self._backlog.append(req)
+        # burst re-order: urgent first, then earliest deadline, then arrival
+        def rank(r: Request):
+            dt = self._deadline_t(r)
+            return (-r.priority, dt if dt is not None else float("inf"), r.rid)
+        self._backlog.sort(key=rank)
+        kept: list[Request] = []
+        for r in self._backlog:
+            dt = self._deadline_t(r)
+            if dt is not None:
+                # slot-granular projection: ranked-ahead work fills the
+                # slots in waves, each holding its slot for a full decode
+                # residence; mid-decode rounds (free == 0) cost one more
+                waves = len(kept) // self._slots + (1 if free == 0 else 0)
+                projected = (now + self._prefill_est
+                             + (1 + waves) * r.n_steps * self._step_est)
+                if projected > dt:
+                    self.shed_total += 1
+                    drop.append((r, "shed", (
+                        f"shed: projected finish +{projected - r.submitted_t:.3f}s "
+                        f"exceeds deadline {dt - r.submitted_t:.3f}s "
+                        f"(backlog={len(self._backlog)}, "
+                        f"step_est={self._step_est * 1e3:.2f}ms)"
+                    )))
+                    continue
+            kept.append(r)
+        admit, self._backlog = kept[:free], kept[free:]
+        return admit, drop
+
+
 @dataclass
 class SchedulerStats:
     """Aggregate loop accounting (per-request numbers live on each
@@ -137,6 +311,7 @@ class SchedulerStats:
     steps: int = 0          # batched decode steps executed
     admitted: int = 0
     rejected: int = 0
+    shed: int = 0           # SLO-policy drops (never under FIFO)
     completed: int = 0
     failed: int = 0         # admitted requests killed by a decode-step failure
     decode_s: float = 0.0
@@ -166,6 +341,7 @@ class ContinuousBatchingScheduler:
         *,
         max_batch: int = 4,
         queue: Optional[RequestQueue] = None,
+        admission: Optional[AdmissionPolicy] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -174,6 +350,13 @@ class ContinuousBatchingScheduler:
         self.model = engine.model
         self.max_batch = max_batch
         self.queue = queue if queue is not None else RequestQueue()
+        # admission policy (DESIGN.md §15.2): explicit kwarg wins, then the
+        # server's cold_start(admission=...) default, then strict FIFO
+        self.admission = (
+            admission
+            if admission is not None
+            else getattr(self.server, "admission", None) or FIFOAdmission()
+        )
         self.stats = SchedulerStats()
         self._slots: list[Optional[Request]] = [None] * max_batch
         self._pos = np.zeros(max_batch, np.int32)       # next decode position
@@ -214,31 +397,43 @@ class ContinuousBatchingScheduler:
 
     @property
     def idle(self) -> bool:
-        return not self.active and len(self.queue) == 0
+        # the policy's backlog is outstanding work too: an SLO policy may
+        # have drained the queue into itself without admitting everything
+        return (not self.active and len(self.queue) == 0
+                and self.admission.pending() == 0)
+
+    def _validate(self, req: Request) -> Optional[str]:
+        """Canonical structural check; the policy-independent rejection
+        contract (message unchanged from the pre-policy scheduler)."""
+        S = int(req.tokens.size)
+        if S == 0 or S + req.n_steps > self.engine.max_seq or req.n_steps < 1:
+            return (
+                f"rejected: prompt {S} + {req.n_steps} steps exceeds "
+                f"max_seq={self.engine.max_seq} (or is empty)"
+            )
+        return None
 
     # -- admission ---------------------------------------------------------------
     def _admit(self) -> int:
-        """Fill free slots from the queue (FIFO). Same-length prompts
-        admitted in the same round share ONE batched prefill (the step
-        primitives are batch-agnostic, so their vocab/expert faults union
-        for free); the resulting cache rows are grafted into the slots in
-        a single jitted call. Returns the number of requests admitted."""
+        """Fill free slots per the admission policy (FIFO by default).
+        Same-length prompts admitted in the same round share ONE batched
+        prefill (the step primitives are batch-agnostic, so their
+        vocab/expert faults union for free); the resulting cache rows are
+        grafted into the slots in a single jitted call. Returns the
+        number of requests admitted."""
         free = [i for i, r in enumerate(self._slots) if r is None]
-        picked: list[tuple[int, Request]] = []
-        while free:
-            req = self.queue.pop()
-            if req is None:
-                break
-            S = int(req.tokens.size)
-            if S == 0 or S + req.n_steps > self.engine.max_seq or req.n_steps < 1:
-                # reject, don't crash: the loop must survive bad requests
+        to_admit, dropped = self.admission.select(
+            self.queue, len(free), time.perf_counter(), self._validate
+        )
+        for req, kind, err in dropped:
+            if kind == "shed":
+                self.stats.shed += 1
+            else:
                 self.stats.rejected += 1
-                req.finish(error=(
-                    f"rejected: prompt {S} + {req.n_steps} steps exceeds "
-                    f"max_seq={self.engine.max_seq} (or is empty)"
-                ))
-                continue
-            picked.append((free.pop(0), req))
+            req.finish(error=err)
+        picked: list[tuple[int, Request]] = [
+            (free[i], req) for i, req in enumerate(to_admit[: len(free)])
+        ]
 
         admitted = 0
         hints: list[list[str]] = []
@@ -269,6 +464,7 @@ class ContinuousBatchingScheduler:
                 for r in reqs:
                     r.finish(error=f"prefill failed: {e!r}")
                 continue
+            self.admission.note_prefill(shared.prefill_s + shared.fault_s)
             self._caches = self._graft(self._caches, caches, jnp.asarray(slots, jnp.int32))
             lg = np.asarray(logits)
             # per-request attribution (§12.3): each prompt's own row-groups;
@@ -402,6 +598,7 @@ class ContinuousBatchingScheduler:
         self.stats.faulted_bytes += step_stats.faulted_bytes
         self.stats.decode_retries += step_stats.decode_retries
         self.stats.steps += 1
+        self.admission.note_step(step_stats.decode_s + step_stats.fault_s, len(active))
 
         # units this step demand-accessed: the active slots' embed
         # row-groups plus every routed expert (resident ones included —

@@ -6,6 +6,7 @@ from repro.sharding.rules import (
     param_shardings,
     resolve_pspec,
     set_rules,
+    spec_shard_divisor,
     use_mesh,
 )
 
@@ -17,5 +18,6 @@ __all__ = [
     "param_shardings",
     "resolve_pspec",
     "set_rules",
+    "spec_shard_divisor",
     "use_mesh",
 ]

@@ -155,6 +155,23 @@ def param_shardings(logical_tree, abstract_tree, mesh: Optional[Mesh] = None, fs
     return tree_from_flat(out)
 
 
+def spec_shard_divisor(spec: PartitionSpec, mesh: Mesh) -> int:
+    """Number of distinct shards a PartitionSpec splits an array into —
+    the product of the sizes of every mesh axis the spec names. Per-device
+    bytes of a sharded array are ``nbytes / divisor`` (a fully replicated
+    spec returns 1: every device holds all the bytes). This is the factor
+    the tiered residency layer charges its device budget with (DESIGN.md
+    §15.1)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    div = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in entry if isinstance(entry, tuple) else (entry,):
+            div *= sizes.get(ax, 1)
+    return div
+
+
 def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
     """with_sharding_constraint under the ambient mesh; no-op without one."""
     mesh = _STATE.mesh

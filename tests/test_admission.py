@@ -1,0 +1,212 @@
+"""SLO-aware admission (DESIGN.md §15.2).
+
+Policy-level contract without a model:
+  * FIFO select pops arrival order, retires invalid requests with the
+    canonical rejection message, never sheds;
+  * SLO sheds hopeless requests at admission (before any prefill/decode
+    is spent), re-orders the backlog by priority/deadline under burst,
+    degenerates to FIFO with no deadlines, and reports its backlog via
+    ``pending()``.
+
+Scheduler integration over the real two-tier runtime:
+  * default FIFO path is byte-identical to an explicit FIFOAdmission;
+  * an SLOAdmission burst sheds some requests with ``error="shed: ..."``,
+    serves the rest to completion with outputs equal to their solo
+    sequential runs, and the loop's ``run()`` drains the policy backlog
+    (the ``idle`` contract).
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import DeploymentProfile, analyze, build_artifact
+from repro.models.zoo import build_model
+from repro.serving import (
+    ContinuousBatchingScheduler,
+    FIFOAdmission,
+    GenerationEngine,
+    RequestQueue,
+    SLOAdmission,
+    cold_start,
+)
+
+ARCH = "mixtral-8x22b"
+PROMPT_LEN = 6
+MAX_SEQ = 16
+
+
+def _validate_max8(req):
+    S = int(req.tokens.size)
+    if S == 0 or S + req.n_steps > 8 or req.n_steps < 1:
+        return f"rejected: prompt {S} + {req.n_steps} steps exceeds max_seq=8 (or is empty)"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# policy level
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_pops_arrival_order_and_rejects():
+    q = RequestQueue()
+    good1 = q.submit([1, 2], 3)
+    bad = q.submit([1, 2, 3], 99)  # over-length
+    good2 = q.submit([3], 2)
+    pol = FIFOAdmission()
+    admit, drop = pol.select(q, 2, time.perf_counter(), _validate_max8)
+    assert [r.rid for r in admit] == [good1.rid, good2.rid]
+    assert [(r.rid, kind) for r, kind, _ in drop] == [(bad.rid, "rejected")]
+    assert drop[0][2].startswith("rejected: prompt 3 + 99 steps")
+    assert pol.pending() == 0
+    # free=0 never pops: arrival order is preserved for the next round
+    q.submit([5], 1)
+    admit, drop = pol.select(q, 0, time.perf_counter(), _validate_max8)
+    assert admit == [] and drop == [] and len(q) == 1
+
+
+def test_slo_sheds_hopeless_before_service():
+    q = RequestQueue()
+    hopeless = q.submit([1, 2], 5, deadline_s=1e-6)  # already expired
+    fine = q.submit([1, 2], 5)                       # no deadline: never shed
+    pol = SLOAdmission(step_est_s=1e-3, prefill_est_s=1e-3)
+    admit, drop = pol.select(q, 4, time.perf_counter(), _validate_max8)
+    assert [r.rid for r in admit] == [fine.rid]
+    (req, kind, err), = drop
+    assert req.rid == hopeless.rid and kind == "shed"
+    assert err.startswith("shed: ")
+    assert pol.shed_total == 1
+
+
+def test_slo_priority_and_deadline_reorder_under_burst():
+    q = RequestQueue()
+    slow = q.submit([1], 2, deadline_s=60.0, priority=0)
+    urgent = q.submit([1], 2, deadline_s=1.0, priority=0)
+    vip = q.submit([1], 2, priority=5)
+    pol = SLOAdmission(step_est_s=1e-4, prefill_est_s=1e-4)
+    admit, drop = pol.select(q, 2, time.perf_counter(), _validate_max8)
+    # burst of 3 into 2 slots: priority first, then earliest deadline
+    assert [r.rid for r in admit] == [vip.rid, urgent.rid]
+    assert drop == []
+    assert pol.pending() == 1  # `slow` waits in the policy backlog
+    admit2, _ = pol.select(q, 2, time.perf_counter(), _validate_max8)
+    assert [r.rid for r in admit2] == [slow.rid]
+    assert pol.pending() == 0
+
+
+def test_slo_no_deadline_degenerates_to_fifo():
+    q = RequestQueue()
+    reqs = [q.submit([1], 2) for _ in range(5)]
+    pol = SLOAdmission()
+    admit, drop = pol.select(q, 3, time.perf_counter(), _validate_max8)
+    assert [r.rid for r in admit] == [r.rid for r in reqs[:3]]
+    admit2, _ = pol.select(q, 3, time.perf_counter(), _validate_max8)
+    assert [r.rid for r in admit2] == [r.rid for r in reqs[3:]]
+    assert drop == [] and pol.shed_total == 0
+
+
+def test_slo_backlogged_request_shed_when_it_becomes_hopeless():
+    q = RequestQueue()
+    first = q.submit([1], 2, priority=1)  # wins the single slot this round
+    late = q.submit([1], 2, deadline_s=0.05)
+    pol = SLOAdmission(step_est_s=1e-4, prefill_est_s=1e-4)
+    admit, drop = pol.select(q, 1, time.perf_counter(), _validate_max8)
+    assert [r.rid for r in admit] == [first.rid]
+    assert drop == [] and pol.pending() == 1
+    time.sleep(0.06)  # the backlogged deadline expires while queued
+    admit2, drop2 = pol.select(q, 1, time.perf_counter(), _validate_max8)
+    assert admit2 == []
+    assert [(r.rid, kind) for r, kind, _ in drop2] == [(late.rid, "shed")]
+
+
+def test_slo_ema_tracks_observed_service_times():
+    pol = SLOAdmission(step_est_s=1e-3, ema=0.5)
+    for _ in range(8):
+        pol.note_step(0.1, 2)
+    assert pol._step_est == pytest.approx(0.1, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def app(tmp_path_factory):
+    cfg = get_reduced(ARCH).replace(collect_moe_usage=True)
+    model = build_model(cfg)
+    profile = DeploymentProfile(resident_experts=1, hot_vocab_fraction=0.25,
+                                min_tier1_bytes=1024, vocab_row_group=128)
+    res = analyze(model, profile, trace_B=1, trace_S=16)
+    params = model.init(jax.random.PRNGKey(0))
+    outdir = str(tmp_path_factory.mktemp("admission"))
+    build_artifact(params, res, outdir)
+    return cfg, model, res, outdir
+
+
+def _prompts(cfg, n, seed0=0):
+    return [
+        np.asarray(jax.random.randint(
+            jax.random.PRNGKey(seed0 + i), (PROMPT_LEN,), 0, cfg.vocab_size))
+        for i in range(n)
+    ]
+
+
+def test_default_fifo_matches_explicit_fifo(app):
+    """The refactor's parity contract: constructing the scheduler with no
+    policy (the pre-refactor call sites) admits/serves identically to an
+    explicit FIFOAdmission."""
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 4)
+    outs = {}
+    for label, admission in (("default", None), ("explicit", FIFOAdmission())):
+        with cold_start(model, outdir, res, mode="after2",
+                        warm_shapes=((1, PROMPT_LEN),)) as server:
+            sched = ContinuousBatchingScheduler(
+                GenerationEngine(server, max_seq=MAX_SEQ),
+                max_batch=2, admission=admission)
+            reqs = [sched.submit(p, 3) for p in prompts]
+            sched.run()
+            assert all(r.done and r.error is None for r in reqs)
+            assert sched.stats.shed == 0
+            outs[label] = [r.output for r in reqs]
+    for a, b in zip(outs["default"], outs["explicit"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_slo_burst_sheds_and_serves_rest_exactly(app):
+    """A burst with an impossible deadline on some requests: those are
+    shed unserved; the survivors' greedy tokens equal their solo runs,
+    and run() drains the policy backlog (idle contract)."""
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 4, seed0=50)
+    refs = []
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),)) as server:
+        eng = GenerationEngine(server, max_seq=MAX_SEQ)
+        import jax.numpy as jnp
+        for p in prompts:
+            out, _ = eng.generate(jnp.asarray(p[None, :]), 3)
+            refs.append(np.asarray(out[0]))
+
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),),
+                    admission=SLOAdmission(step_est_s=5e-3)) as server:
+        sched = ContinuousBatchingScheduler(
+            GenerationEngine(server, max_seq=MAX_SEQ), max_batch=2)
+        assert isinstance(sched.admission, SLOAdmission)  # server default wins
+        good = [sched.submit(p, 3) for p in prompts[:2]]
+        doomed = [sched.queue.submit(p, 3, deadline_s=1e-6) for p in prompts[2:]]
+        sched.run()
+        assert sched.idle  # queue, slots, AND policy backlog drained
+    for r, ref in zip(good, refs[:2]):
+        assert r.done and r.error is None
+        np.testing.assert_array_equal(r.output, ref)
+    for r in doomed:
+        assert r.done and r.shed and r.error.startswith("shed: ")
+        assert r.out == []  # shed BEFORE any service, not timed out after
+    assert sched.stats.shed == 2
+    assert sched.stats.completed == 2

@@ -1,0 +1,217 @@
+"""Warm server snapshot/restore (DESIGN.md §15.3).
+
+Contract under test:
+  * capture → restore reproduces the donor's residency set, LRU order
+    (via stamps), and clock on a fresh loader, moving exactly the
+    resident units' bytes through the normal preload path;
+  * save → load → capture round-trips byte-identically (deterministic
+    plain JSON);
+  * the artifact compatibility rule: a fingerprint mismatch raises under
+    strict restore and degrades to a cold join under strict=False;
+  * a tighter restore budget keeps the donor's hottest (newest-stamp)
+    suffix — eviction order on the restored replica matches the donor;
+  * multi-tenancy: restoring a warmed tenant registered with a
+    HostArbiter re-charges the arbiter exactly (audit passes);
+  * the predictor table round-trips through the snapshot and arms the
+    restored prefetcher;
+  * FleetController.register uses an offered server snapshot as the
+    bootstrap fast path.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import HostArbiter, snapshot as snapmod
+from repro.core.on_demand import AccessTrace
+from repro.core.prefetch import Prefetcher, TransitionPredictor
+
+from test_prefetch import N_UNITS, ROWS, UNIT_BYTES, _leaf_rows, _mini
+
+
+def test_capture_restore_roundtrip(tmp_path):
+    donor, data, units = _mini(tmp_path, name="donor")
+    # warm in a known order: unit 3 oldest, then 1, then 5 (three ensure
+    # batches → three distinct stamps)
+    for i in (3, 1, 5):
+        donor.ensure([units[i].key])
+    snap = snapmod.capture(donor)
+    assert snap["version"] == snapmod.SNAPSHOT_VERSION
+    assert [k for k, _ in snap["resident"]] == [units[i].key for i in (3, 1, 5)]
+
+    fresh, _, _ = _mini(tmp_path, name="fresh")
+    report = snapmod.restore(fresh, snap)
+    assert report["restored"] == 3 and report["skipped_foreign"] == 0
+    assert report["moved_bytes"] == 3 * UNIT_BYTES
+    assert fresh.resident_keys == donor.resident_keys
+    # stamps (and therefore eviction order) reproduced exactly
+    assert {k: fresh.residency._stamp[k] for k in fresh.resident_keys} == \
+           {k: donor.residency._stamp[k] for k in donor.resident_keys}
+    assert fresh.residency._clock >= donor.residency._clock
+    # bytes are the real unit content, not placeholders
+    for i in (3, 1, 5):
+        np.testing.assert_array_equal(
+            _leaf_rows(fresh, units[i]), data[units[i].rows[0]:units[i].rows[1]])
+    # a second restore is idempotent (everything already resident)
+    report2 = snapmod.restore(fresh, snap)
+    assert report2["moved_bytes"] == 0 and report2["restored"] == 3
+
+
+def test_snapshot_json_roundtrip_byte_identical(tmp_path):
+    donor, _, units = _mini(tmp_path, name="json")
+    for i in (0, 4, 2):
+        donor.ensure([units[i].key])
+    snap = snapmod.capture(donor)
+    p = str(tmp_path / "snap.json")
+    snapmod.save(snap, p)
+    loaded = snapmod.load(p)
+    assert json.dumps(loaded, sort_keys=True) == json.dumps(snap, sort_keys=True)
+    # restore from the loaded document behaves identically
+    fresh, _, _ = _mini(tmp_path, name="json2")
+    assert snapmod.restore(fresh, loaded)["restored"] == 3
+
+
+def test_fingerprint_compatibility_rule(tmp_path):
+    art_a = tmp_path / "art-a"
+    art_b = tmp_path / "art-b"
+    for d, payload in ((art_a, b"aa"), (art_b, b"bbbb")):
+        d.mkdir()
+        (d / "optional.blob").write_bytes(payload)
+    donor, _, units = _mini(tmp_path, name="fp")
+    donor.ensure([units[0].key])
+    snap = snapmod.capture(donor, artifact_dir=str(art_a))
+    assert snap["artifact"]["fingerprint"] == snapmod.artifact_fingerprint(str(art_a))
+
+    fresh, _, _ = _mini(tmp_path, name="fp2")
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        snapmod.restore(fresh, snap, artifact_dir=str(art_b))
+    # non-strict: cold join, nothing restored, report says why
+    rep = snapmod.restore(fresh, snap, artifact_dir=str(art_b), strict=False)
+    assert rep["fingerprint_ok"] is False and rep["restored"] == 0
+    assert fresh.resident_keys == set()
+    # matching artifact restores fine either way
+    rep = snapmod.restore(fresh, snap, artifact_dir=str(art_a))
+    assert rep["fingerprint_ok"] is True and rep["restored"] == 1
+    # version gate
+    with pytest.raises(ValueError, match="snapshot version"):
+        snapmod.restore(fresh, {"version": 99})
+
+
+def test_restore_under_tighter_budget_keeps_hottest_suffix(tmp_path):
+    donor, _, units = _mini(tmp_path, name="big")
+    order = [5, 0, 2, 7, 4, 1]
+    for i in order:
+        donor.ensure([units[i].key])
+    snap = snapmod.capture(donor)
+    tight, _, _ = _mini(tmp_path, budget=3 * UNIT_BYTES, name="tight")
+    rep = snapmod.restore(tight, snap)
+    # oldest-first replay → LRU eviction sheds the donor's coldest units
+    assert rep["restored"] == 3
+    assert tight.resident_keys == {units[i].key for i in order[-3:]}
+
+
+def test_restore_skips_foreign_units(tmp_path):
+    donor, _, units = _mini(tmp_path, name="donorf")
+    donor.ensure([units[0].key])
+    snap = snapmod.capture(donor)
+    snap["resident"].insert(0, ["not-a-real-unit", 0])
+    snap["requested"] = len(snap["resident"])
+    fresh, _, _ = _mini(tmp_path, name="freshf")
+    rep = snapmod.restore(fresh, snap)
+    assert rep["skipped_foreign"] == 1 and rep["restored"] == 1
+
+
+def test_predictor_table_roundtrips_and_arms_prefetcher(tmp_path):
+    trace = AccessTrace()
+    trace.record(["a"], ["a"])
+    trace.record(["b"], ["b"])
+    trace.record(["c"], ["c"], phase="decode")
+    pred = TransitionPredictor.from_trace(trace)
+    clone = TransitionPredictor.from_dict(pred.to_dict())
+    assert clone.to_dict() == pred.to_dict()
+    assert clone.follow(["a"], phase="", prev=[]) == pred.follow(["a"], phase="", prev=[])
+
+    donor, _, units = _mini(tmp_path, name="pd")
+    donor.ensure([units[0].key])
+    pf_donor = Prefetcher(donor, predictor=pred)
+    try:
+        snap = snapmod.capture(donor, prefetcher=pf_donor)
+    finally:
+        pf_donor.stop()
+    assert snap["predictor"] == pred.to_dict()
+
+    fresh, _, _ = _mini(tmp_path, name="pd2")
+    pf_fresh = Prefetcher(fresh)
+    try:
+        rep = snapmod.restore(fresh, snap, prefetcher=pf_fresh)
+        assert rep["predictor_armed"]
+        assert pf_fresh.predictor is not None
+        assert pf_fresh.predictor.to_dict() == pred.to_dict()
+    finally:
+        pf_fresh.stop()
+
+
+def test_multitenant_restore_recharges_arbiter_exactly(tmp_path):
+    """ISSUE satellite: round-trip a warmed server registered with a
+    HostArbiter — restored residency bytes are re-charged to the arbiter
+    exactly, and ``audit()`` passes."""
+    donor, _, units = _mini(tmp_path, name="mt-donor")
+    arb_a = HostArbiter(N_UNITS * UNIT_BYTES * 2)
+    arb_a.register("donor", donor, share=1.0)
+    for i in (2, 6, 1, 4):
+        donor.ensure([units[i].key])
+    arb_a.audit()
+    snap = snapmod.capture(donor)
+
+    # a fresh host: the restored tenant shares the pool with a co-tenant
+    fresh, _, _ = _mini(tmp_path, name="mt-fresh")
+    other, _, o_units = _mini(tmp_path, name="mt-other")
+    arb_b = HostArbiter(N_UNITS * UNIT_BYTES * 2)
+    arb_b.register("restored", fresh, share=0.5)
+    arb_b.register("other", other, share=0.5)
+    other.ensure([o_units[0].key])
+
+    rep = snapmod.restore(fresh, snap)
+    assert rep["restored"] == 4 and rep["moved_bytes"] == 4 * UNIT_BYTES
+    audit = arb_b.audit()  # raises on any charge/resident inconsistency
+    per = audit["tenants"]["restored"]
+    # every restored byte went through make_room → charged exactly once
+    assert per["resident_bytes"] == 4 * UNIT_BYTES
+    assert fresh.residency.charged_bytes() == 4 * UNIT_BYTES
+    assert audit["resident_bytes"] == 5 * UNIT_BYTES  # + the co-tenant's unit
+    # donor and restored replica agree on the resident set and LRU stamps
+    assert fresh.resident_keys == donor.resident_keys
+
+
+def test_fleet_register_bootstraps_from_server_snapshot(tmp_path):
+    """The §15.3 fast path in FleetController.register: an offered server
+    snapshot restores a joining replica before any overlay machinery."""
+    from types import SimpleNamespace
+
+    from repro.core import FleetController
+
+    donor, _, units = _mini(tmp_path, name="fl-donor")
+    for i in (0, 3):
+        donor.ensure([units[i].key])
+    snap = snapmod.capture(donor)
+
+    fleet = FleetController()
+    with pytest.raises(ValueError, match="snapshot version"):
+        fleet.offer_server_snapshot({"version": 99})
+    fleet.offer_server_snapshot(snap)
+
+    joiner, _, _ = _mini(tmp_path, name="fl-joiner")
+    daemon = SimpleNamespace(  # register() only touches these daemon attrs
+        tiered=joiner, reach=None, prefetcher=None, artifact_dir=None)
+    warmed = fleet.register("replica-0", daemon)
+    assert warmed
+    assert joiner.resident_keys == donor.resident_keys
+    assert fleet.stats.bootstraps == 1 and fleet.stats.bootstrap_failures == 0
+    # the snapshot rides the fleet's own snapshot/restore round-trip
+    fc2 = FleetController.restore(fleet.snapshot())
+    joiner2, _, _ = _mini(tmp_path, name="fl-joiner2")
+    daemon2 = SimpleNamespace(tiered=joiner2, reach=None, prefetcher=None,
+                              artifact_dir=None)
+    assert fc2.register("replica-1", daemon2)
+    assert joiner2.resident_keys == donor.resident_keys

@@ -215,3 +215,43 @@ def test_cohens_d_magnitudes():
     a = rs.randn(200)
     assert abs(cohens_d(a, a + 0.8)) > 0.7  # large effect
     assert abs(cohens_d(a, a + 0.01)) < 0.1  # negligible
+
+
+# ---------------------------------------------------------------------------
+# debug mesh validation (DESIGN.md §15.1)
+# ---------------------------------------------------------------------------
+
+
+def test_debug_mesh_rejects_oversized_geometry():
+    """Requesting more mesh devices than the platform exposes must fail
+    with the actionable XLA_FLAGS hint, not jax's opaque reshape error
+    (tests run with exactly 1 CPU device — see conftest)."""
+    from repro.launch.mesh import make_debug_mesh
+
+    have = jax.device_count()
+    with pytest.raises(ValueError, match="xla_force_host_platform_device_count"):
+        make_debug_mesh(have + 1, 1)
+    with pytest.raises(ValueError, match=rf"needs {have * 4} devices but only {have}"):
+        make_debug_mesh(2 * have, 2)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        make_debug_mesh(0, 1)
+    # the degenerate geometry that always fits still builds
+    m = make_debug_mesh(1, 1)
+    assert m.axis_names == ("data", "model")
+
+
+def test_spec_shard_divisor():
+    """Divisor = product of named mesh-axis sizes; None entries and
+    unknown axes contribute nothing (a replicated spec divides by 1)."""
+    from types import SimpleNamespace
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import spec_shard_divisor
+
+    mesh = SimpleNamespace(axis_names=("data", "model"), devices=np.zeros((2, 4)))
+    assert spec_shard_divisor(P(), mesh) == 1
+    assert spec_shard_divisor(P(None, "model"), mesh) == 4
+    assert spec_shard_divisor(P("data", "model"), mesh) == 8
+    assert spec_shard_divisor(P(("data", "model"),), mesh) == 8
+    assert spec_shard_divisor(P("nonexistent"), mesh) == 1
