@@ -1,28 +1,100 @@
-"""Roofline table from the dry-run artifacts (assignment deliverable g).
+"""Roofline table from the dry-run artifacts (assignment deliverable g)
+plus the serving-side KV-bytes/step gate (DESIGN.md §16.2).
 
 Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun) and
 emits per-(arch × shape × mesh):
 
-  compute term    = HLO_FLOPs / (chips × 197 TFLOP/s)
-  memory term     = HLO_bytes / (chips × 819 GB/s)
-  collective term = per-device collective bytes / 50 GB/s per link
+  compute term    = HLO_FLOPs / (chips × peak_flops)
+  memory term     = HLO_bytes / (chips × hbm_bw)
+  collective term = per-device collective bytes / ici_bw per link
 
 plus dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), roofline
-fraction, and fits-in-HBM (peak device bytes vs 16 GB). FLOPs/bytes are the
-loop-aware numbers from repro.utils.hlocost (cost_analysis() counts scan
+fraction, and fits-in-HBM (peak device bytes vs hbm_bytes). FLOPs/bytes are
+the loop-aware numbers from repro.utils.hlocost (cost_analysis() counts scan
 bodies once; see §Roofline methodology in EXPERIMENTS.md).
+
+Peak numbers come from a named ``Machine`` (``--machine``, default
+``tpu-v5e``) so the table is honest about WHICH datasheet it divides by —
+off-TPU runs can pass their own machine instead of silently inheriting
+v5e ceilings.
+
+``decode_kv_bytes`` converts the scheduler's paged-KV accounting
+(``SchedulerStats.kv_tokens_dense`` / ``kv_tokens_paged``) into the
+achieved-vs-max-shape KV bytes/step for the masked decode step — the gate
+rq5's traffic benchmark reports (reduced bytes/step with outputs
+unchanged).
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+from dataclasses import dataclass
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-HBM_BYTES = 16e9
+
+@dataclass(frozen=True)
+class Machine:
+    """Peak datasheet numbers a roofline divides by. ``provenance`` says
+    where each ceiling comes from — a roofline against undocumented peaks
+    is a ratio against nothing."""
+
+    name: str
+    peak_flops: float  # bf16 FLOP/s per chip
+    hbm_bw: float      # HBM bytes/s per chip
+    ici_bw: float      # interconnect bytes/s per link
+    hbm_bytes: float   # HBM capacity per chip
+    provenance: str
+
+
+MACHINES: dict[str, Machine] = {
+    m.name: m
+    for m in [
+        Machine(
+            name="tpu-v5e",
+            peak_flops=197e12,
+            hbm_bw=819e9,
+            ici_bw=50e9,
+            hbm_bytes=16e9,
+            provenance=(
+                "TPU v5e datasheet (cloud.google.com/tpu/docs/v5e): "
+                "197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI, 16 GB HBM"
+            ),
+        ),
+        Machine(
+            name="tpu-v4",
+            peak_flops=275e12,
+            hbm_bw=1228e9,
+            ici_bw=50e9,
+            hbm_bytes=32e9,
+            provenance=(
+                "TPU v4 datasheet (cloud.google.com/tpu/docs/v4): "
+                "275 TFLOP/s bf16, 1228 GB/s HBM, 50 GB/s/link ICI, 32 GB HBM"
+            ),
+        ),
+        Machine(
+            name="cpu-interpret",
+            peak_flops=1e12,
+            hbm_bw=50e9,
+            ici_bw=10e9,
+            hbm_bytes=64e9,
+            provenance=(
+                "order-of-magnitude CI host (interpret-mode runs): terms are "
+                "comparable to each other, not to hardware"
+            ),
+        ),
+    ]
+}
+
+DEFAULT_MACHINE = MACHINES["tpu-v5e"]
+
+# legacy aliases (repro.utils.hlo mirrors these): the pre-Machine module
+# constants, kept pointing at the default machine so old imports resolve
+PEAK_FLOPS = DEFAULT_MACHINE.peak_flops
+HBM_BW = DEFAULT_MACHINE.hbm_bw
+ICI_BW = DEFAULT_MACHINE.ici_bw
+HBM_BYTES = DEFAULT_MACHINE.hbm_bytes
 
 DEFAULT_DIR = "benchmarks/results/dryrun"
 
@@ -38,11 +110,27 @@ def load_records(dirname: str = DEFAULT_DIR, tag: str = "") -> list[dict]:
     return recs
 
 
-def roofline_terms(rec: dict) -> dict:
+def decode_kv_bytes(
+    kv_tokens: int,
+    *,
+    num_layers: int,
+    num_kv_heads: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+) -> int:
+    """KV-cache bytes a decode pass streams for ``kv_tokens`` cache
+    positions: K and V, every layer, every kv head. Feed it the
+    scheduler's ``kv_tokens_dense`` (max-shape masked decode) and
+    ``kv_tokens_paged`` (occupied pages only) to get the §16.2 gate's
+    achieved-vs-max-shape bytes/step."""
+    return int(kv_tokens) * 2 * num_layers * num_kv_heads * head_dim * dtype_bytes
+
+
+def roofline_terms(rec: dict, machine: Machine = DEFAULT_MACHINE) -> dict:
     chips = rec["num_chips"]
-    compute_s = rec["hlo_flops"] / (chips * PEAK_FLOPS)
-    memory_s = rec["hlo_bytes"] / (chips * HBM_BW)
-    collective_s = rec["collective_bytes"] / ICI_BW
+    compute_s = rec["hlo_flops"] / (chips * machine.peak_flops)
+    memory_s = rec["hlo_bytes"] / (chips * machine.hbm_bw)
+    collective_s = rec["collective_bytes"] / machine.ici_bw
     terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     dominant = max(terms, key=terms.get)
     bound = terms[dominant]
@@ -54,6 +142,7 @@ def roofline_terms(rec: dict) -> dict:
         "arch": rec["arch"],
         "shape": rec["shape"],
         "mesh": rec["mesh"],
+        "machine": machine.name,
         "compute_s": compute_s,
         "memory_s": memory_s,
         "collective_s": collective_s,
@@ -61,21 +150,22 @@ def roofline_terms(rec: dict) -> dict:
         "bound_s": bound,
         "model_flops": rec["model_flops"],
         "useful_ratio": rec["model_flops"] / rec["hlo_flops"] if rec["hlo_flops"] else 0.0,
-        "roofline_fraction": (rec["model_flops"] / (chips * PEAK_FLOPS)) / bound if bound else 0.0,
+        "roofline_fraction": (rec["model_flops"] / (chips * machine.peak_flops)) / bound if bound else 0.0,
         "peak_device_bytes": peak,
-        "fits": peak <= HBM_BYTES,
+        "fits": peak <= machine.hbm_bytes,
         "tag": rec.get("tag", ""),
     }
 
 
-def table(dirname: str = DEFAULT_DIR, tag: str = "") -> list[dict]:
+def table(dirname: str = DEFAULT_DIR, tag: str = "",
+          machine: Machine = DEFAULT_MACHINE) -> list[dict]:
     out = []
     for rec in load_records(dirname, tag):
         if rec.get("status") == "skipped":
             out.append({"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
                         "dominant": "SKIPPED", "reason": rec.get("reason", "")})
             continue
-        out.append(roofline_terms(rec))
+        out.append(roofline_terms(rec, machine))
     return out
 
 
@@ -98,8 +188,8 @@ def format_markdown(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
-def main(dirname: str = DEFAULT_DIR) -> list[str]:
-    rows = table(dirname)
+def main(dirname: str = DEFAULT_DIR, machine: Machine = DEFAULT_MACHINE) -> list[str]:
+    rows = table(dirname, machine=machine)
     out = []
     for r in rows:
         if r["dominant"] == "SKIPPED":
@@ -114,4 +204,12 @@ def main(dirname: str = DEFAULT_DIR) -> list[str]:
 
 
 if __name__ == "__main__":
-    print(format_markdown(table()))
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--machine", default=DEFAULT_MACHINE.name,
+                    choices=sorted(MACHINES),
+                    help="peak-numbers datasheet to divide by")
+    args = ap.parse_args()
+    m = MACHINES[args.machine]
+    print(f"machine: {m.name} — {m.provenance}")
+    print(format_markdown(table(args.dir, machine=m)))

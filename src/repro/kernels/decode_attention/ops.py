@@ -9,7 +9,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
 
 
 def _is_tpu() -> bool:
@@ -54,5 +57,49 @@ def decode_attention(
     o = decode_attention_pallas(
         qf, kf, vf, kv_len,
         rolling=rolling, softcap=softcap, bk=bk, interpret=interpret,
+    )
+    return o.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("rolling", "softcap", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,        # (B, H, hd)
+    k_pages: jax.Array,  # (P, ps, Hkv, hd) — global page pool
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, NP) int32
+    kv_len: jax.Array,   # scalar or (B,)
+    *,
+    rolling: bool = False,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Paged flash-decode wrapper (DESIGN.md §16.2): GQA fold + kv_len
+    clamp + page-table tail clamp, then the Pallas kernel. A slot's cache
+    capacity is ``NP * ps``; like the dense wrapper, kv_len is clamped to
+    it (rolling caches wrap — every allocated slot valid once full)."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    B, H, hd = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    NP = page_table.shape[1]
+    G = H // Hkv
+
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((B,), kv_len, jnp.int32)
+    kv_len = jnp.minimum(kv_len, NP * ps)
+
+    # clamp the logical tail: steps past the slot's last occupied page
+    # re-request that page (DMA elided) instead of chasing a freed/garbage
+    # table entry; also bound every entry to the physical pool
+    last = jnp.maximum((kv_len + ps - 1) // ps - 1, 0)  # (B,)
+    ki = jnp.arange(NP, dtype=jnp.int32)
+    logical = jnp.minimum(ki[None, :], last[:, None])   # (B, NP)
+    pt = jnp.take_along_axis(page_table.astype(jnp.int32), logical, axis=1)
+    pt = jnp.clip(pt, 0, P - 1)
+
+    qf = q.reshape(B, Hkv, G, hd)
+    o = paged_decode_attention_pallas(
+        qf, k_pages, v_pages, pt, kv_len, softcap=softcap, interpret=interpret
     )
     return o.reshape(B, H, hd)

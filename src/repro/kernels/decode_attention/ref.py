@@ -11,6 +11,23 @@ import jax
 from repro.models.attention import decode_attention_jnp
 
 
+def paged_decode_attention_ref(
+    q: jax.Array,        # (B, H, hd)
+    k_pages: jax.Array,  # (P, ps, Hkv, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, NP) int32
+    kv_len: jax.Array,
+    *,
+    rolling: bool = False,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    from repro.models.attention import decode_attention_paged_jnp
+
+    return decode_attention_paged_jnp(
+        q, k_pages, v_pages, page_table, kv_len, rolling=rolling, softcap=softcap
+    )
+
+
 def decode_attention_ref(
     q: jax.Array,       # (B, H, hd)
     k_cache: jax.Array, # (B, Skv, Hkv, hd)

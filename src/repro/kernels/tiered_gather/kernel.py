@@ -47,6 +47,110 @@ def _tiered_gather_kernel(
     miss_ref[0, 0] = jnp.where(ok, 0, 1).astype(jnp.int32)
 
 
+def _tiered_gather_matmul_kernel(
+    ids_ref,    # (N,) int32   — scalar prefetch
+    mask_ref,   # (G,) int32   — scalar prefetch (1 = group resident)
+    fetch_ref,  # (N,) int32   — scalar prefetch: row actually DMA'd at step i
+    table_ref,  # (1, D) block — row fetch_ref[i] of the table
+    w_ref,      # (D, F) block — the expert weight, whole
+    o_ref,      # (1, F) block
+    miss_ref,   # (1, 1) block int32
+    *,
+    group_size: int,
+    n_rows: int,
+):
+    i = pl.program_id(0)
+    idx = ids_ref[i]
+    in_range = jnp.logical_and(idx >= 0, idx < n_rows)
+    grp = jnp.clip(idx, 0, n_rows - 1) // group_size
+    ok = jnp.logical_and(in_range, mask_ref[grp] > 0)
+    miss_ref[0, 0] = jnp.where(ok, 0, 1).astype(jnp.int32)
+
+    # skip, don't zero-and-compute: a cold step writes zeros and never
+    # touches the MXU (and its DMA was elided by the fetch-id scheme —
+    # see tiered_gather_matmul_pallas)
+    @pl.when(ok)
+    def _matmul():
+        o_ref[...] = jax.lax.dot_general(
+            table_ref[...].astype(jnp.float32),
+            w_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+
+    @pl.when(jnp.logical_not(ok))
+    def _cold():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def tiered_gather_matmul_pallas(
+    table: jax.Array,  # (V, D)
+    w: jax.Array,      # (D, F) expert weight
+    ids: jax.Array,    # (N,) int32
+    group_mask: jax.Array,  # (G,) int32
+    *,
+    group_size: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused residency-masked gather→expert-matmul (DESIGN.md §16.1).
+
+    out[i] = table[ids[i]] @ w for resident in-range ids, zeros otherwise;
+    miss[i] = 1 exactly where the row was cold/out-of-range (the loader's
+    fault-and-retry signal, same contract as ``tiered_gather``).
+
+    Device-byte/FLOP saving vs gather-then-matmul: the grid pipeline only
+    re-issues a row DMA when the block index *changes* between steps, so
+    cold steps prefetch ``fetch_ids[i]`` — the most recent resident row
+    (row 0 before any) — instead of a clamped fresh row: a run of cold ids
+    repeats the previous index and moves no HBM bytes. The matmul body is
+    gated with ``pl.when(ok)``, so cold rows are never multiplied either
+    (the old path zero-filled and then multiplied at full width).
+    """
+    V, D = table.shape
+    F = w.shape[1]
+    N = ids.shape[0]
+    safe = jnp.clip(ids, 0, V - 1)
+    in_range = jnp.logical_and(ids >= 0, ids < V)
+    ok = jnp.logical_and(in_range, group_mask[safe // group_size] > 0)
+    # last-known-resident scan: cold steps re-request the previous resident
+    # row so the pipeline's change-detection elides their copy entirely
+    last_ok = jax.lax.cummax(jnp.where(ok, jnp.arange(N, dtype=jnp.int32), -1))
+    fetch_ids = jnp.where(last_ok >= 0, safe[jnp.maximum(last_ok, 0)], 0)
+
+    kernel = functools.partial(
+        _tiered_gather_matmul_kernel, group_size=group_size, n_rows=V
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, D),
+                lambda i, ids_ref, mask_ref, fetch_ref: (fetch_ref[i], 0),
+            ),
+            # whole weight, same block every step: DMA'd once, then elided
+            pl.BlockSpec(
+                (D, F),
+                lambda i, ids_ref, mask_ref, fetch_ref: (0, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, F), lambda i, ids_ref, mask_ref, fetch_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, ids_ref, mask_ref, fetch_ref: (i, 0)),
+        ],
+    )
+    out, miss = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((N, F), table.dtype),
+            jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids, group_mask, fetch_ids, table, w)
+    return out, miss[:, 0]
+
+
 def tiered_gather_pallas(
     table: jax.Array,  # (V, D)
     ids: jax.Array,    # (N,) int32

@@ -7,7 +7,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tiered_gather.kernel import tiered_gather_pallas
+from repro.kernels.tiered_gather.kernel import (
+    tiered_gather_matmul_pallas,
+    tiered_gather_pallas,
+)
 
 
 def _is_tpu() -> bool:
@@ -31,4 +34,27 @@ def tiered_gather(
     group_mask = group_mask.astype(jnp.int32)
     return tiered_gather_pallas(
         table, ids, group_mask, group_size=group_size, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "interpret"))
+def tiered_gather_matmul(
+    table: jax.Array,
+    w: jax.Array,
+    ids: jax.Array,
+    group_mask: jax.Array,
+    *,
+    group_size: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused residency-masked gather→matmul (DESIGN.md §16.1). Returns
+    (out (N, F) — table[ids] @ w with zeros for misses, miss (N,) int32);
+    cold rows are skipped (no DMA, no MXU work), not zero-filled-and-
+    multiplied."""
+    if interpret is None:
+        interpret = not _is_tpu()
+    ids = ids.astype(jnp.int32)
+    group_mask = group_mask.astype(jnp.int32)
+    return tiered_gather_matmul_pallas(
+        table, w, ids, group_mask, group_size=group_size, interpret=interpret
     )

@@ -21,3 +21,23 @@ def tiered_gather_ref(
     out = jnp.where(ok[:, None], rows, 0)
     miss = (~ok).astype(jnp.int32)
     return out, miss
+
+
+def tiered_gather_matmul_ref(
+    table: jax.Array,       # (V, D)
+    w: jax.Array,           # (D, F)
+    ids: jax.Array,         # (N,) int32
+    group_mask: jax.Array,  # (G,) int32 — 1 = resident
+    *,
+    group_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Dense reference for the fused kernel: gather (zeros for misses),
+    then matmul at full width — exactly the two-step path the fusion
+    replaces. Accumulates fp32 like the kernel so resident rows agree to
+    reduction-order rounding and miss rows are exactly zero."""
+    rows, miss = tiered_gather_ref(table, ids, group_mask, group_size=group_size)
+    out = jnp.einsum(
+        "nd,df->nf", rows.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(table.dtype)
+    return out, miss

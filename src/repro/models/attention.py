@@ -305,6 +305,105 @@ def decode_attention_jnp(
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache (DESIGN.md §16.2): pool of fixed-size pages + page tables
+# ---------------------------------------------------------------------------
+
+
+def densify_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(P, ps, Hkv, hd) pool + (B, NP) table -> (B, NP*ps, Hkv, hd) dense
+    cache in logical order — the bridge between the paged layout and every
+    dense-cache oracle."""
+    B, NP = page_table.shape
+    _, ps, Hkv, hd = pages.shape
+    return pages[page_table].reshape(B, NP * ps, Hkv, hd)
+
+
+def decode_attention_paged_jnp(
+    q: jax.Array,        # (B, H, hd) — roped already
+    k_pages: jax.Array,  # (P, ps, Hkv, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, NP) int32
+    kv_len: jax.Array,
+    *,
+    rolling: bool = False,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Pure-jnp oracle for paged decode attention: densify through the
+    page table, then the dense masked reference. The Pallas kernel must
+    match this for ANY table permutation (pages are named, not ordered —
+    tests/test_kernels.py)."""
+    k_dense = densify_pages(k_pages, page_table)
+    v_dense = densify_pages(v_pages, page_table)
+    return decode_attention_jnp(
+        q, k_dense, v_dense, kv_len, rolling=rolling, softcap=softcap
+    )
+
+
+def paged_kv_write(
+    k_pages: jax.Array,  # (P, ps, Hkv, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, NP) int32
+    slot: jax.Array,     # (B,) int32 — logical cache slot (pos, or pos % window)
+    k_new: jax.Array,    # (B, Hkv, hd)
+    v_new: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Write one token's K/V at logical slot ``slot[b]`` of each sequence:
+    physical page = page_table[b, slot // ps], offset = slot % ps. Distinct
+    sequences own disjoint pages (the PagePool contract), so the scatter
+    rows never collide."""
+    ps = k_pages.shape[1]
+    phys = jnp.take_along_axis(page_table, (slot // ps)[:, None], axis=1)[:, 0]
+    off = slot % ps
+    k_pages = k_pages.at[phys, off].set(k_new)
+    v_pages = v_pages.at[phys, off].set(v_new)
+    return k_pages, v_pages
+
+
+def paged_gqa_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, D)
+    pos: jax.Array,  # (B,) absolute position of the new token
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rolling_window: Optional[int] = None,
+    use_pallas: bool = False,
+):
+    """One decode step over a paged KV cache; returns
+    (out, new_k_pages, new_v_pages). Same contract as ``gqa_decode`` with
+    the (B, Skv, ...) slot cache replaced by pool + page table — greedy
+    outputs are parity-tested against it (tests/test_paged_kv.py)."""
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    B = x.shape[0]
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype)), H)
+    k = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype)), Hkv)
+    v = _split_heads(jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype)), Hkv)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)[:, 0]  # (B, H, hd)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)[:, 0]  # (B, Hkv, hd)
+    v = v[:, 0]
+
+    slot = (pos % rolling_window) if rolling_window else pos
+    k_pages, v_pages = paged_kv_write(k_pages, v_pages, page_table, slot, k, v)
+    kv_len = pos + 1
+    if use_pallas:
+        from repro.kernels.decode_attention import ops as da_ops
+
+        o = da_ops.paged_decode_attention(
+            q, k_pages, v_pages, page_table, kv_len,
+            rolling=rolling_window is not None, softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        o = decode_attention_paged_jnp(
+            q, k_pages, v_pages, page_table, kv_len,
+            rolling=rolling_window is not None, softcap=cfg.attn_logit_softcap,
+        )
+    out = jnp.einsum("bh,hd->bd", o.reshape(B, H * hd), params["wo"].astype(x.dtype))
+    return out[:, None, :], k_pages, v_pages
+
+
+# ---------------------------------------------------------------------------
 # GQA layer (projections + rope + attention), train/prefill and decode
 # ---------------------------------------------------------------------------
 

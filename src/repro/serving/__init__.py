@@ -10,6 +10,7 @@ from repro.serving.cold_start import (
     cold_start,
 )
 from repro.serving.engine import GenerationEngine, RequestStats
+from repro.serving.paged_kv import PagePool, PagePoolStats
 from repro.serving.scheduler import (
     AdmissionPolicy,
     ContinuousBatchingScheduler,
@@ -27,6 +28,8 @@ __all__ = [
     "cold_start",
     "GenerationEngine",
     "RequestStats",
+    "PagePool",
+    "PagePoolStats",
     "AdmissionPolicy",
     "FIFOAdmission",
     "SLOAdmission",

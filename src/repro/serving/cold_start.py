@@ -110,6 +110,8 @@ class ColdStartServer:
         retier_daemon: Optional[RetierDaemon] = None,
         artifact_dir: Optional[str] = None,
         admission: Any = None,
+        kv_page_size: Optional[int] = None,
+        kv_pages: Optional[int] = None,
     ):
         self.model = model
         self.params = params
@@ -122,6 +124,10 @@ class ColdStartServer:
         # default AdmissionPolicy for schedulers built on this server
         # (DESIGN.md §15.2); None → the scheduler's FIFO default
         self.admission = admission
+        # default paged-KV pool shape for schedulers (DESIGN.md §16.2);
+        # None → page size 16 and a pool exactly covering max_batch×max_seq
+        self.kv_page_size = kv_page_size
+        self.kv_pages = kv_pages
         self.restore_report: Optional[dict] = None  # set by restore_from=
         self._compiled: dict[tuple, Callable] = {}
 
@@ -215,6 +221,8 @@ def cold_start(
     replica_name: Optional[str] = None,  # fleet registration name
     mesh=None,                    # jax Mesh: shard tier-0/tier-1 puts (DESIGN.md §15.1)
     admission=None,               # default AdmissionPolicy for schedulers (§15.2)
+    kv_page_size: Optional[int] = None,  # default paged-KV page size (§16.2)
+    kv_pages: Optional[int] = None,      # default paged-KV pool size (§16.2)
     restore_from=None,            # snapshot dict or path: warm restore (§15.3)
 ) -> ColdStartServer:
     """Run one timed cold start. ``result`` is required for after2.
@@ -288,7 +296,8 @@ def cold_start(
         report.read_s, report.upload_s = t1 - t0, t2 - t1
         report.bytes_uploaded = sum(v.nbytes for v in pflat.values())
         server = ColdStartServer(model, tree, report,
-                                 artifact_dir=artifact_dir, admission=admission)
+                                 artifact_dir=artifact_dir, admission=admission,
+                                 kv_page_size=kv_page_size, kv_pages=kv_pages)
     elif mode == "after2":
         if result is None:
             raise ValueError("after2 cold start needs the AnalysisResult (plan)")
@@ -387,7 +396,8 @@ def cold_start(
                 fleet.register(name, daemon)
         server = ColdStartServer(model, tree, report, tiered=tiered, store=store,
                                  prefetcher=prefetcher, retier_daemon=daemon,
-                                 artifact_dir=artifact_dir, admission=admission)
+                                 artifact_dir=artifact_dir, admission=admission,
+                                 kv_page_size=kv_page_size, kv_pages=kv_pages)
         if restore_from is not None:
             # warm restore (DESIGN.md §15.3): re-fault the donor's residency
             # set (in LRU order, through the arbiter make-room path) and arm

@@ -1,0 +1,143 @@
+"""Paged KV-cache pool for the continuous-batching scheduler
+(DESIGN.md §16.2).
+
+The dense scheduler cache gives every slot ``max_seq`` positions whether
+its request uses 10 tokens or 1000 — and the masked decode step streams
+all of them. The paged layout carves the same capacity into fixed-size
+pages owned by a global free list: a request is granted exactly the pages
+its ``prompt + n_steps`` positions need at admission, holds them for its
+lifetime, and returns them at retire (or failure — the scheduler's
+failure paths free before the slot is reused). The decode kernel then
+walks only occupied pages (``kernels.decode_attention.paged_decode_
+attention``), so a slot's per-step KV bytes follow its actual length.
+
+``PagePool`` is the host-side allocator: bookkeeping only (page ids,
+no tensors), single-threaded by the same contract as the scheduler's
+slot arrays — exactly one loop thread admits and retires. Exhaustion is
+an *admission* signal: ``alloc`` fails atomically (no partial grant) and
+the scheduler rejects the request with slot state untouched.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class PagePoolStats:
+    allocs: int = 0            # successful per-request grants
+    frees: int = 0             # per-request releases
+    alloc_pages: int = 0       # pages handed out across all grants
+    exhausted: int = 0         # failed grants (admission rejections)
+    high_water_pages: int = 0  # peak concurrent pages in use
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class PagePool:
+    """Fixed pool of ``n_pages`` KV pages of ``page_size`` token positions,
+    allocated per scheduler slot and freed wholesale at retire."""
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int):
+        if n_pages < 1 or page_size < 1 or n_slots < 1:
+            raise ValueError(
+                f"PagePool needs positive sizes, got n_pages={n_pages} "
+                f"page_size={page_size} n_slots={n_slots}"
+            )
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.n_slots = int(n_slots)
+        # LIFO free list: a just-freed request's pages are the next grant
+        # (deterministic reuse, tested in tests/test_scheduler.py)
+        self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        self._owned: dict[int, list[int]] = {}  # slot -> pages, logical order
+        self.stats = PagePoolStats()
+
+    # -- sizing ----------------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` cache positions (≥1: even a 1-token
+        request owns a page)."""
+        return max(1, -(-int(n_tokens) // self.page_size))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= len(self._free)
+
+    # -- lifecycle --------------------------------------------------------------
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        """Grant the pages ``n_tokens`` positions need to ``slot``.
+        Atomic: on exhaustion nothing is granted and False returns (the
+        admission rejection); a slot must be freed before re-granting."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages (free it first)")
+        need = self.pages_for(n_tokens)
+        if need > len(self._free):
+            self.stats.exhausted += 1
+            return False
+        self._owned[slot] = [self._free.pop() for _ in range(need)]
+        self.stats.allocs += 1
+        self.stats.alloc_pages += need
+        self.stats.high_water_pages = max(self.stats.high_water_pages, self.used_pages)
+        return True
+
+    def free(self, slot: int) -> int:
+        """Return ``slot``'s pages to the free list (idempotent — the
+        scheduler's failure paths may race retire bookkeeping). Returns the
+        number of pages released."""
+        pages = self._owned.pop(slot, None)
+        if pages is None:
+            return 0
+        # LIFO: freed pages go back on top, preserving deterministic reuse
+        self._free.extend(reversed(pages))
+        self.stats.frees += 1
+        return len(pages)
+
+    def owned(self, slot: int) -> list[int]:
+        return list(self._owned.get(slot, ()))
+
+    # -- kernel-facing views ----------------------------------------------------
+    def page_table(self, np_max: int | None = None) -> np.ndarray:
+        """(n_slots, np_max) int32 physical-page table for the paged decode
+        kernel: row s holds slot s's pages in logical order, tail-padded
+        with the slot's last page (the kernel's DMA-elision convention) or
+        0 for empty slots."""
+        if np_max is None:
+            np_max = max(1, -(-self.n_pages // max(self.n_slots, 1)))
+            np_max = max(np_max, max((len(p) for p in self._owned.values()), default=1))
+        table = np.zeros((self.n_slots, np_max), np.int32)
+        for slot, pages in self._owned.items():
+            row = (pages + [pages[-1]] * np_max)[:np_max]
+            table[slot] = row
+        return table
+
+    # -- accounting (the roofline gate's achieved-bytes numerator) --------------
+    def step_kv_positions(self, active_lens: dict[int, int]) -> int:
+        """KV positions one paged decode step streams: per active slot, its
+        occupied pages × page_size (whole pages move — the honest number,
+        not the masked-length one)."""
+        total = 0
+        for slot, n in active_lens.items():
+            pages = self._owned.get(slot)
+            n_pages = len(pages) if pages else self.pages_for(n)
+            # only pages holding any of the first n positions stream
+            total += min(n_pages, self.pages_for(n)) * self.page_size
+        return total
+
+    def assert_consistent(self) -> None:
+        """Every page is exactly once in the free list or one slot's grant."""
+        seen = list(self._free) + [p for ps in self._owned.values() for p in ps]
+        if sorted(seen) != list(range(self.n_pages)):
+            raise AssertionError(
+                f"page books corrupt: {len(self._free)} free + "
+                f"{sum(len(p) for p in self._owned.values())} owned != {self.n_pages}"
+            )

@@ -29,6 +29,15 @@ turns the same fault-in/pin/prefetch machinery into a serving loop:
     active slot advances exactly one token per step, and predictive hints
     are round-robin-merged across slots (``core.prefetch.merge_hints``)
     so one request's long tail can't starve another's next-step units.
+  * **paged KV lifecycle** (DESIGN.md §16.2) — a ``PagePool`` carves the
+    decode-cache capacity into fixed-size pages: admission grants each
+    request the pages its ``prompt + n_steps`` positions need (atomic —
+    on exhaustion the request is *rejected* with slot state untouched),
+    retire and both failure paths return them, and per-step accounting
+    (``kv_tokens_dense`` vs ``kv_tokens_paged``) feeds the roofline
+    gate's achieved-vs-max-shape KV bytes. The default pool exactly
+    covers ``max_batch × max_seq``, so page exhaustion is impossible and
+    admission decisions are byte-identical to the pre-paging scheduler.
 
 Greedy outputs are per-slot identical to running each request alone
 through ``generate()`` (tested in tests/test_scheduler.py): decode rows
@@ -50,6 +59,7 @@ import numpy as np
 
 from repro.core.prefetch import merge_hints
 from repro.serving.engine import GenerationEngine, RequestStats
+from repro.serving.paged_kv import PagePool
 from repro.utils.tree import flatten_with_paths, tree_from_flat
 
 
@@ -320,6 +330,12 @@ class SchedulerStats:
     faulted_bytes: int = 0
     decode_retries: int = 0
     max_active: int = 0     # high-water concurrent slots
+    # paged-KV accounting (DESIGN.md §16.2): cache positions the masked
+    # decode streams at max shape vs. what the paged layout would stream
+    # (occupied pages of active slots only) — the roofline gate's numbers
+    kv_tokens_dense: int = 0
+    kv_tokens_paged: int = 0
+    kv_pages_high_water: int = 0
 
     def to_dict(self) -> dict:
         return dict(self.__dict__)
@@ -342,6 +358,8 @@ class ContinuousBatchingScheduler:
         max_batch: int = 4,
         queue: Optional[RequestQueue] = None,
         admission: Optional[AdmissionPolicy] = None,
+        kv_page_size: Optional[int] = None,
+        kv_pages: Optional[int] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -357,6 +375,14 @@ class ContinuousBatchingScheduler:
             if admission is not None
             else getattr(self.server, "admission", None) or FIFOAdmission()
         )
+        # paged-KV pool (DESIGN.md §16.2): explicit kwargs win, then the
+        # server's cold_start(kv_page_size=/kv_pages=) defaults; the pool
+        # defaults to exactly max_batch × max_seq worth of pages, where
+        # exhaustion is impossible and admission is byte-identical
+        ps = kv_page_size or getattr(self.server, "kv_page_size", None) or 16
+        per_slot = -(-engine.max_seq // ps)
+        n_pages = kv_pages or getattr(self.server, "kv_pages", None) or max_batch * per_slot
+        self.page_pool = PagePool(n_pages, ps, max_batch)
         self.stats = SchedulerStats()
         self._slots: list[Optional[Request]] = [None] * max_batch
         self._pos = np.zeros(max_batch, np.int32)       # next decode position
@@ -434,6 +460,23 @@ class ContinuousBatchingScheduler:
         picked: list[tuple[int, Request]] = [
             (free[i], req) for i, req in enumerate(to_admit[: len(free)])
         ]
+        # paged-KV grant (§16.2): each request owns the pages its
+        # prompt + n_steps positions need before any prefill is spent on
+        # it. Exhaustion is an admission rejection with slot state
+        # untouched — the loop keeps serving, the submitter sees an error.
+        granted: list[tuple[int, Request]] = []
+        for slot, req in picked:
+            need = int(req.tokens.size) + req.n_steps
+            if not self.page_pool.alloc(slot, need):
+                self.stats.rejected += 1
+                req.finish(error=(
+                    f"rejected: kv page pool exhausted "
+                    f"(need {self.page_pool.pages_for(need)} pages, "
+                    f"{self.page_pool.free_pages} free of {self.page_pool.n_pages})"
+                ))
+                continue
+            granted.append((slot, req))
+        picked = granted
 
         admitted = 0
         hints: list[list[str]] = []
@@ -461,7 +504,8 @@ class ContinuousBatchingScheduler:
                 # submitters waiting forever) — fail the group's requests,
                 # return their slots, keep serving
                 self.stats.failed += len(reqs)
-                for r in reqs:
+                for s, r in grp:
+                    self.page_pool.free(s)  # a failed request leaks no pages
                     r.finish(error=f"prefill failed: {e!r}")
                 continue
             self.admission.note_prefill(shared.prefill_s + shared.fault_s)
@@ -509,6 +553,7 @@ class ContinuousBatchingScheduler:
         self._slots[slot] = None
         self._last_tok[slot] = 0
         self._pos[slot] = 0
+        self.page_pool.free(slot)  # pages return at retire, ready for reuse
         self.stats.completed += 1
         req.finish()
 
@@ -586,6 +631,7 @@ class ContinuousBatchingScheduler:
                 self._slots[i] = None
                 self._last_tok[i] = 0
                 self._pos[i] = 0
+                self.page_pool.free(i)  # failed slots leak no pages
                 if tiered is not None:
                     # failed requests never reach _emit_hints — drop their
                     # trace chain state here or it leaks forever (§12.3)
@@ -599,6 +645,14 @@ class ContinuousBatchingScheduler:
         self.stats.decode_retries += step_stats.decode_retries
         self.stats.steps += 1
         self.admission.note_step(step_stats.decode_s + step_stats.fault_s, len(active))
+        # paged-KV accounting (§16.2): the masked decode streams the full
+        # (max_batch, max_seq) cache; the paged layout would stream only
+        # the active slots' occupied pages. The roofline gate compares.
+        self.stats.kv_tokens_dense += self.max_batch * self.engine.max_seq
+        self.stats.kv_tokens_paged += self.page_pool.step_kv_positions(
+            {i: int(self._pos[i]) + 1 for i in active}
+        )
+        self.stats.kv_pages_high_water = self.page_pool.stats.high_water_pages
 
         # units this step demand-accessed: the active slots' embed
         # row-groups plus every routed expert (resident ones included —

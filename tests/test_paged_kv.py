@@ -1,0 +1,194 @@
+"""Paged KV cache (DESIGN.md §16.2): PagePool allocator invariants and
+model-layer parity — ``paged_gqa_decode`` over pool + page table must
+produce the same outputs as ``gqa_decode`` over the dense slot cache,
+step for step, linear and rolling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.attention import (
+    densify_pages,
+    gqa_decode,
+    paged_gqa_decode,
+    paged_kv_write,
+)
+from repro.serving.paged_kv import PagePool
+
+
+# ---------------------------------------------------------------------------
+# PagePool allocator
+# ---------------------------------------------------------------------------
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = PagePool(8, page_size=4, n_slots=3)
+    assert pool.pages_for(1) == 1 and pool.pages_for(4) == 1 and pool.pages_for(5) == 2
+    assert pool.alloc(0, 9)   # 3 pages
+    assert pool.alloc(1, 4)   # 1 page
+    assert pool.used_pages == 4 and pool.free_pages == 4
+    assert len(pool.owned(0)) == 3 and len(pool.owned(1)) == 1
+    pool.assert_consistent()
+    assert pool.free(0) == 3
+    assert pool.free(0) == 0  # idempotent
+    assert pool.used_pages == 1
+    pool.assert_consistent()
+
+
+def test_pool_lifo_reuse():
+    """A just-freed slot's pages are the next grant, in the same order —
+    deterministic reuse the scheduler tests rely on."""
+    pool = PagePool(6, page_size=2, n_slots=2)
+    assert pool.alloc(0, 6)
+    first = pool.owned(0)
+    pool.free(0)
+    assert pool.alloc(1, 6)
+    assert pool.owned(1) == first
+
+
+def test_pool_exhaustion_is_atomic():
+    """A grant that cannot fully fit takes nothing — no partial grant to
+    roll back, slot state untouched."""
+    pool = PagePool(4, page_size=4, n_slots=2)
+    assert pool.alloc(0, 12)  # 3 of 4 pages
+    free_before = pool.free_pages
+    assert not pool.alloc(1, 8)  # needs 2, only 1 free
+    assert pool.free_pages == free_before
+    assert pool.owned(1) == []
+    assert pool.stats.exhausted == 1
+    pool.assert_consistent()
+    # the remaining page still serves a small request
+    assert pool.alloc(1, 3)
+
+
+def test_pool_double_alloc_raises():
+    pool = PagePool(4, page_size=4, n_slots=2)
+    assert pool.alloc(0, 4)
+    with pytest.raises(ValueError, match="already owns"):
+        pool.alloc(0, 4)
+
+
+def test_pool_page_table_layout():
+    """(n_slots, NP) int32, logical page order per row, tail padded with
+    the slot's LAST page (the kernel's DMA-elision convention), zero rows
+    for empty slots."""
+    pool = PagePool(8, page_size=4, n_slots=3)
+    assert pool.alloc(0, 10)  # 3 pages
+    assert pool.alloc(2, 4)   # 1 page
+    t = pool.page_table(np_max=4)
+    assert t.shape == (3, 4) and t.dtype == np.int32
+    own0, own2 = pool.owned(0), pool.owned(2)
+    assert list(t[0]) == own0 + [own0[-1]]          # tail repeats last page
+    assert list(t[1]) == [0, 0, 0, 0]               # empty slot
+    assert list(t[2]) == [own2[0]] + [own2[0]] * 3  # single page repeated
+
+
+def test_pool_step_kv_positions():
+    pool = PagePool(16, page_size=4, n_slots=4)
+    assert pool.alloc(0, 16)  # 4 pages granted
+    assert pool.alloc(1, 4)   # 1 page
+    # slot 0 at 6 live tokens streams only the 2 pages holding them,
+    # not its whole 4-page grant; slot 1 streams its single page
+    assert pool.step_kv_positions({0: 6, 1: 3}) == 2 * 4 + 1 * 4
+    # full-length slot streams its whole grant
+    assert pool.step_kv_positions({0: 16}) == 4 * 4
+
+
+def test_pool_books_detect_corruption():
+    pool = PagePool(4, page_size=4, n_slots=2)
+    pool.alloc(0, 8)
+    pool._free.append(pool.owned(0)[0])  # corrupt: page both free and owned
+    with pytest.raises(AssertionError, match="corrupt"):
+        pool.assert_consistent()
+
+
+# ---------------------------------------------------------------------------
+# model-layer parity: paged_gqa_decode == gqa_decode
+# ---------------------------------------------------------------------------
+
+
+def _gqa_params(cfg, key):
+    D = cfg.d_model
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": jax.random.normal(ks[0], (D, H * hd), jnp.float32) * 0.1,
+        "wk": jax.random.normal(ks[1], (D, Hkv * hd), jnp.float32) * 0.1,
+        "wv": jax.random.normal(ks[2], (D, Hkv * hd), jnp.float32) * 0.1,
+        "wo": jax.random.normal(ks[3], (H * hd, D), jnp.float32) * 0.1,
+    }
+
+
+def _paged_setup(cfg, B, NP, ps, seed=0):
+    Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    pool = PagePool(B * NP + 2, ps, B)
+    for b in range(B):
+        assert pool.alloc(b, NP * ps)
+    pt = jnp.asarray(pool.page_table(np_max=NP))
+    P = pool.n_pages
+    k_pages = jnp.zeros((P, ps, Hkv, hd), jnp.float32)
+    v_pages = jnp.zeros((P, ps, Hkv, hd), jnp.float32)
+    return pool, pt, k_pages, v_pages
+
+
+@pytest.mark.parametrize("rolling_window", [None, 8])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_paged_gqa_decode_matches_dense(rolling_window, use_pallas):
+    """Token-for-token parity over a multi-step decode: same outputs, and
+    the densified pages equal the dense cache after every write."""
+    cfg = get_reduced("mixtral-8x22b")
+    B, NP, ps = 2, 2, 4
+    Skv = rolling_window if rolling_window else NP * ps
+    assert Skv <= NP * ps
+    params = _gqa_params(cfg, jax.random.PRNGKey(1))
+    _, pt, k_pages, v_pages = _paged_setup(cfg, B, NP, ps)
+    Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k_cache = jnp.zeros((B, Skv, Hkv, hd), jnp.float32)
+    v_cache = jnp.zeros((B, Skv, Hkv, hd), jnp.float32)
+    # paged capacity may exceed the dense cache; parity holds on the
+    # positions both can represent (steps < Skv linear, any step rolling)
+    n_steps = Skv + 3 if rolling_window else Skv
+    for t in range(n_steps):
+        x = jax.random.normal(jax.random.PRNGKey(100 + t), (B, 1, cfg.d_model))
+        pos = jnp.full((B,), t, jnp.int32)
+        out_d, k_cache, v_cache = gqa_decode(
+            params, x, pos, k_cache, v_cache, cfg, rolling_window=rolling_window
+        )
+        out_p, k_pages, v_pages = paged_gqa_decode(
+            params, x, pos, k_pages, v_pages, pt, cfg,
+            rolling_window=rolling_window, use_pallas=use_pallas,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_p), np.asarray(out_d), atol=3e-5, rtol=3e-5,
+            err_msg=f"step {t}",
+        )
+        # the logical prefix both layouts hold must be identical bytes
+        kd = densify_pages(k_pages, pt)[:, :Skv]
+        np.testing.assert_array_equal(np.asarray(kd), np.asarray(k_cache))
+
+
+def test_paged_kv_write_targets_only_owned_pages():
+    """A write lands at exactly (page_table[b, slot//ps], slot%ps); every
+    other page — other slots' and unowned — is untouched."""
+    cfg = get_reduced("mixtral-8x22b")
+    Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    B, NP, ps = 2, 2, 4
+    _, pt, k_pages, v_pages = _paged_setup(cfg, B, NP, ps)
+    slot = jnp.asarray([5, 2], jnp.int32)
+    k_new = jax.random.normal(jax.random.PRNGKey(3), (B, Hkv, hd))
+    v_new = jax.random.normal(jax.random.PRNGKey(4), (B, Hkv, hd))
+    k2, v2 = paged_kv_write(k_pages, v_pages, pt, slot, k_new, v_new)
+    pt_np = np.asarray(pt)
+    touched = {(pt_np[b, int(slot[b]) // ps], int(slot[b]) % ps) for b in range(B)}
+    for p in range(k_pages.shape[0]):
+        for o in range(ps):
+            if (p, o) in touched:
+                b = [b for b in range(B)
+                     if (pt_np[b, int(slot[b]) // ps], int(slot[b]) % ps) == (p, o)][0]
+                np.testing.assert_array_equal(np.asarray(k2[p, o]), np.asarray(k_new[b]))
+                np.testing.assert_array_equal(np.asarray(v2[p, o]), np.asarray(v_new[b]))
+            else:
+                assert np.all(np.asarray(k2[p, o]) == 0)
+                assert np.all(np.asarray(v2[p, o]) == 0)

@@ -13,7 +13,10 @@ Covers the scheduler contract:
     working set is never evicted while other slots fault (threaded);
   * budgeted end-to-end — scheduler outputs under an eviction-pressure
     budget still match the full baseline;
-  * hint merging is round-robin-fair across slots.
+  * hint merging is round-robin-fair across slots;
+  * paged-KV lifecycle (DESIGN.md §16.2) — pages freed at retire are
+    reused, failed requests leak no pages, and pool exhaustion is a clean
+    admission rejection.
 """
 
 import threading
@@ -187,6 +190,100 @@ def test_active_slot_pins_survive_other_slots_faults(tmp_path):
     assert tp.residency.max_resident_bytes <= budget
     tp.release(slot_a)
     assert tp.residency.resident_bytes <= budget
+
+
+def test_pages_freed_at_retire_are_reused(app):
+    """Paged-KV lifecycle (DESIGN.md §16.2): every grant returns at
+    retire, the pool's books balance, and freed pages serve the next
+    admission wave (6 requests over 2 slots never need more than 2
+    slots' worth of pages)."""
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 6, seed0=80)
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),)) as server:
+        sched = ContinuousBatchingScheduler(
+            GenerationEngine(server, max_seq=MAX_SEQ), max_batch=2,
+            kv_page_size=4)
+        pool = sched.page_pool
+        per_req = pool.pages_for(PROMPT_LEN + 3)
+        reqs = [sched.submit(p, 3) for p in prompts]
+        sched.run()
+    assert all(r.done and r.error is None for r in reqs)
+    pool.assert_consistent()
+    assert pool.used_pages == 0  # every retire freed its grant
+    assert pool.stats.allocs == 6 and pool.stats.frees == 6
+    # reuse, not growth: peak concurrent pages is two slots' worth
+    assert pool.stats.high_water_pages <= 2 * per_req
+    assert sched.stats.kv_pages_high_water == pool.stats.high_water_pages
+    # the decode accounting ran and the paged number is the smaller one
+    assert 0 < sched.stats.kv_tokens_paged <= sched.stats.kv_tokens_dense
+
+
+def test_failed_requests_leak_no_pages(app):
+    """Both failure paths return the grant: a prefill that raises frees
+    before the slot is reused, and a decode-step failure frees every
+    active slot's pages."""
+    cfg, model, res, outdir = app
+    prompts = _prompts(cfg, 2, seed0=90)
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),)) as server:
+        eng = GenerationEngine(server, max_seq=MAX_SEQ)
+        sched = ContinuousBatchingScheduler(eng, max_batch=2)
+        pool = sched.page_pool
+
+        # prefill failure: admission grants pages, then prefill raises
+        real_prefill = eng.prefill_step
+        def boom(*a, **kw):
+            raise RuntimeError("injected prefill fault")
+        eng.prefill_step = boom
+        r1 = sched.submit(prompts[0], 3)
+        sched.run()
+        assert r1.done and "prefill failed" in r1.error
+        pool.assert_consistent()
+        assert pool.used_pages == 0
+        eng.prefill_step = real_prefill
+
+        # decode failure: requests admit fine, then the step raises
+        real_decode = eng.decode_once
+        def boom2(*a, **kw):
+            raise RuntimeError("injected decode fault")
+        eng.decode_once = boom2
+        r2 = sched.submit(prompts[1], 3)
+        sched.run()
+        assert r2.done and "decode step failed" in r2.error
+        pool.assert_consistent()
+        assert pool.used_pages == 0
+        eng.decode_once = real_decode
+
+        # the loop survived both: a healthy request still completes
+        r3 = sched.submit(prompts[0], 2)
+        sched.run()
+    assert r3.done and r3.error is None and len(r3.out) == 2
+    assert pool.used_pages == 0
+
+
+def test_page_exhaustion_rejects_cleanly(app):
+    """A pool too small for a request rejects it at admission — slot
+    state untouched, no partial grant — while smaller requests keep
+    being served from the same pool."""
+    cfg, model, res, outdir = app
+    with cold_start(model, outdir, res, mode="after2",
+                    warm_shapes=((1, PROMPT_LEN),)) as server:
+        sched = ContinuousBatchingScheduler(
+            GenerationEngine(server, max_seq=MAX_SEQ), max_batch=2,
+            kv_page_size=4, kv_pages=2)  # 8 positions total
+        pool = sched.page_pool
+        big = sched.submit(_prompts(cfg, 1, seed0=95)[0], 4)  # 6+4 → 3 pages
+        small_prompt = np.asarray([1, 2], np.int32)
+        small = sched.submit(small_prompt, 2)                 # 2+2 → 1 page
+        sched.run()
+    assert big.done and big.error is not None
+    assert "kv page pool exhausted" in big.error and big.out == []
+    assert small.done and small.error is None and len(small.out) == 2
+    assert sched.stats.rejected == 1 and sched.stats.completed == 1
+    pool.assert_consistent()
+    assert pool.used_pages == 0 and pool.stats.exhausted == 1
+    assert all(s is None for s in sched._slots)  # slot state clean
 
 
 def test_merge_hints_round_robin_fair():
