@@ -4,14 +4,108 @@ Measures real wall-clock cold starts on the container — disk read (the
 preparation phase), host→device upload + placeholder allocation and warm-set
 XLA compilation (the loading phase) — for before/after1/after2, n runs
 each, with the paper's Mann-Whitney U + Cohen's d reporting.
+
+A second probe measures **cold-read locality** (DESIGN.md §17.2): a
+traced co-access cluster scattered through the build-order blob is
+compacted into co-access order (raw-frame copy, zero recompressions) and
+warmed from both layouts via coalesced vectored reads — fewer preads and
+lower read latency, with every decoded array asserted identical to the
+pre-compaction artifact.
 """
 
 from __future__ import annotations
 
 import gc
+import os
+import time
+
+import numpy as np
 
 from benchmarks.common import BENCH_ARCHS, csv_row, setup_app, timed_cold_start
+from repro.core import AccessTrace, OptionalStore, retier_artifact
+from repro.core.optional_store import COALESCE_GAP, ReadStats
 from repro.utils.stats import compare
+
+
+def locality_probe(app, *, cluster_max: int = 8, n_reads: int = 3):
+    """Compact ``app``'s artifact under a synthetic co-access trace and
+    measure warming one traced cluster from both layouts.
+
+    The cluster is picked so consecutive members sit more than one
+    coalescing gap apart in the BUILD-ORDER blob (scattered — each costs
+    its own pread); after co-access compaction they are byte-adjacent and
+    warm with one coalesced pread. Returns None when the store is too
+    small to scatter a 4-unit cluster."""
+    src = OptionalStore(os.path.join(app.outdir, "optional.blob"))
+    try:
+        by_off = sorted(src.entries, key=lambda k: src.entries[k].offset)
+        # greedy scatter: each next member starts > COALESCE_GAP past the
+        # previous member's frame end, so the source layout can't coalesce
+        cluster: list[str] = []
+        for k in by_off:
+            if not cluster:
+                cluster.append(k)
+                continue
+            prev = src.entries[cluster[-1]]
+            if src.entries[k].offset - (prev.offset + prev.csize) > COALESCE_GAP:
+                cluster.append(k)
+            if len(cluster) >= cluster_max:
+                break
+        if len(cluster) < 4:
+            return None
+
+        trace = AccessTrace()
+        for a, b in zip(cluster, cluster[1:]):
+            pair = (a, b) if a < b else (b, a)
+            trace.request_pairs[pair] = trace.request_pairs.get(pair, 0) + 4
+        trace.batches = 1
+
+        out_dir = app.outdir.rstrip("/") + "-rq2compact"
+        t0 = time.perf_counter()
+        meta = retier_artifact(app.outdir, app.result.plan,
+                               out_dir=out_dir, trace=trace)
+        compact_s = time.perf_counter() - t0
+
+        dst = OptionalStore(os.path.join(out_dir, "optional.blob"))
+        try:
+            def warm(store):
+                best, arrs, rs = float("inf"), None, None
+                for _ in range(n_reads):
+                    r = ReadStats()
+                    t0 = time.perf_counter()
+                    a = store.fetch_many(cluster, stats=r)
+                    best = min(best, time.perf_counter() - t0)
+                    arrs, rs = a, r
+                return best, arrs, rs
+
+            t_before, arrs_before, rs_before = warm(src)
+            t_after, arrs_after, rs_after = warm(dst)
+
+            # correctness gates: compaction moved frames verbatim, and the
+            # cluster decodes identically from both layouts
+            comp = meta["compaction"]
+            assert comp["recompressed"] == 0, comp
+            assert comp["layout"]["source"] == "coaccess", comp
+            for k in cluster:
+                np.testing.assert_array_equal(arrs_before[k], arrs_after[k])
+            # the locality win itself: the scattered cluster cost one pread
+            # per member; the co-access layout warms it with one pread
+            assert rs_after.preads < rs_before.preads, (rs_before, rs_after)
+            return {
+                "cluster_units": len(cluster),
+                "preads_before": rs_before.preads,
+                "preads_after": rs_after.preads,
+                "coalesced_bytes_after": rs_after.coalesced_bytes,
+                "read_ms_before": t_before * 1e3,
+                "read_ms_after": t_after * 1e3,
+                "raw_copied": comp["raw_copied"],
+                "recompressed": comp["recompressed"],
+                "compact_s": compact_s,
+            }
+        finally:
+            dst.close()
+    finally:
+        src.close()
 
 
 def run(base_dir: str, archs=BENCH_ARCHS, n_runs: int = 5, compile_warm: bool = True) -> list[dict]:
@@ -48,6 +142,7 @@ def run(base_dir: str, archs=BENCH_ARCHS, n_runs: int = 5, compile_warm: bool = 
                 "p_value": cmp_total.p_value,
                 "effect": cmp_total.effect_size,
                 "effect_label": cmp_total.effect_label,
+                "locality": locality_probe(app),
             }
         )
     return rows
@@ -63,6 +158,22 @@ def main(base_dir: str, n_runs: int = 5, archs=None, compile_warm: bool = True) 
             f"before={r['total_before_ms']:.0f}ms|after2={r['total_after2_ms']:.0f}ms"
             f"|cut={r['total_reduction_pct']:.1f}%|read_cut={r['read_reduction_pct']:.1f}%"
             f"|p={r['p_value']:.4f}|d={r['effect']:.2f}({r['effect_label']})",
+        ))
+    for r in rows:
+        loc = r["locality"]
+        if loc is None:
+            out.append(csv_row(f"rq2_cold/locality/{r['arch']}", 0.0,
+                               "skipped: store too small to scatter a cluster"))
+            continue
+        out.append(csv_row(
+            f"rq2_cold/locality/{r['arch']}",
+            loc["read_ms_after"] * 1e3,
+            f"cluster={loc['cluster_units']}"
+            f"|preads {loc['preads_before']}->{loc['preads_after']}"
+            f"|read_ms {loc['read_ms_before']:.2f}->{loc['read_ms_after']:.2f}"
+            f"|coalesced={loc['coalesced_bytes_after']}B"
+            f"|raw_copied={loc['raw_copied']} recompressed={loc['recompressed']}"
+            f"|compact_s={loc['compact_s']:.3f}|outputs=identical",
         ))
     mean_cut = sum(r["total_reduction_pct"] for r in rows) / len(rows)
     out.append(csv_row("rq2_cold/mean", 0.0, f"total_cut={mean_cut:.1f}%"))

@@ -24,7 +24,16 @@ from repro.core.on_demand import (
     TieredParams,
     placeholder_tree,
 )
-from repro.core.optional_store import OptionalStore, OptionalStoreWriter, write_store
+from repro.core.optional_store import (
+    CorruptFrameError,
+    OptionalStore,
+    OptionalStoreWriter,
+    ReadStats,
+    StoreError,
+    StoreSkewError,
+    TornFrameError,
+    write_store,
+)
 from repro.core.prefetch import Prefetcher, PrefetchStats, TransitionPredictor
 from repro.core.param_graph import ReachabilityReport, build_reachability, entry_param_liveness
 from repro.core.partition import TierDecision, TierPlan, Unit, build_tier_plan
@@ -32,6 +41,7 @@ from repro.core.retier import (
     RetierReport,
     apply_overlay,
     check_tier0_superset,
+    coaccess_order,
     replan_from_trace,
     required_tier0,
     residency_overlay,
@@ -86,6 +96,12 @@ __all__ = [
     "OptionalStore",
     "OptionalStoreWriter",
     "write_store",
+    "StoreError",
+    "TornFrameError",
+    "CorruptFrameError",
+    "StoreSkewError",
+    "ReadStats",
+    "coaccess_order",
     "ReachabilityReport",
     "build_reachability",
     "entry_param_liveness",

@@ -12,26 +12,93 @@ Design points carried over from the paper:
   * the store is immutable after build (writes go through a temp+rename so
     a crashed build never corrupts a serveable artifact).
 
-Beyond-paper: bf16 weight entries are byte-planed (high/low byte planes
-stored separately) before compression — exponent bytes compress far better
-than interleaved high/low pairs, typically 1.3-2× better ratios on real
-weight tensors at negligible cost.
+Beyond-paper (DESIGN.md §17):
+  * bf16 weight entries are byte-planed (high/low byte planes stored
+    separately) before compression — exponent bytes compress far better
+    than interleaved high/low pairs, typically 1.3-2× better ratios on
+    real weight tensors at negligible cost;
+  * ``add_raw`` copies a compressed frame verbatim between stores, so
+    compaction (``core/retier.py``) never pays decode+recompress for a
+    unit it merely moves — its cost approaches pure sequential IO;
+  * ``read_raw_many`` coalesces manifest-adjacent frames into single
+    vectored preads (gap-bounded), so a co-access-ordered blob warms a
+    whole cluster with one read;
+  * every IO/decode failure is a typed ``StoreError`` naming the unit
+    key — a torn frame, a corrupt zlib stream, or a blob/manifest skew
+    can never surface as garbage bytes in a served tensor;
+  * manifest v2 records the blob's committed length (+ crc32) so a crash
+    between the blob rename and the manifest rename — the writer's two
+    commit points — is detected at the next open, not at first read.
 """
 
 from __future__ import annotations
 
 import json
 import os
-import struct
 import threading
 import zlib
 from dataclasses import dataclass
-from typing import Any, Callable, Iterable, Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
 MAGIC = b"FLT1"
+MANIFEST_VERSION = 2
 _CODECS = ("raw", "zlib", "zlib-bp")  # bp = byte-planed
+
+# default max gap (bytes) between two manifest frames that one vectored
+# pread may still bridge: one page — reading a page-sized hole is cheaper
+# than a second syscall + seek, and anything already adjacent after a
+# co-access compaction coalesces for free. 0 disables coalescing.
+COALESCE_GAP = 4096
+
+
+class StoreError(Exception):
+    """Base for every optional-store integrity failure. Always names the
+    store path and, where one is involved, the unit key — the serving
+    layer's contract is typed failure, never silently-garbage bytes."""
+
+    def __init__(self, msg: str, *, key: Optional[str] = None,
+                 path: Optional[str] = None):
+        self.key = key
+        self.path = path
+        where = f" (unit {key!r})" if key else ""
+        src = f" [{path}]" if path else ""
+        super().__init__(f"{msg}{where}{src}")
+
+
+class TornFrameError(StoreError):
+    """A frame read came back short: the blob ends (or the manifest points)
+    before ``offset + csize`` — a truncated or torn write."""
+
+
+class CorruptFrameError(StoreError):
+    """A frame's bytes don't decode: corrupt zlib stream, or the decoded
+    size disagrees with the manifest's ``rsize``."""
+
+
+class StoreSkewError(StoreError):
+    """The blob and the manifest disagree (length/checksum): a crash landed
+    between the writer's two commit renames, or the files were mixed from
+    different builds."""
+
+
+@dataclass
+class ReadStats:
+    """Per-call (or cumulative) vectored-read accounting: how many preads
+    were issued for how many frames, and how many payload bytes arrived
+    through multi-frame (coalesced) reads vs. were over-read as gap."""
+
+    preads: int = 0           # pread syscalls issued
+    frames: int = 0           # manifest frames delivered
+    coalesced_bytes: int = 0  # payload bytes delivered by multi-frame preads
+    gap_bytes: int = 0        # interstitial bytes read and discarded
+
+    def add(self, other: "ReadStats") -> None:
+        self.preads += other.preads
+        self.frames += other.frames
+        self.coalesced_bytes += other.coalesced_bytes
+        self.gap_bytes += other.gap_bytes
 
 
 def _encode(arr: np.ndarray, level: int) -> tuple[bytes, str]:
@@ -91,47 +158,93 @@ class StoreEntry:
 
 class OptionalStoreWriter:
     """Streaming writer: units are appended one at a time so building the
-    store never holds more than one unit in memory."""
+    store never holds more than one unit in memory.
 
-    def __init__(self, path: str, *, level: int = 6):
+    ``add`` encodes a host array; ``add_raw`` copies an already-compressed
+    frame verbatim from another store (the compaction fast path, DESIGN.md
+    §17.1 — the frame is *moved*, never decoded). ``layout`` is recorded
+    in the manifest so a reader can tell a co-access-ordered blob from a
+    build-order one.
+
+    Commit order: blob rename first, then manifest rename. The window
+    between the two is crash-detectable, not crash-safe — the manifest
+    records the blob's committed length and crc32, and ``OptionalStore``
+    refuses to open a store whose blob length disagrees with its manifest
+    (``StoreSkewError``; tests/test_commit_crash.py).
+    """
+
+    def __init__(self, path: str, *, level: int = 6, layout: Optional[dict] = None):
         self.path = path
         self.level = level
+        self.layout = dict(layout) if layout else {"source": "build-order"}
+        self.manifest: Optional[dict] = None  # set by close(); public result
         self._tmp = path + ".partial"
         self._f = open(self._tmp, "wb")
         self._f.write(MAGIC)
         self._offset = len(MAGIC)
+        self._crc = zlib.crc32(MAGIC)
         self._manifest: dict[str, dict] = {}
 
-    def add(self, key: str, arr: np.ndarray) -> None:
+    def _append(self, key: str, buf: bytes, *, rsize: int, shape, dtype: str,
+                codec: str) -> None:
         if key in self._manifest:
             raise KeyError(f"duplicate unit key {key!r}")
-        buf, codec = _encode(arr, self.level)
         self._f.write(buf)
+        self._crc = zlib.crc32(buf, self._crc)
         self._manifest[key] = dict(
             offset=self._offset,
             csize=len(buf),
-            rsize=arr.nbytes,
-            shape=list(arr.shape),
-            dtype=_dtype_str(arr.dtype),
+            rsize=rsize,
+            shape=list(shape),
+            dtype=dtype,
             codec=codec,
         )
         self._offset += len(buf)
 
+    def add(self, key: str, arr: np.ndarray) -> None:
+        buf, codec = _encode(arr, self.level)
+        self._append(key, buf, rsize=arr.nbytes, shape=arr.shape,
+                     dtype=_dtype_str(arr.dtype), codec=codec)
+
+    def add_raw(self, key: str, buf: bytes, entry: StoreEntry) -> None:
+        """Append one compressed frame verbatim (no decode, no recompress):
+        ``buf`` is the exact frame bytes read from a source store and
+        ``entry`` that store's manifest entry for it. The new manifest
+        entry keeps csize/rsize/shape/dtype/codec and gets this blob's
+        offset — byte-identical frames, new layout (the compaction copy
+        rule, DESIGN.md §17.1)."""
+        if len(buf) != entry.csize:
+            raise TornFrameError(
+                f"raw frame is {len(buf)} bytes, manifest says {entry.csize}",
+                key=key, path=self.path)
+        self._append(key, buf, rsize=entry.rsize, shape=entry.shape,
+                     dtype=entry.dtype, codec=entry.codec)
+
     def close(self) -> dict:
         self._f.close()
-        os.replace(self._tmp, self.path)  # atomic commit
+        os.replace(self._tmp, self.path)  # commit 1: blob visible
         man_path = self.path + ".manifest.json"
         tmp = man_path + ".partial"
+        doc = {
+            "version": MANIFEST_VERSION,
+            "blob_len": self._offset,
+            "blob_crc32": self._crc & 0xFFFFFFFF,
+            "layout": self.layout,
+            "entries": self._manifest,
+        }
         with open(tmp, "w") as f:
-            json.dump({"version": 1, "entries": self._manifest}, f)
-        os.replace(tmp, man_path)
-        return self._manifest
+            json.dump(doc, f)
+        os.replace(tmp, man_path)  # commit 2: manifest names the new blob
+        self.manifest = self._manifest
+        return self.manifest
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
         if exc[0] is None:
+            # propagate the close-result onto the public field so callers
+            # (write_store) never reach into ``_manifest``
             self.close()
         else:
             self._f.close()
@@ -146,12 +259,29 @@ class OptionalStore:
     prefetcher's reader thread (DESIGN.md §8) share one handle, so byte
     reads go through ``os.pread`` (positioned, no shared seek cursor) with
     a locked seek+read fallback for platforms without ``pread``.
+
+    Integrity (DESIGN.md §17.4): a v2 manifest records the committed blob
+    length — a mismatch at open raises ``StoreSkewError`` (a crash between
+    the writer's blob and manifest renames, or mixed files). Every frame
+    read is length-checked (``TornFrameError``) and every decode failure
+    is a ``CorruptFrameError`` naming the unit key.
     """
 
     def __init__(self, path: str):
         self.path = path
-        with open(path + ".manifest.json") as f:
-            man = json.load(f)
+        try:
+            with open(path + ".manifest.json") as f:
+                man = json.load(f)
+        except (json.JSONDecodeError, FileNotFoundError) as e:
+            raise StoreSkewError(
+                f"manifest unreadable: {e}", path=path) from e
+        self.version = man.get("version", 1)
+        if self.version not in (1, MANIFEST_VERSION):
+            raise StoreError(
+                f"unsupported manifest version {self.version!r}", path=path)
+        self.layout: dict = man.get("layout") or {"source": "build-order"}
+        self.blob_len: Optional[int] = man.get("blob_len")
+        self.blob_crc32: Optional[int] = man.get("blob_crc32")
         self.entries: dict[str, StoreEntry] = {
             k: StoreEntry(
                 offset=v["offset"], csize=v["csize"], rsize=v["rsize"],
@@ -162,8 +292,19 @@ class OptionalStore:
         self._f = open(path, "rb")
         self._read_lock = threading.Lock()
         self._pread = getattr(os, "pread", None)
+        self.read_stats = ReadStats()  # cumulative, updated under _read_lock
+        if self.blob_len is not None:
+            actual = os.fstat(self._f.fileno()).st_size
+            if actual != self.blob_len:
+                self._f.close()
+                raise StoreSkewError(
+                    f"blob is {actual} bytes but the manifest committed "
+                    f"{self.blob_len} — blob and manifest are from different "
+                    f"builds (crash between the two commit renames?)",
+                    path=path)
         if self._f.read(len(MAGIC)) != MAGIC:
-            raise ValueError(f"{path}: bad magic — not an optional store")
+            self._f.close()
+            raise StoreError("bad magic — not an optional store", path=path)
 
     def __contains__(self, key: str) -> bool:
         return key in self.entries
@@ -179,19 +320,136 @@ class OptionalStore:
     def raw_bytes(self) -> int:
         return sum(e.rsize for e in self.entries.values())
 
-    def read_raw(self, key: str) -> bytes:
-        """Positioned read of one unit's compressed frame (thread-safe)."""
-        e = self.entries[key]
+    def verify(self) -> None:
+        """Full-blob crc32 check against the manifest (v2 only; an
+        explicit integrity pass — too expensive for every open)."""
+        if self.blob_crc32 is None:
+            return
+        crc = 0
+        pos = 0
+        while True:
+            chunk = self._pread_span(pos, 1 << 20)
+            if not chunk:
+                break
+            crc = zlib.crc32(chunk, crc)
+            pos += len(chunk)
+        if crc & 0xFFFFFFFF != self.blob_crc32:
+            raise StoreSkewError(
+                f"blob crc32 {crc & 0xFFFFFFFF:#x} != manifest "
+                f"{self.blob_crc32:#x}", path=self.path)
+
+    # -- positioned byte reads ------------------------------------------------
+    def _pread_span(self, offset: int, size: int) -> bytes:
+        """One positioned read of ``size`` bytes at ``offset`` (may come
+        back short at EOF — callers length-check)."""
         if self._pread is not None:
-            return self._pread(self._f.fileno(), e.csize, e.offset)
+            return self._pread(self._f.fileno(), size, offset)
         with self._read_lock:
-            self._f.seek(e.offset)
-            return self._f.read(e.csize)
+            self._f.seek(offset)
+            return self._f.read(size)
+
+    def _count(self, preads: int, frames: int, coalesced: int, gap: int,
+               out: Optional[ReadStats]) -> None:
+        delta = ReadStats(preads, frames, coalesced, gap)
+        with self._read_lock:
+            self.read_stats.add(delta)
+        if out is not None:
+            out.add(delta)
+
+    def read_raw(self, key: str, *, stats: Optional[ReadStats] = None) -> bytes:
+        """Positioned read of one unit's compressed frame (thread-safe).
+        Short reads — the blob ends before ``offset + csize`` — raise
+        ``TornFrameError`` naming the unit, never return partial bytes."""
+        e = self.entries[key]
+        try:
+            buf = self._pread_span(e.offset, e.csize)
+        except OSError as err:
+            raise TornFrameError(f"frame read failed: {err}",
+                                 key=key, path=self.path) from err
+        if len(buf) != e.csize:
+            raise TornFrameError(
+                f"frame at offset {e.offset} is torn: wanted {e.csize} "
+                f"bytes, blob yielded {len(buf)}", key=key, path=self.path)
+        self._count(1, 1, 0, 0, stats)
+        return buf
+
+    def read_raw_many(
+        self,
+        keys: Iterable[str],
+        *,
+        gap_threshold: int = COALESCE_GAP,
+        stats: Optional[ReadStats] = None,
+    ) -> dict[str, bytes]:
+        """Vectored read of many frames: manifest-adjacent frames (gap
+        between consecutive frames ≤ ``gap_threshold`` bytes) are fetched
+        with ONE pread spanning them, then sliced apart — byte-identical
+        to per-key ``read_raw`` (tests/test_store_faults.py), just fewer
+        syscalls/seeks. ``gap_threshold=0`` disables coalescing entirely
+        (one pread per frame — the degenerate contract the tests pin).
+        Duplicate keys are deduped; key order is irrelevant (frames are
+        read in offset order). Torn frames raise ``TornFrameError`` naming
+        the first affected unit."""
+        ks = list(dict.fromkeys(keys))
+        if not ks:
+            return {}
+        ents = sorted(((k, self.entries[k]) for k in ks),
+                      key=lambda ke: ke[1].offset)
+        # greedy run grouping over the offset-sorted frames
+        runs: list[list[tuple[str, StoreEntry]]] = [[ents[0]]]
+        for k, e in ents[1:]:
+            prev = runs[-1][-1][1]
+            gap = e.offset - (prev.offset + prev.csize)
+            if gap_threshold > 0 and 0 <= gap <= gap_threshold:
+                runs[-1].append((k, e))
+            else:
+                runs.append([(k, e)])
+        out: dict[str, bytes] = {}
+        preads = frames = coalesced = gap_bytes = 0
+        for run in runs:
+            start = run[0][1].offset
+            end = run[-1][1].offset + run[-1][1].csize
+            try:
+                span = self._pread_span(start, end - start)
+            except OSError as err:
+                raise TornFrameError(f"frame read failed: {err}",
+                                     key=run[0][0], path=self.path) from err
+            preads += 1
+            payload = 0
+            for k, e in run:
+                rel = e.offset - start
+                buf = span[rel:rel + e.csize]
+                if len(buf) != e.csize:
+                    raise TornFrameError(
+                        f"frame at offset {e.offset} is torn: wanted "
+                        f"{e.csize} bytes, blob yielded {len(buf)}",
+                        key=k, path=self.path)
+                out[k] = buf
+                payload += e.csize
+            frames += len(run)
+            if len(run) > 1:
+                coalesced += payload
+                gap_bytes += (end - start) - payload
+        self._count(preads, frames, coalesced, gap_bytes,
+                    stats)
+        return out
 
     def decode(self, key: str, buf: bytes) -> np.ndarray:
-        """Decompress one unit's frame (CPU-bound; safe off the lock)."""
+        """Decompress one unit's frame (CPU-bound; safe off the lock).
+        Corruption — an undecodable zlib stream, or decoded bytes that
+        disagree with the manifest's rsize/shape — raises
+        ``CorruptFrameError`` naming the unit, never returns garbage."""
         e = self.entries[key]
-        return _decode(buf, e.codec, e.shape, _np_dtype(e.dtype))
+        try:
+            arr = _decode(buf, e.codec, e.shape, _np_dtype(e.dtype))
+        except (zlib.error, ValueError) as err:
+            raise CorruptFrameError(
+                f"frame does not decode ({err})", key=key, path=self.path
+            ) from err
+        if arr.nbytes != e.rsize:
+            raise CorruptFrameError(
+                f"decoded {arr.nbytes} bytes, manifest says {e.rsize}",
+                key=key, path=self.path)
+        return arr
 
     def fetch(self, key: str) -> np.ndarray:
         return self.decode(key, self.read_raw(key))
@@ -199,17 +457,30 @@ class OptionalStore:
     def unit_nbytes(self, key: str) -> int:
         return self.entries[key].rsize
 
-    def fetch_many(self, keys: Iterable[str]) -> dict[str, np.ndarray]:
-        # sort by offset: sequential reads, one pass over the file region
-        ks = sorted(keys, key=lambda k: self.entries[k].offset)
-        return {k: self.fetch(k) for k in ks}
+    def fetch_many(
+        self,
+        keys: Iterable[str],
+        *,
+        gap_threshold: int = COALESCE_GAP,
+        stats: Optional[ReadStats] = None,
+    ) -> dict[str, np.ndarray]:
+        """Vectored fetch: one read pass over the file region (coalesced
+        preads via ``read_raw_many``), then per-frame decode. Returned in
+        offset order, as before."""
+        bufs = self.read_raw_many(keys, gap_threshold=gap_threshold,
+                                  stats=stats)
+        ks = sorted(bufs, key=lambda k: self.entries[k].offset)
+        return {k: self.decode(k, bufs[k]) for k in ks}
 
     def close(self) -> None:
         self._f.close()
 
 
-def write_store(path: str, units: Iterable[tuple[str, np.ndarray]], *, level: int = 6) -> dict:
-    with OptionalStoreWriter(path, level=level) as w:
+def write_store(path: str, units: Iterable[tuple[str, np.ndarray]], *,
+                level: int = 6, layout: Optional[dict] = None) -> dict:
+    with OptionalStoreWriter(path, level=level, layout=layout) as w:
         for key, arr in units:
             w.add(key, arr)
-    return w._manifest
+    # __exit__ ran close(); its result lives on the public field
+    assert w.manifest is not None
+    return w.manifest

@@ -46,6 +46,7 @@ from typing import Iterable, Optional
 import numpy as np
 
 from repro.core.on_demand import TieredParams
+from repro.core.optional_store import COALESCE_GAP, ReadStats, StoreError
 
 
 def merge_hints(*hint_lists: Iterable[str]) -> list[str]:
@@ -264,6 +265,9 @@ class PrefetchStats:
     errors: int = 0
     observed: int = 0          # demand-accessed keys fed to observe()
     predicted: int = 0         # predictor-expanded hints accepted for loading
+    preads_issued: int = 0     # pread syscalls the reader thread issued
+    frames_fetched: int = 0    # store frames those reads delivered
+    coalesced_bytes: int = 0   # payload bytes arriving via multi-frame preads
 
     def to_dict(self) -> dict:
         return {
@@ -277,6 +281,9 @@ class PrefetchStats:
             "errors": self.errors,
             "observed": self.observed,
             "predicted": self.predicted,
+            "preads_issued": self.preads_issued,
+            "frames_fetched": self.frames_fetched,
+            "coalesced_bytes": self.coalesced_bytes,
         }
 
 
@@ -298,11 +305,13 @@ class Prefetcher:
         queue_depth: int = 2,
         name: str = "prefetch",
         predictor: Optional[TransitionPredictor] = None,
+        read_gap_bytes: int = COALESCE_GAP,
     ):
         if tiered.store is None:
             raise ValueError("prefetcher needs a TieredParams with an optional store")
         self.tiered = tiered
         self.batch_units = max(1, batch_units)
+        self.read_gap_bytes = read_gap_bytes  # pread coalescing gap (0 = off)
         self.predictor = predictor
         self._obs_prev: list[str] = []  # last observe() batch (2nd-order ctx)
         self.stats = PrefetchStats()
@@ -444,16 +453,45 @@ class Prefetcher:
             if not claimed:
                 continue
             stage = _Stage()
-            for key in sorted(claimed, key=lambda k: store.entries[k].offset):
+            ordered = sorted(claimed, key=lambda k: store.entries[k].offset)
+            # one vectored pass for the whole batch: manifest-adjacent
+            # frames coalesce into single preads (DESIGN.md §17.2). A
+            # failing batch read falls back to per-key reads so one torn
+            # frame aborts one key, not the whole batch.
+            bufs: dict = {}
+            rs = ReadStats()
+            try:
+                t_read0 = time.perf_counter()
+                bufs = store.read_raw_many(
+                    ordered, gap_threshold=self.read_gap_bytes, stats=rs)
+                t_read = time.perf_counter() - t_read0
+            except StoreError:
+                bufs, t_read = {}, 0.0
+            self.stats.preads_issued += rs.preads
+            self.stats.frames_fetched += rs.frames
+            self.stats.coalesced_bytes += rs.coalesced_bytes
+            total_csize = sum(store.entries[k].csize for k in ordered) or 1
+            for key in ordered:
                 if self._stop.is_set():
                     self.tiered.abort_prefetch(key)
                     self._done(1)
                     continue
                 try:
                     t0 = time.perf_counter()
-                    buf = store.read_raw(key)
+                    if key in bufs:
+                        buf = bufs[key]
+                        # amortize the batch read csize-proportionally so
+                        # per-key fetch_s still sums to wall time spent
+                        t_io = t_read * (store.entries[key].csize / total_csize)
+                    else:
+                        t_io = 0.0
+                        rs2 = ReadStats()
+                        buf = store.read_raw(key, stats=rs2)
+                        self.stats.preads_issued += rs2.preads
+                        self.stats.frames_fetched += rs2.frames
                     arr = store.decode(key, buf)
-                    stage.items.append((key, arr, time.perf_counter() - t0))
+                    stage.items.append(
+                        (key, arr, t_io + time.perf_counter() - t0))
                 except Exception:
                     self.stats.errors += 1
                     self.tiered.abort_prefetch(key)

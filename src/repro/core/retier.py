@@ -35,6 +35,13 @@ by moving bytes between the tier-0 bundle and the optional store, and
 publishes it with the checkpoint layer's rename-commit
 (``checkpoint.manager.commit_dir``) so a crash mid-rewrite never leaves a
 torn half-artifact where a server might cold-start from it.
+
+Compaction is IO-bound, not CPU-bound (DESIGN.md §17): a tier-1 unit that
+stays tier-1 has its compressed frame copied VERBATIM between stores
+(``OptionalStoreWriter.add_raw`` — zero decode, zero recompress; decode
+happens only for actual tier moves), and the rewritten blob is laid out
+in the trace's observed co-access order (``coaccess_order`` over the
+§11.1 request_pairs) so one sequential read warms a whole cluster.
 """
 
 from __future__ import annotations
@@ -239,6 +246,45 @@ def apply_overlay(plan: TierPlan, overlay: dict[str, list[str]]) -> TierPlan:
     )
 
 
+def coaccess_order(keys: list, pairs: dict) -> list:
+    """Order unit keys by observed co-access: greedy cluster chaining over
+    the trace's §11.1 pair counts (``request_pairs`` preferred — per-request
+    attribution is coincidence-free; batch ``pairs`` as fallback).
+
+    Pairs are taken strongest-first; each pair merges the two keys'
+    clusters (appending one chain onto the other) unless they already
+    share one. Deterministic: ties break on the sorted (a, b) key pair,
+    clusters are emitted by first appearance scanning ``sorted(keys)``,
+    and keys with no co-access signal keep their sorted order at the end
+    of their own singleton cluster. A key's cluster-internal order is the
+    chain order the merges produced, so the strongest pairs end up
+    byte-adjacent in the blob (tests/test_store_faults.py pins this)."""
+    keys = list(keys)
+    keyset = set(keys)
+    cluster_of: dict = {k: [k] for k in keys}
+    ranked = sorted(
+        ((count, a, b) for (a, b), count in pairs.items()
+         if a in keyset and b in keyset and count > 0),
+        key=lambda t: (-t[0], t[1], t[2]),
+    )
+    for _, a, b in ranked:
+        ca, cb = cluster_of[a], cluster_of[b]
+        if ca is cb:
+            continue
+        ca.extend(cb)
+        for k in cb:
+            cluster_of[k] = ca
+    out: list = []
+    seen: set = set()
+    for k in sorted(keys):
+        c = cluster_of[k]
+        if id(c) in seen:
+            continue
+        seen.add(id(c))
+        out.extend(c)
+    return out
+
+
 def retier_artifact(
     artifact_dir: str,
     plan: TierPlan,
@@ -246,6 +292,7 @@ def retier_artifact(
     out_dir: Optional[str] = None,
     report: Optional[RetierReport] = None,
     compress_level: int = 6,
+    trace: Optional[AccessTrace] = None,
 ) -> dict:
     """Materialize a replanned two-tier artifact from an existing one.
 
@@ -258,6 +305,13 @@ def retier_artifact(
     rename-commit (``checkpoint.manager.commit_dir``); ``out_dir`` must
     differ from ``artifact_dir`` because the rewrite streams from the old
     files while writing the new ones. Returns the new artifact.json meta.
+
+    Units staying tier-1 are copied as raw compressed frames (byte-
+    identical to the source store; zero recompressions for an unchanged
+    plan — counter-asserted in tests). With a ``trace``, the blob is laid
+    out in co-access order (``coaccess_order``); the manifest records the
+    layout source and the meta a ``compaction`` block with the raw-copy /
+    recompress split (DESIGN.md §17.1 and §17.2).
     """
     out_dir = out_dir if out_dir is not None else artifact_dir.rstrip("/") + "-retier"
     if os.path.abspath(out_dir) == os.path.abspath(artifact_dir):
@@ -291,22 +345,49 @@ def retier_artifact(
                 )
         tsl.write_bundle(os.path.join(tmp, "tier0"), tier0)
 
+        # tier-1 write order: co-access clusters from the trace when one is
+        # provided (so one sequential read warms a cluster, §17.2), else the
+        # source store's offset order (preserves an earlier compaction's
+        # layout instead of resetting to plan order)
+        unit_src: dict[str, str] = {}  # key -> owning leaf path
+        for path, dec in plan.decisions.items():
+            if dec.tier != 1:
+                continue
+            for unit in dec.units:
+                unit_src[unit.key] = path
+        t1_keys = sorted(
+            unit_src,
+            key=lambda k: store.entries[k].offset if k in store.entries else -1,
+        )
+        layout = {"source": "source-order"}
+        if trace is not None:
+            pairs = trace.request_pairs or trace.pairs
+            if pairs:
+                t1_keys = coaccess_order(t1_keys, pairs)
+                layout = {"source": "coaccess",
+                          "pairs": "request" if trace.request_pairs else "batch"}
+
+        raw_copied = 0
+        recompressed = 0
         with OptionalStoreWriter(
-            os.path.join(tmp, "optional.blob"), level=compress_level
+            os.path.join(tmp, "optional.blob"), level=compress_level,
+            layout=layout,
         ) as w:
-            for path, dec in plan.decisions.items():
-                if dec.tier != 1:
-                    continue
-                for unit in dec.units:
-                    if unit.key in store.entries:
-                        w.add(unit.key, store.fetch(unit.key))
-                    elif path in old_tier0:  # demoted whole leaf
-                        w.add(unit.key, np.asarray(old_tier0[path]))
-                    else:
-                        raise KeyError(
-                            f"tier-1 unit {unit.key!r} found in neither the "
-                            f"optional store nor the old tier-0 bundle"
-                        )
+            for key in t1_keys:
+                path = unit_src[key]
+                if key in store.entries:
+                    # stays tier-1: move the compressed frame verbatim —
+                    # no decode, no recompress (the §17.1 copy rule)
+                    w.add_raw(key, store.read_raw(key), store.entries[key])
+                    raw_copied += 1
+                elif path in old_tier0:  # demoted whole leaf
+                    w.add(key, np.asarray(old_tier0[path]))
+                    recompressed += 1
+                else:
+                    raise KeyError(
+                        f"tier-1 unit {key!r} found in neither the "
+                        f"optional store nor the old tier-0 bundle"
+                    )
 
         new_store = OptionalStore(os.path.join(tmp, "optional.blob"))
         meta = {
@@ -316,6 +397,11 @@ def retier_artifact(
             "tier1_raw_bytes": new_store.raw_bytes,
             "tier1_compressed_bytes": new_store.compressed_bytes,
             "retier": report.summary() if report is not None else {},
+            "compaction": {
+                "layout": layout,
+                "raw_copied": raw_copied,
+                "recompressed": recompressed,
+            },
             "decisions": {
                 p: {
                     "tier": d.tier,

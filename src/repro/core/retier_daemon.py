@@ -80,7 +80,11 @@ class RetierDaemonStats:
     evicted_bytes: int = 0
     preload_bytes: int = 0      # synchronous (no-prefetcher) preload traffic
     predictor_refreshes: int = 0
-    compactions: int = 0        # periodic artifact rewrites
+    compactions: int = 0        # periodic artifact rewrites (completed)
+    compact_errors: int = 0     # background compactions that failed (absorbed)
+    compact_skipped_inflight: int = 0  # cadence hits while one was running
+    compact_wall_s: float = 0.0  # total worker-thread compaction wall time
+    max_tick_s: float = 0.0     # slowest tick observed — the serve-path cost
     pulls: int = 0              # fleet window pulls (DESIGN.md §14.1)
     remote_applies: int = 0     # fleet plans applied via apply_plan()
 
@@ -144,7 +148,14 @@ class RetierDaemon:
         self.stats = RetierDaemonStats()
         self.last_report: Optional[RetierReport] = None
         self.last_error: str = ""
+        self.last_compaction: Optional[dict] = None  # meta of the last rewrite
+        self.last_compact_error: str = ""
         self._lock = threading.Lock()
+        # compaction worker state lives behind its OWN lock so the worker
+        # thread never contends with (or deadlocks against) a serving tick
+        # holding self._lock (DESIGN.md §17.3)
+        self._compact_lock = threading.Lock()
+        self._compact_thread: Optional[threading.Thread] = None
         self._merged: Optional[AccessTrace] = None
         self._unpulled: Optional[AccessTrace] = None  # accumulated for the fleet
         self._steps_since = 0
@@ -185,12 +196,18 @@ class RetierDaemon:
             return self._tick_absorbed()
 
     def _tick_absorbed(self) -> Optional[RetierReport]:
+        t0 = time.monotonic()
         try:
             return self._tick_locked()
         except Exception as e:  # degrade, don't kill the serving loop
             self.stats.errors += 1
             self.last_error = repr(e)
             return None
+        finally:
+            # the serve-path cost of a tick — with compaction off-thread
+            # (§17.3) this stays flat even while an artifact rewrites
+            self.stats.max_tick_s = max(
+                self.stats.max_tick_s, time.monotonic() - t0)
 
     @property
     def merged_trace(self) -> Optional[AccessTrace]:
@@ -404,18 +421,77 @@ class RetierDaemon:
                 self.stats.predictor_refreshes += 1
 
         if self.compact_every and self.stats.applies % self.compact_every == 0:
-            self.compact()
+            self._compact_async()
         return len(promote), len(demote)
+
+    # -- background compaction (DESIGN.md §17.3) ---------------------------------
+    def _compact_async(self) -> bool:
+        """Kick one artifact rewrite on a worker thread. Serve-path guard:
+        at most one in flight — a cadence hit while one runs is counted
+        and dropped, never queued (the next cadence hit retries with a
+        fresher plan anyway). The tick returns immediately; failures land
+        in ``stats.compact_errors``/``last_compact_error`` exactly as tick
+        failures land in ``stats.errors``. Called under ``self._lock``."""
+        with self._compact_lock:
+            if self._compact_thread is not None and self._compact_thread.is_alive():
+                self.stats.compact_skipped_inflight += 1
+                return False
+            # snapshot plan/report/trace NOW, under the tick lock — the live
+            # plan may change while the worker writes, and the rewrite must
+            # be a consistent point-in-time artifact
+            plan, rep, trace = self.tiered.plan, self.last_report, self._merged
+            t = threading.Thread(
+                target=self._compact_bg, args=(plan, rep, trace),
+                name="retier-compact", daemon=True,
+            )
+            self._compact_thread = t
+            t.start()
+            return True
+
+    def _compact_bg(self, plan, report, trace) -> None:
+        t0 = time.monotonic()
+        try:
+            out = self.compact_out_dir or self.artifact_dir.rstrip("/") + "-compact"
+            meta = retier_artifact(
+                self.artifact_dir, plan, out_dir=out, report=report, trace=trace
+            )
+            with self._compact_lock:
+                self.stats.compactions += 1
+                self.last_compaction = meta
+        except Exception as e:  # absorbed: compaction is bookkeeping (§12.1)
+            with self._compact_lock:
+                self.stats.compact_errors += 1
+                self.last_compact_error = repr(e)
+        finally:
+            with self._compact_lock:
+                self.stats.compact_wall_s += time.monotonic() - t0
+
+    def join_compaction(self, timeout: Optional[float] = None) -> bool:
+        """Wait for an in-flight background compaction (shutdown flushes,
+        tests, benchmarks). Returns True when none is running afterwards."""
+        with self._compact_lock:
+            t = self._compact_thread
+        if t is None:
+            return True
+        t.join(timeout)
+        return not t.is_alive()
 
     def compact(self) -> dict:
         """Rewrite the artifact from the CURRENT live plan so the next cold
-        start boots the adapted hot set. Out-of-place + rename-committed
-        (``retier_artifact``); the running server never re-reads it."""
+        start boots the adapted hot set, synchronously (tests, shutdown
+        flushes — the periodic cadence uses ``_compact_async`` instead).
+        Out-of-place + rename-committed (``retier_artifact``); the running
+        server never re-reads it."""
         if not self.artifact_dir:
             raise ValueError("no artifact_dir configured for compaction")
         out = self.compact_out_dir or self.artifact_dir.rstrip("/") + "-compact"
+        t0 = time.monotonic()
         meta = retier_artifact(
-            self.artifact_dir, self.tiered.plan, out_dir=out, report=self.last_report
+            self.artifact_dir, self.tiered.plan, out_dir=out,
+            report=self.last_report, trace=self._merged,
         )
-        self.stats.compactions += 1
+        with self._compact_lock:
+            self.stats.compactions += 1
+            self.stats.compact_wall_s += time.monotonic() - t0
+            self.last_compaction = meta
         return meta

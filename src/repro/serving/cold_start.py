@@ -132,11 +132,17 @@ class ColdStartServer:
         self._compiled: dict[tuple, Callable] = {}
 
     def close(self) -> None:
-        """Stop the prefetch threads, leave the host pool (if arbitered),
-        and release the store handle."""
+        """Stop the prefetch threads, flush any in-flight background
+        compaction, leave the host pool (if arbitered), and release the
+        store handle."""
         if self.prefetcher is not None:
             self.prefetcher.stop()
             self.prefetcher = None
+        if self.retier_daemon is not None:
+            # a periodic compaction may still be rewriting the artifact on
+            # its worker thread (DESIGN.md §17.3) — let it finish (it reads
+            # the source store through its own handle) before closing up
+            self.retier_daemon.join_compaction(timeout=60.0)
         if self.tiered is not None and self.tiered.arbiter is not None:
             self.tiered.arbiter.unregister(self.tiered.tenant_name)
         if self.store is not None:

@@ -206,3 +206,49 @@ def test_compact_crash_preserves_source_artifact(tmp_path, monkeypatch):
     with open(os.path.join(compact_dir, "artifact.json")) as f:
         assert json.load(f)["decisions"]["emb"]["resident_units"] == [
             "emb#rg2", "emb#rg3"]
+
+
+# ---------------------------------------------------------------------------
+# OptionalStoreWriter: the blob-then-manifest commit ordering inside one store
+# ---------------------------------------------------------------------------
+
+def test_store_crash_between_blob_and_manifest_renames_is_detected(tmp_path):
+    """``OptionalStoreWriter.close()`` has TWO commit points: the blob
+    rename, then the manifest rename. A crash between them leaves a new
+    blob beside the previous build's manifest — undetectable by mtime,
+    catastrophic if served (every offset points into the wrong bytes).
+    The v2 manifest records the committed blob length, so the skew is a
+    typed ``StoreSkewError`` at open (DESIGN.md §17.4), and recovery is
+    re-running the build."""
+    from repro.core.optional_store import StoreSkewError, write_store
+
+    rng = np.random.default_rng(2)
+    units_v1 = [(f"u{i}", rng.standard_normal((16, 8)).astype(np.float32))
+                for i in range(4)]
+    units_v2 = [(f"u{i}", rng.standard_normal((16, 8)).astype(np.float32))
+                for i in range(6)]
+    path = str(tmp_path / "optional.blob")
+    write_store(path, units_v1)
+    with open(path + ".manifest.json", "rb") as f:
+        manifest_v1 = f.read()
+
+    # build v2, then simulate the crash: its blob rename landed (write the
+    # new blob over the old), but the manifest rename never happened
+    path2 = str(tmp_path / "v2.blob")
+    write_store(path2, units_v2)
+    os.replace(path2, path)                       # commit point 1 of build 2
+    with open(path + ".manifest.json", "wb") as f:
+        f.write(manifest_v1)                      # commit point 2: never ran
+
+    with pytest.raises(StoreSkewError, match="different builds"):
+        OptionalStore(path)
+
+    # recovery = re-run the build: both renames land, the store opens and
+    # round-trips the v2 bytes
+    write_store(path, units_v2)
+    store = OptionalStore(path)
+    try:
+        for k, arr in units_v2:
+            np.testing.assert_array_equal(store.fetch(k), arr)
+    finally:
+        store.close()

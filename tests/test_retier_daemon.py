@@ -199,23 +199,74 @@ def test_daemon_cadence_step_and_wallclock_triggers(tmp_path):
         RetierDaemon(tp, reach, decay=1.5)
 
 
-def test_daemon_tick_failure_absorbed_serving_survives(tmp_path):
-    """Re-tiering is bookkeeping: a tick that raises (here: compaction
-    into an unwritable path) must not propagate into the serving loop —
-    it is counted, and later ticks keep working."""
+def test_daemon_compact_failure_absorbed_serving_survives(tmp_path):
+    """Compaction is bookkeeping: a background compaction that raises
+    (here: rewriting from a nonexistent artifact) must not propagate into
+    the serving loop OR fail the tick that kicked it off — it is counted
+    in the compaction-specific error stats, and later ticks keep working
+    (DESIGN.md §17.3)."""
     tp, _, units, reach = _mini(tmp_path)
     daemon = RetierDaemon(tp, reach, interval_steps=1, compact_every=1,
                           artifact_dir=str(tmp_path / "no-such-artifact"))
     tp.ensure([units[0].key])
-    assert daemon.maybe_tick() is None  # compaction raised, absorbed
-    assert daemon.stats.errors == 1 and daemon.last_error
-    # the plan application itself landed before the compaction failure...
+    # the tick succeeds: compaction failure is off-thread, not a tick error
+    assert daemon.maybe_tick() is not None
+    assert daemon.join_compaction(timeout=10.0)
+    assert daemon.stats.compact_errors == 1 and daemon.last_compact_error
+    assert daemon.stats.errors == 0
+    assert daemon.stats.compactions == 0
+    # the plan application itself landed despite the compaction failure...
     assert units[0].key in tp.plan.decisions["emb"].resident_units
     # ...and the daemon keeps serving future windows
     tp.ensure([units[1].key])
     daemon.compact_every = 0  # next tick has nothing left to fail on
     assert daemon.maybe_tick() is not None
-    assert daemon.stats.errors == 1
+    assert daemon.stats.compact_errors == 1
+
+
+def test_compaction_runs_off_thread_and_never_blocks_a_tick(tmp_path, monkeypatch):
+    """The §17.3 serve-path guard: a periodic compaction runs on a worker
+    thread — the tick that triggers it returns while the rewrite is still
+    in progress, a second cadence hit while one is in flight is counted
+    and dropped (at most one in flight, never queued), and the completed
+    rewrite lands in the compaction stats."""
+    import repro.core.retier_daemon as rd_mod
+
+    gate = threading.Event()       # held by the test: the "slow rewrite"
+    started = threading.Event()
+    calls = []
+
+    def slow_retier(artifact_dir, plan, *, out_dir=None, report=None, trace=None):
+        started.set()
+        assert gate.wait(10.0)
+        calls.append(out_dir)
+        return {"fake": True}
+
+    monkeypatch.setattr(rd_mod, "retier_artifact", slow_retier)
+    tp, _, units, reach = _mini(tmp_path)
+    daemon = RetierDaemon(tp, reach, interval_steps=1, compact_every=1,
+                          artifact_dir=str(tmp_path / "mini-artifact"))
+
+    tp.ensure([units[0].key])
+    t0 = time.monotonic()
+    assert daemon.maybe_tick() is not None  # returned...
+    tick_wall = time.monotonic() - t0
+    assert started.wait(10.0)               # ...while the rewrite still runs
+    assert not gate.is_set() and daemon.stats.compactions == 0
+
+    # cadence hit while one is in flight: dropped and counted, not queued
+    tp.ensure([units[1].key])
+    assert daemon.maybe_tick() is not None
+    assert daemon.stats.compact_skipped_inflight == 1
+
+    gate.set()
+    assert daemon.join_compaction(timeout=10.0)
+    assert daemon.stats.compactions == 1 and len(calls) == 1
+    assert daemon.stats.compact_errors == 0
+    assert daemon.last_compaction == {"fake": True}
+    # the serve-path cost of the triggering tick excludes the rewrite wall
+    assert daemon.stats.max_tick_s < 5.0 and tick_wall < 5.0
+    assert daemon.stats.compact_wall_s > 0.0
 
 
 def test_emit_hints_attributes_final_step_then_drops_chain(tmp_path):

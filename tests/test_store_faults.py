@@ -1,0 +1,538 @@
+"""Storage fault-injection tier (DESIGN.md §17.4) + the §17 layout rules.
+
+The optional store is the one component between the disk and a served
+tensor, so its failure modes must be *typed*, not probabilistic:
+
+  * a torn/truncated frame (blob shorter than a manifest offset+csize)
+    raises ``TornFrameError`` naming the unit key;
+  * a corrupted zlib stream (or a decode disagreeing with the manifest's
+    rsize) raises ``CorruptFrameError`` naming the unit key;
+  * a blob/manifest mismatch after a crash between the writer's two
+    commit renames raises ``StoreSkewError`` at OPEN, before any read;
+  * a crash mid-compaction leaves only a ``.partial`` staging dir that
+    ``orphaned_partials`` finds — the source artifact stays serveable.
+
+None of these may ever return garbage bytes into a placeholder tree.
+
+The layout half pins the §17.1-§17.2 contracts: raw-frame compaction
+copies compressed frames byte-identically (zero recompressions for an
+unchanged plan), co-access ordering makes traced clusters byte-adjacent,
+and ``read_raw_many`` coalescing is byte-identical to per-key reads under
+permuted key order, overlapping batches, and a gap threshold of 0 (one
+pread per frame). A ``slow`` hypothesis property round-trips the codec
+over dtype x shape x level, including bf16 byte-planing and level=0 raw.
+"""
+
+import json
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import clean_partials, orphaned_partials
+from repro.core.on_demand import AccessTrace
+from repro.core.optional_store import (
+    COALESCE_GAP,
+    CorruptFrameError,
+    OptionalStore,
+    OptionalStoreWriter,
+    ReadStats,
+    StoreError,
+    StoreSkewError,
+    TornFrameError,
+    write_store,
+)
+from repro.core.retier import coaccess_order, retier_artifact
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+N_UNITS, ROWS, COLS = 8, 16, 32
+
+
+def _units(seed=0, n=N_UNITS):
+    rng = np.random.default_rng(seed)
+    return [(f"emb#rg{g}", rng.standard_normal((ROWS, COLS)).astype(np.float32))
+            for g in range(n)]
+
+
+def _store(tmp_path, name="s.blob", units=None, level=6):
+    path = str(tmp_path / name)
+    write_store(path, units if units is not None else _units(), level=level)
+    return path
+
+
+def _manifest(path):
+    with open(path + ".manifest.json") as f:
+        return json.load(f)
+
+
+def _rewrite_manifest(path, doc):
+    with open(path + ".manifest.json", "w") as f:
+        json.dump(doc, f)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: every failure is typed and names the unit
+# ---------------------------------------------------------------------------
+
+def test_truncated_blob_raises_torn_frame_naming_the_unit(tmp_path):
+    path = _store(tmp_path)
+    store = OptionalStore(path)
+    victim = max(store.entries, key=lambda k: store.entries[k].offset)
+    e = store.entries[victim]
+    store.close()
+    # tear the last frame mid-way AND fix up the manifest's committed
+    # length so the skew check at open doesn't fire first — this is the
+    # "torn write" case, not the "crash between renames" case
+    torn_len = e.offset + e.csize // 2
+    with open(path, "r+b") as f:
+        f.truncate(torn_len)
+    doc = _manifest(path)
+    doc["blob_len"] = torn_len
+    _rewrite_manifest(path, doc)
+
+    store = OptionalStore(path)
+    try:
+        with pytest.raises(TornFrameError) as ei:
+            store.read_raw(victim)
+        assert ei.value.key == victim and victim in str(ei.value)
+        with pytest.raises(TornFrameError):
+            store.read_raw_many([victim])
+        with pytest.raises(TornFrameError):
+            store.fetch(victim)
+        # every OTHER unit still reads fine — the fault is per-frame
+        for k in store.entries:
+            if k != victim:
+                assert store.fetch(k) is not None
+    finally:
+        store.close()
+
+
+def test_manifest_offset_past_eof_is_torn_not_garbage(tmp_path):
+    path = _store(tmp_path)
+    store = OptionalStore(path)
+    victim = sorted(store.entries)[0]
+    store.entries[victim].offset = 10**9  # way past EOF
+    with pytest.raises(TornFrameError) as ei:
+        store.read_raw(victim)
+    assert ei.value.key == victim
+    store.close()
+
+
+def test_corrupt_zlib_stream_raises_corrupt_frame_naming_the_unit(tmp_path):
+    path = _store(tmp_path)
+    man = _manifest(path)
+    victim = sorted(man["entries"])[2]
+    e = man["entries"][victim]
+    with open(path, "r+b") as f:
+        f.seek(e["offset"])
+        frame = bytearray(f.read(e["csize"]))
+        for i in range(min(8, len(frame))):
+            frame[i] ^= 0xFF  # wreck the zlib header + first bytes
+        f.seek(e["offset"])
+        f.write(bytes(frame))
+
+    store = OptionalStore(path)
+    try:
+        with pytest.raises(CorruptFrameError) as ei:
+            store.fetch(victim)
+        assert ei.value.key == victim and victim in str(ei.value)
+        for k in store.entries:  # blast radius: one frame
+            if k != victim:
+                assert store.fetch(k) is not None
+    finally:
+        store.close()
+
+
+def test_rsize_mismatch_raises_corrupt_frame_never_returns_short_array(tmp_path):
+    path = _store(tmp_path)
+    doc = _manifest(path)
+    victim = sorted(doc["entries"])[1]
+    doc["entries"][victim]["rsize"] += 4  # decoded bytes will disagree
+    _rewrite_manifest(path, doc)
+    store = OptionalStore(path)
+    try:
+        with pytest.raises(CorruptFrameError) as ei:
+            store.fetch(victim)
+        assert ei.value.key == victim
+    finally:
+        store.close()
+
+
+def test_blob_manifest_skew_detected_at_open(tmp_path):
+    """The writer commits blob-then-manifest; a crash between the two
+    renames leaves a NEW blob next to the OLD manifest. The old manifest
+    records the old blob's committed length, so the mismatch is caught at
+    open — before any read could hand out misaligned frames."""
+    path = _store(tmp_path, units=_units(seed=1))
+    old_manifest = _manifest(path)
+
+    # simulate the crash: a second build's blob rename lands, then death —
+    # its manifest never replaces the old one
+    path2 = _store(tmp_path, name="next.blob",
+                   units=_units(seed=2, n=N_UNITS + 3))
+    os.replace(path2, path)  # commit 1 of build 2
+    _rewrite_manifest(path, old_manifest)  # commit 2 never happened
+
+    with pytest.raises(StoreSkewError) as ei:
+        OptionalStore(path)
+    assert "manifest" in str(ei.value).lower()
+    # typed under the common base too, so callers can catch one root
+    assert isinstance(ei.value, StoreError)
+
+
+def test_v1_manifest_still_opens_without_skew_check(tmp_path):
+    """Back-compat: a v1 manifest (no blob_len) predates the skew check —
+    it opens and serves; only per-read torn/corrupt detection applies."""
+    path = _store(tmp_path)
+    doc = _manifest(path)
+    _rewrite_manifest(path, {"version": 1, "entries": doc["entries"]})
+    store = OptionalStore(path)
+    try:
+        assert store.version == 1 and store.blob_len is None
+        for k, arr in _units():
+            np.testing.assert_array_equal(store.fetch(k), arr)
+    finally:
+        store.close()
+
+
+def test_crash_mid_compaction_leaves_only_an_orphaned_partial(tmp_path, monkeypatch):
+    """A compaction that dies before its rename-commit leaves the source
+    artifact untouched and serveable, plus exactly one ``.partial``
+    staging dir that ``orphaned_partials`` finds and ``clean_partials``
+    removes (the §10 crash-safety rule applied to the §17 rewrite)."""
+    from repro.core.partition import TierDecision, TierPlan, Unit
+    from repro.core.entrypoints import SERVING_PROFILE
+    from repro.checkpoint import tensorstore_lite as tsl
+    import repro.core.retier as retier_mod
+
+    art = tmp_path / "artifact"
+    art.mkdir()
+    units = _units()
+    nbytes = sum(a.nbytes for _, a in units)
+    us = tuple(Unit(k, "emb", nbytes=a.nbytes) for k, a in units)
+    head = np.ones((4, 4), np.float32)
+    plan = TierPlan(
+        {"head": TierDecision("head", 0, "leaf", "test", head.nbytes),
+         "emb": TierDecision("emb", 1, "rows", "test", nbytes, units=us)},
+        SERVING_PROFILE, [])
+    tsl.write_bundle(str(art / "tier0"), {"head": head})
+    write_store(str(art / "optional.blob"), units)
+    before = open(art / "optional.blob", "rb").read()
+
+    def crash(tmp, out):
+        raise OSError("simulated crash before rename-commit")
+
+    monkeypatch.setattr(retier_mod, "commit_dir", crash)
+    out = str(tmp_path / "artifact-compact")
+    with pytest.raises(OSError, match="simulated crash"):
+        retier_artifact(str(art), plan, out_dir=out)
+
+    assert not os.path.exists(out)  # never half-published
+    orphans = orphaned_partials(str(tmp_path))
+    assert [os.path.basename(o) for o in orphans] == ["artifact-compact.partial"]
+    assert [os.path.basename(p) for p in clean_partials(str(tmp_path))] == \
+        ["artifact-compact.partial"]
+    assert orphaned_partials(str(tmp_path)) == []
+    # the source artifact is byte-for-byte untouched and still opens
+    assert open(art / "optional.blob", "rb").read() == before
+    OptionalStore(str(art / "optional.blob")).close()
+
+
+# ---------------------------------------------------------------------------
+# writer API: public manifest result, raw-copy append
+# ---------------------------------------------------------------------------
+
+def test_close_returns_public_manifest_and_write_store_uses_it(tmp_path):
+    path = str(tmp_path / "w.blob")
+    w = OptionalStoreWriter(path)
+    assert w.manifest is None  # not committed yet
+    w.add("a", np.ones((4, 4), np.float32))
+    returned = w.close()
+    assert returned is w.manifest and "a" in returned
+    man = write_store(str(tmp_path / "w2.blob"), _units())
+    assert set(man) == {k for k, _ in _units()}
+
+
+def test_add_raw_rejects_wrong_length_buffer(tmp_path):
+    src = OptionalStore(_store(tmp_path))
+    key = sorted(src.entries)[0]
+    buf = src.read_raw(key)
+    w = OptionalStoreWriter(str(tmp_path / "out.blob"))
+    with pytest.raises(TornFrameError):
+        w.add_raw(key, buf[:-1], src.entries[key])
+    w.add_raw(key, buf, src.entries[key])
+    w.close()
+    src.close()
+
+
+# ---------------------------------------------------------------------------
+# vectored reads: coalescing is an optimization, never a semantic
+# ---------------------------------------------------------------------------
+
+def test_read_raw_many_byte_identical_under_permutation_and_overlap(tmp_path):
+    store = OptionalStore(_store(tmp_path))
+    try:
+        keys = sorted(store.entries)
+        per_key = {k: store.read_raw(k) for k in keys}
+
+        rng = np.random.default_rng(7)
+        for _ in range(5):  # permuted key order
+            perm = list(rng.permutation(keys))
+            assert store.read_raw_many(perm) == per_key
+        # overlapping batches + duplicate keys within a batch
+        a, b = keys[: 5] + keys[: 2], keys[3:]
+        got = store.read_raw_many(a)
+        got.update(store.read_raw_many(b))
+        assert got == per_key
+        # subset batches at every gap threshold
+        for gap in (0, 1, 64, COALESCE_GAP, 1 << 30):
+            assert store.read_raw_many(keys[2:6], gap_threshold=gap) == {
+                k: per_key[k] for k in keys[2:6]}
+        assert store.read_raw_many([]) == {}
+    finally:
+        store.close()
+
+
+def test_gap_threshold_zero_degenerates_to_one_pread_per_frame(tmp_path):
+    store = OptionalStore(_store(tmp_path))
+    try:
+        keys = sorted(store.entries)
+        rs = ReadStats()
+        store.read_raw_many(keys, gap_threshold=0, stats=rs)
+        assert rs.preads == len(keys) == rs.frames
+        assert rs.coalesced_bytes == 0 and rs.gap_bytes == 0
+        # adjacent frames + a generous gap: ONE pread for the whole batch
+        rs2 = ReadStats()
+        store.read_raw_many(keys, gap_threshold=COALESCE_GAP, stats=rs2)
+        assert rs2.preads == 1 and rs2.frames == len(keys)
+        assert rs2.coalesced_bytes == sum(
+            store.entries[k].csize for k in keys)
+        # cumulative store-level stats saw both calls
+        assert store.read_stats.preads == rs.preads + rs2.preads
+    finally:
+        store.close()
+
+
+def test_fetch_many_decodes_identically_to_fetch(tmp_path):
+    units = _units(seed=3)
+    store = OptionalStore(_store(tmp_path, units=units))
+    try:
+        got = store.fetch_many([k for k, _ in units])
+        for k, arr in units:
+            np.testing.assert_array_equal(got[k], arr)
+            np.testing.assert_array_equal(store.fetch(k), arr)
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# compaction: raw-frame copy + co-access layout
+# ---------------------------------------------------------------------------
+
+def _artifact(tmp_path, units, resident=()):
+    from repro.core.partition import TierDecision, TierPlan, Unit
+    from repro.core.entrypoints import SERVING_PROFILE
+    from repro.checkpoint import tensorstore_lite as tsl
+
+    art = tmp_path / "artifact"
+    art.mkdir(exist_ok=True)
+    us = tuple(Unit(k, "emb", nbytes=a.nbytes) for k, a in units)
+    head = np.ones((4, 4), np.float32)
+    plan = TierPlan(
+        {"head": TierDecision("head", 0, "leaf", "test", head.nbytes),
+         "emb": TierDecision(
+            "emb", 1, "rows", "test", sum(a.nbytes for _, a in units),
+            units=us, resident_units=tuple(resident))},
+        SERVING_PROFILE, [])
+    tsl.write_bundle(str(art / "tier0"), {"head": head})
+    write_store(str(art / "optional.blob"), units)
+    return str(art), plan
+
+
+def test_unchanged_plan_compacts_with_zero_recompressions(tmp_path):
+    """The §17.1 acceptance: every tier-1 unit of an unchanged plan moves
+    as a verbatim raw frame — compressed bytes identical to the source
+    store's, recompression counter at zero."""
+    units = _units(seed=4)
+    art, plan = _artifact(tmp_path, units)
+    out = str(tmp_path / "artifact-compact")
+    meta = retier_artifact(art, plan, out_dir=out)
+
+    assert meta["compaction"]["raw_copied"] == len(units)
+    assert meta["compaction"]["recompressed"] == 0
+
+    src = OptionalStore(os.path.join(art, "optional.blob"))
+    dst = OptionalStore(os.path.join(out, "optional.blob"))
+    try:
+        assert set(src.entries) == set(dst.entries)
+        for k in src.entries:
+            # frame-for-frame byte identity, not just decoded equality
+            assert src.read_raw(k) == dst.read_raw(k)
+            es, ed = src.entries[k], dst.entries[k]
+            assert (es.csize, es.rsize, es.shape, es.dtype, es.codec) == \
+                   (ed.csize, ed.rsize, ed.shape, ed.dtype, ed.codec)
+        for k, arr in units:
+            np.testing.assert_array_equal(dst.fetch(k), arr)
+    finally:
+        src.close()
+        dst.close()
+
+
+def test_coaccess_order_chains_clusters_deterministically():
+    keys = [f"k{i}" for i in range(6)]
+    pairs = {("k0", "k3"): 5, ("k3", "k5"): 4, ("k1", "k2"): 3,
+             ("k0", "k1"): 1}
+    order = coaccess_order(keys, pairs)
+    assert sorted(order) == sorted(keys)
+    # strongest pairs end up chained: k0-k3-k5, then k1-k2 merges on via
+    # the weak (k0,k1) pair; k4 stays a singleton at its sorted position
+    i = {k: j for j, k in enumerate(order)}
+    assert i["k3"] == i["k0"] + 1 and i["k5"] == i["k3"] + 1
+    assert i["k2"] == i["k1"] + 1
+    assert order == coaccess_order(list(reversed(keys)), dict(pairs))
+    # ties break on the sorted key pair, so equal counts are stable too
+    tied = {("a", "b"): 2, ("c", "d"): 2}
+    assert coaccess_order(["d", "c", "b", "a"], tied) == ["a", "b", "c", "d"]
+
+
+def test_compaction_with_trace_lays_out_coaccess_clusters_adjacent(tmp_path):
+    """A traced co-access cluster becomes byte-adjacent in the rewritten
+    blob (manifest v2 records the layout source), and the cluster then
+    warms with ONE coalesced pread where the build-order blob needs
+    several — the rq2 locality claim, pinned as a unit test."""
+    units = _units(seed=5)
+    keys = [k for k, _ in units]
+    art, plan = _artifact(tmp_path, units)
+
+    trace = AccessTrace()
+    cluster = [keys[0], keys[3], keys[6]]  # scattered in build order
+    trace.request_pairs = {
+        (cluster[0], cluster[1]): 9, (cluster[1], cluster[2]): 8}
+    trace.batches = 1
+
+    out = str(tmp_path / "artifact-compact")
+    meta = retier_artifact(art, plan, out_dir=out, trace=trace)
+    assert meta["compaction"]["layout"]["source"] == "coaccess"
+    assert meta["compaction"]["recompressed"] == 0
+
+    src = OptionalStore(os.path.join(art, "optional.blob"))
+    dst = OptionalStore(os.path.join(out, "optional.blob"))
+    try:
+        assert dst.layout["source"] == "coaccess"
+        assert src.layout["source"] == "build-order"
+        # the cluster is contiguous in the new blob: offsets chain exactly
+        for a, b in zip(cluster, cluster[1:]):
+            ea, eb = dst.entries[a], dst.entries[b]
+            assert eb.offset == ea.offset + ea.csize
+        # ...so it warms with one pread, vs several from the source layout
+        rs_src, rs_dst = ReadStats(), ReadStats()
+        got_src = src.read_raw_many(cluster, gap_threshold=0, stats=rs_src)
+        got_dst = dst.read_raw_many(cluster, gap_threshold=COALESCE_GAP,
+                                    stats=rs_dst)
+        assert got_src == got_dst  # raw copy: byte-identical frames
+        assert rs_dst.preads == 1 < rs_src.preads == len(cluster)
+    finally:
+        src.close()
+        dst.close()
+
+
+# ---------------------------------------------------------------------------
+# slow tier: codec round-trip property over dtype x shape x level
+# ---------------------------------------------------------------------------
+
+# the fault-injection + layout tests above run everywhere; only the
+# property search needs hypothesis and skips individually without it
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:  # pragma: no cover - hypothesis-less environments
+    class _NoStrategies:  # chainable no-op: st.lists(...).map(...) etc.
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _NoStrategies()
+
+    class HealthCheck:
+        too_slow = None
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+
+def _arrays():
+    import ml_dtypes
+
+    dtypes = st.sampled_from(
+        [np.float32, np.float16, np.int16, np.uint8, np.int64,
+         ml_dtypes.bfloat16])
+    shapes = st.lists(st.integers(1, 8), min_size=1, max_size=3).map(tuple)
+
+    def build(dt, shape):
+        rng = np.random.default_rng(abs(hash((str(dt), shape))) % (2**32))
+        if np.dtype(dt).kind in "iu":
+            info = np.iinfo(dt)
+            return rng.integers(info.min, info.max, size=shape,
+                                dtype=dt, endpoint=True)
+        return rng.standard_normal(shape).astype(dt)
+
+    return st.builds(build, dtypes, shapes)
+
+
+@pytest.mark.slow
+@settings(max_examples=120, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(arrs=st.lists(_arrays(), min_size=1, max_size=4),
+       level=st.integers(min_value=0, max_value=9))
+def test_store_round_trip_property(tmp_path_factory, arrs, level):
+    """Any dtype x shape x level round-trips bit-exactly through the
+    store — including bf16 byte-planing (level>0 on 2-byte dtypes) and
+    level=0 raw frames — via fetch, fetch_many, AND a raw-copy compaction
+    hop into a second store."""
+    tmp = tmp_path_factory.mktemp("prop")
+    units = [(f"u{i}", a) for i, a in enumerate(arrs)]
+    path = str(tmp / "p.blob")
+    write_store(path, units, level=level)
+    store = OptionalStore(path)
+    copy_path = str(tmp / "copy.blob")
+    try:
+        expect_codec = "raw" if level == 0 else None
+        for k, a in units:
+            got = store.fetch(k)
+            assert got.dtype == a.dtype and got.shape == a.shape
+            np.testing.assert_array_equal(
+                got.view(np.uint8), a.view(np.uint8))
+            if expect_codec:
+                assert store.entries[k].codec == expect_codec
+            elif a.dtype.itemsize == 2:
+                assert store.entries[k].codec == "zlib-bp"
+        many = store.fetch_many([k for k, _ in units])
+        for k, a in units:
+            np.testing.assert_array_equal(
+                many[k].view(np.uint8), a.view(np.uint8))
+        # raw-copy hop: frames survive a compaction verbatim
+        with OptionalStoreWriter(copy_path) as w:
+            for k, _ in units:
+                w.add_raw(k, store.read_raw(k), store.entries[k])
+        copy = OptionalStore(copy_path)
+        try:
+            for k, a in units:
+                assert copy.read_raw(k) == store.read_raw(k)
+                np.testing.assert_array_equal(
+                    copy.fetch(k).view(np.uint8), a.view(np.uint8))
+        finally:
+            copy.close()
+    finally:
+        store.close()
+        for p in (path, path + ".manifest.json",
+                  copy_path, copy_path + ".manifest.json"):
+            if os.path.exists(p):
+                os.remove(p)
